@@ -1,0 +1,85 @@
+"""Kernel microbenchmarks: grouped block matmul + flash attention.
+
+On this CPU container the Pallas kernels run in interpret mode (orders of
+magnitude slower than compiled Mosaic), so the *timed* numbers compare the
+jnp reference against XLA:CPU; the kernel path is timed at tiny sizes purely
+as a smoke signal.  The derived column reports achieved GFLOP/s.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BSMatrix, multiply
+from repro.core.spgemm import spgemm_symbolic
+from repro.kernels.block_spmm import block_spmm_kernel_call
+from repro.kernels.ref import block_spmm_ref
+
+
+def _time(fn, reps=5):
+    fn()  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def bench_block_spmm(bs: int = 128, T: int = 64, nout: int = 16) -> list[dict]:
+    rng = np.random.default_rng(0)
+    na = nb = 32
+    A = jnp.asarray(rng.standard_normal((na, bs, bs)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((nb, bs, bs)), jnp.float32)
+    a = jnp.asarray(rng.integers(0, na, T), jnp.int32)
+    b = jnp.asarray(rng.integers(0, nb, T), jnp.int32)
+    c = jnp.asarray(np.sort(rng.integers(0, nout, T)), jnp.int32)
+    flops = 2.0 * T * bs**3
+
+    t_ref = _time(lambda: block_spmm_ref(A, B, a, b, c, nout).block_until_ready())
+    rows = [
+        dict(name=f"block_spmm_ref_bs{bs}", us=t_ref * 1e6, gflops=flops / t_ref / 1e9)
+    ]
+    t_k = _time(
+        lambda: block_spmm_kernel_call(
+            A, B, a, b, c, num_out=nout, interpret=True
+        ).block_until_ready(),
+        reps=2,
+    )
+    rows.append(
+        dict(
+            name=f"block_spmm_pallas_interpret_bs{bs}",
+            us=t_k * 1e6,
+            gflops=flops / t_k / 1e9,
+        )
+    )
+    return rows
+
+
+def bench_spgemm_end_to_end(n: int = 4096, bs: int = 128) -> list[dict]:
+    """Library-level multiply incl. symbolic phase (banded matrix)."""
+    rng = np.random.default_rng(1)
+    nb = n // bs
+    i = np.arange(nb)
+    coords = []
+    for d in (-1, 0, 1):
+        j = i + d
+        m = (j >= 0) & (j < nb)
+        coords.append(np.stack([i[m], j[m]], 1))
+    coords = np.concatenate(coords)
+    from repro.core.quadtree import morton_sort
+
+    coords = coords[morton_sort(coords)]
+    data = jnp.asarray(rng.standard_normal((len(coords), bs, bs)), jnp.float32)
+    a = BSMatrix(shape=(n, n), bs=bs, coords=coords, data=data)
+
+    t_sym = _time(lambda: spgemm_symbolic(a.coords, a.coords), reps=10)
+    t_full = _time(lambda: multiply(a, a).data.block_until_ready(), reps=3)
+    tasks = spgemm_symbolic(a.coords, a.coords)
+    flops = 2.0 * tasks.num_tasks * bs**3
+    return [
+        dict(name=f"spgemm_symbolic_n{n}", us=t_sym * 1e6, gflops=0.0),
+        dict(name=f"spgemm_full_n{n}", us=t_full * 1e6, gflops=flops / t_full / 1e9),
+    ]

@@ -1,0 +1,81 @@
+"""Roofline table emitter: reads launch/dryrun JSONs -> EXPERIMENTS.md rows."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HW = dict(peak_flops=197e12, hbm_bw=819e9, link_bw=50e9)
+
+
+def load(dirname: str = "results/dryrun") -> list[dict]:
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(recs: list[dict], mesh: str = "16x16") -> str:
+    head = (
+        "| arch | shape | compute s | memory s | collective s | bottleneck | "
+        "MODEL/HLO flops | roofline frac |\n|---|---|---|---|---|---|---|---|"
+    )
+    lines = [head]
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | skipped: {r['why']} | — | — |"
+            )
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | |")
+            continue
+        lines.append(
+            "| {arch} | {shape} | {c:.3e} | {m:.3e} | {k:.3e} | {b} | {u:.2f} | {f:.3f} |".format(
+                arch=r["arch"],
+                shape=r["shape"],
+                c=r["compute_term_s"],
+                m=r["memory_term_s"],
+                k=r["collective_term_s"],
+                b=r["bottleneck"],
+                u=r["useful_flops_ratio"],
+                f=r["roofline_fraction"],
+            )
+        )
+    return "\n".join(lines)
+
+
+def summary(recs: list[dict]) -> dict:
+    ok = [r for r in recs if r["status"] == "ok"]
+    by_cell = {}
+    for r in ok:
+        by_cell[(r["arch"], r["shape"], r["mesh"])] = r
+    single = [r for r in ok if r["mesh"] == "16x16"]
+    worst = sorted(single, key=lambda r: r["roofline_fraction"])[:5]
+    coll = sorted(
+        single, key=lambda r: -r["collective_term_s"] / max(r["compute_term_s"], 1e-12)
+    )[:5]
+    return {
+        "cells_ok": len(ok),
+        "cells_skipped": len([r for r in recs if r["status"] == "skipped"]),
+        "cells_error": len([r for r in recs if r["status"] == "error"]),
+        "worst_fraction": [(r["arch"], r["shape"], r["roofline_fraction"]) for r in worst],
+        "most_collective_bound": [
+            (
+                r["arch"],
+                r["shape"],
+                r["collective_term_s"] / max(r["compute_term_s"], 1e-12),
+            )
+            for r in coll
+        ],
+    }
+
+
+if __name__ == "__main__":
+    recs = load()
+    print(table(recs))
+    print(json.dumps(summary(recs), indent=1))

@@ -1,0 +1,118 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = table-specific:
+Tflop for Table 1, MB for Fig 1c, GFLOP/s for kernels).
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def bench_table1():
+    """Paper Table 1: weak-scaling flop counts (validated vs paper values)."""
+    from . import weak_scaling as ws
+
+    rows = ws.table1()
+    out = []
+    for r in rows:
+        rel = abs(r["banded_tflop"] - r["paper_banded"]) / r["paper_banded"]
+        out.append(
+            (
+                f"table1_banded_n{r['n']}",
+                0.0,
+                f"tflop={r['banded_tflop']:.3f} paper={r['paper_banded']} rel_err={rel:.3f}",
+            )
+        )
+        out.append(
+            (
+                f"table1_growing_n{r['n']}",
+                0.0,
+                f"tflop={r['growing_tflop']:.3f} paper={r['paper_blocked']}",
+            )
+        )
+        out.append(
+            (
+                f"table1_random_n{r['n']}",
+                0.0,
+                f"tflop={r['random_tflop']:.3f} paper={r['paper_blocked']}",
+            )
+        )
+    return out
+
+
+def bench_fig1c(full: bool = False):
+    """Paper Fig 1c: data received per worker (locality vs allgather)."""
+    from . import weak_scaling as ws
+
+    rows = ws.fig1c(max_idx=7 if full else 4)
+    return [
+        (
+            f"fig1c_{r['family']}_p{r['workers']}",
+            0.0,
+            f"locality_mb={r['locality_recv_mb']:.1f} outer_mb={r.get('outer_recv_mb', -1):.1f} "
+            f"allgather_mb={r['allgather_recv_mb']:.1f} balance={r['balance']:.2f}",
+        )
+        for r in rows
+    ]
+
+
+def bench_fig1a():
+    """Paper Fig 1a (reduced scale): measured multiply wall time on CPU."""
+    from . import weak_scaling as ws
+
+    rows = ws.measured_weak_scaling()
+    return [
+        (f"fig1a_banded_n{r['n']}", r["wall_s"] * 1e6, f"gflops={r['gflops']:.2f}")
+        for r in rows
+    ]
+
+
+def bench_kernels():
+    """Leaf-level BLAS analogue: grouped block matmul kernel."""
+    from . import kernel_micro as km
+
+    out = []
+    for r in km.bench_block_spmm(bs=128, T=32, nout=8):
+        out.append((r["name"], r["us"], f"gflops={r['gflops']:.2f}"))
+    for r in km.bench_spgemm_end_to_end():
+        out.append((r["name"], r["us"], f"gflops={r['gflops']:.2f}"))
+    return out
+
+
+def bench_roofline():
+    """Dry-run roofline summary (requires results/dryrun JSONs)."""
+    from . import roofline as rl
+
+    recs = rl.load()
+    if not recs:
+        return [("roofline", 0.0, "no dryrun results yet — run launch/dryrun first")]
+    s = rl.summary(recs)
+    out = [
+        (
+            "roofline_cells",
+            0.0,
+            f"ok={s['cells_ok']} skipped={s['cells_skipped']} error={s['cells_error']}",
+        )
+    ]
+    for arch, shape, frac in s["worst_fraction"]:
+        out.append((f"roofline_worst_{arch}_{shape}", 0.0, f"fraction={frac:.3f}"))
+    return out
+
+
+def main() -> None:
+    benches = [bench_table1, bench_fig1c, bench_fig1a, bench_kernels, bench_roofline]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for b in benches:
+        if only and only not in b.__name__:
+            continue
+        try:
+            for name, us, derived in b():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception as e:  # keep the harness running
+            print(f"{b.__name__},0.0,ERROR {type(e).__name__}: {e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Distributed sparse matrix-matrix multiply — the paper's headline demo.
+
+Runs the weak-scaling protocol from the paper (banded / growing block /
+random blocks) at reduced scale on 8 simulated workers, executing the real
+shard_map program, and reports the Fig-1 quantities: load balance and data
+received per worker, locality-aware schedule vs allgather baseline.
+
+Run:  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python examples/distributed_spgemm.py
+"""
+
+import os
+import sys
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import BSMatrix, multiply  # noqa: E402
+from repro.core.distributed import (  # noqa: E402
+    dist_spgemm,
+    make_worker_mesh,
+    unshard_result,
+)
+from repro.core.schedule import make_spgemm_plan, plan_stats  # noqa: E402
+
+P = 8
+N, BS, HW = 1024, 64, 96
+rng = np.random.default_rng(0)
+
+
+def banded(n):
+    a = np.zeros((n, n), dtype=np.float32)
+    for i in range(n):
+        lo, hi = max(0, i - HW), min(n, i + HW + 1)
+        a[i, lo:hi] = rng.standard_normal(hi - lo)
+    return a
+
+
+def growing(n):
+    a = banded(n)
+    s = n // 4
+    a[:s, :s] = rng.standard_normal((s, s))
+    return a
+
+
+def random_blocks(n):
+    a = banded(n)
+    s = n // 16
+    for start in rng.choice(n // s - 1, size=4, replace=False) * s:
+        a[start : start + s, start : start + s] = rng.standard_normal((s, s))
+    return a
+
+
+def main():
+    assert jax.device_count() == P, f"need {P} devices, got {jax.device_count()}"
+    mesh = make_worker_mesh(P)
+    print(f"workers: {P} | matrix {N}x{N}, leaf {BS}, band halfwidth {HW}\n")
+    print(f"{'family':<14} {'schedule':<22} {'err':>9} {'balance':>8} {'recv/worker':>12}")
+    for family, builder in [
+        ("banded", banded),
+        ("growing_block", growing),
+        ("random_blocks", random_blocks),
+    ]:
+        a = BSMatrix.from_dense(builder(N), BS)
+        ref = multiply(a, a).to_dense()
+        for placement, exchange in [("morton", "p2p"), ("random", "p2p"), ("morton", "allgather")]:
+            plan = make_spgemm_plan(
+                a.coords, a.coords, P, BS, placement=placement, exchange=exchange
+            )
+            out = dist_spgemm(plan, a.data, a.data, mesh, impl="ref")
+            c = unshard_result(plan, out, a.shape, BS)
+            err = np.abs(c.to_dense() - ref).max()
+            st = plan_stats(plan)
+            print(
+                f"{family:<14} {placement + '/' + exchange:<22} {err:9.2e} "
+                f"{st['task_balance']:8.2f} {st['recv_bytes_mean']/2**20:10.2f} MiB"
+            )
+        print()
+    print("locality-aware schedule: same flops, balanced, least data movement —")
+    print("the paper's Fig 1 claims, executed as a real SPMD program.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from .manager import (
+    CheckpointManager,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint", "latest_step"]

@@ -1,0 +1,141 @@
+"""Fault-tolerant checkpointing: atomic commits, async save, elastic restore.
+
+Layout per step::
+
+    <dir>/step_000123/arrays.npz      flat {path: array} of the state pytree
+    <dir>/step_000123/MANIFEST.json   committed LAST -> crash-safe marker
+
+A checkpoint exists iff its manifest exists; partially written directories
+(crash mid-save) are ignored by restore and cleaned by the manager.  Arrays
+are stored *unsharded* with the state's logical-axes metadata, so restore can
+re-shard onto any mesh shape (elastic scaling: see runtime/elastic.py).  On a
+real multi-host pod each host would write its shard of the FSDP axis; the
+single-process layout here keeps the same manifest protocol.
+"""
+
+from __future__ import annotations
+
+import concurrent.futures
+import json
+import os
+import shutil
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step", "CheckpointManager"]
+
+_MANIFEST = "MANIFEST.json"
+
+
+def _flatten(state):
+    flat = jax.tree_util.tree_flatten_with_path(state)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _step_dir(directory: str, step: int) -> str:
+    return os.path.join(directory, f"step_{step:08d}")
+
+
+def save_checkpoint(directory: str, step: int, state, *, extra: dict | None = None) -> str:
+    """Atomic save: arrays first, manifest last (commit point)."""
+    os.makedirs(directory, exist_ok=True)
+    final = _step_dir(directory, step)
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    arrays = _flatten(state)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "keys": sorted(arrays.keys()),
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    """Largest step with a committed manifest; ignores torn writes."""
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, name, _MANIFEST)):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, state_like, step: int | None = None):
+    """Restore into the structure of ``state_like`` (shapes validated).
+
+    ``state_like`` may hold arrays or ShapeDtypeStructs; returns (state, step).
+    """
+    step = latest_step(directory) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no committed checkpoint under {directory}")
+    with np.load(os.path.join(_step_dir(directory, step), "arrays.npz")) as z:
+        data = {k: z[k] for k in z.files}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state_like)
+    leaves = []
+    for path, like in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = data[key]
+        assert tuple(arr.shape) == tuple(like.shape), (key, arr.shape, like.shape)
+        leaves.append(arr.astype(like.dtype))
+    state = jax.tree_util.tree_unflatten(treedef, leaves)
+    return state, step
+
+
+class CheckpointManager:
+    """Keeps the last ``keep`` checkpoints; optional async (background) save."""
+
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self._pool = (
+            concurrent.futures.ThreadPoolExecutor(max_workers=1) if async_save else None
+        )
+        self._pending: concurrent.futures.Future | None = None
+
+    def save(self, step: int, state, extra: dict | None = None):
+        state = jax.tree.map(np.asarray, state)  # snapshot off-device
+
+        def work():
+            save_checkpoint(self.directory, step, state, extra=extra)
+            self._gc()
+
+        if self._pool is not None:
+            self.wait()
+            self._pending = self._pool.submit(work)
+        else:
+            work()
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    def _gc(self):
+        if not os.path.isdir(self.directory):
+            return
+        steps = sorted(
+            int(n.split("_")[1])
+            for n in os.listdir(self.directory)
+            if n.startswith("step_") and not n.endswith(".tmp")
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(_step_dir(self.directory, s), ignore_errors=True)
+
+    def restore_latest(self, state_like):
+        return restore_checkpoint(self.directory, state_like)

@@ -1,0 +1,57 @@
+"""Core: the paper's contribution — quadtree block-sparse matrix algebra.
+
+Chunks = BSMatrix (host Morton structure + device block stacks);
+Tasks   = host symbolic phases + device grouped-GEMM numeric phases;
+the CHT runtime's dynamic scheduling maps to the locality-aware static
+schedules in :mod:`repro.core.schedule` / :mod:`repro.core.distributed`.
+"""
+
+from .add import add, add_scaled_identity, identity
+from .inverse import (
+    factorization_residual,
+    inv_chol,
+    localized_inverse_factorization,
+    submatrix,
+)
+from .leaf import LeafSpec, exact_spgemm_flops, inner_masks, nnz_elements
+from .matrix import BSMatrix
+from .purify import sp2_purify
+from .spgemm import (
+    Tasks,
+    multiply,
+    spamm,
+    spgemm_numeric,
+    spgemm_symbolic,
+    spgemm_symbolic_recursive,
+    symm_square,
+    syrk,
+    task_flops,
+)
+from .truncate import truncate, truncate_elementwise
+
+__all__ = [
+    "BSMatrix",
+    "Tasks",
+    "LeafSpec",
+    "add",
+    "add_scaled_identity",
+    "identity",
+    "multiply",
+    "syrk",
+    "symm_square",
+    "spamm",
+    "spgemm_symbolic",
+    "spgemm_symbolic_recursive",
+    "spgemm_numeric",
+    "task_flops",
+    "exact_spgemm_flops",
+    "inner_masks",
+    "nnz_elements",
+    "truncate",
+    "truncate_elementwise",
+    "inv_chol",
+    "localized_inverse_factorization",
+    "factorization_residual",
+    "submatrix",
+    "sp2_purify",
+]

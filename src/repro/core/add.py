@@ -1,0 +1,44 @@
+"""Addition task types: C = alpha*A + beta*B, and A + alpha*I."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .matrix import BSMatrix
+
+__all__ = ["add", "add_scaled_identity", "identity"]
+
+
+def add(a: BSMatrix, b: BSMatrix, alpha=1.0, beta=1.0) -> BSMatrix:
+    """C = alpha*A + beta*B.  Structure union; overlapping blocks summed."""
+    assert a.shape == b.shape and a.bs == b.bs, (a.shape, b.shape, a.bs, b.bs)
+    if a.nnzb == 0 and b.nnzb == 0:
+        return BSMatrix.zeros(a.shape, a.bs, a.dtype)
+    coords = np.concatenate([a.coords, b.coords])
+    data = jnp.concatenate(
+        [
+            a.data.astype(jnp.float32) * jnp.float32(alpha),
+            b.data.astype(jnp.float32) * jnp.float32(beta),
+        ]
+    ).astype(jnp.result_type(a.dtype, b.dtype))
+    return BSMatrix.from_blocks(a.shape, a.bs, coords, data)
+
+
+def identity(n: int, bs: int, dtype=jnp.float32) -> BSMatrix:
+    """Block-sparse identity, partial trailing block handled."""
+    nb = -(-n // bs)
+    coords = np.stack([np.arange(nb), np.arange(nb)], axis=1).astype(np.int64)
+    eye = jnp.eye(bs, dtype=dtype)
+    data = jnp.tile(eye[None], (nb, 1, 1))
+    tail = n - (nb - 1) * bs
+    if tail < bs:
+        mask = (jnp.arange(bs) < tail).astype(dtype)
+        data = data.at[-1].set(jnp.diag(mask))
+    return BSMatrix.from_blocks((n, n), bs, coords, data)
+
+
+def add_scaled_identity(a: BSMatrix, alpha) -> BSMatrix:
+    """A + alpha*I (paper: addition of a matrix with a scaled identity)."""
+    assert a.shape[0] == a.shape[1]
+    return add(a, identity(a.shape[0], a.bs, a.dtype), 1.0, alpha)

@@ -1,0 +1,70 @@
+"""Leaf matrix libraries (paper §2.1 ships three stand-alone leaf types).
+
+On TPU every leaf is materially a dense ``bs x bs`` VMEM tile (that is what
+the MXU consumes); the three paper leaf types survive as *structure policies*
+that control (a) pruning when building leaves and (b) exact flop/nnz
+accounting at sub-leaf granularity — which is how the paper's Table 1 Tflop
+numbers are computed (block-sparse leaves with 64x64 internal blocks).
+
+* ``dense``        — basic_matrix_lib: full leaf, no internal structure.
+* ``block_sparse`` — block_sparse_matrix_lib: uniform internal blocks, zero
+                     internal blocks neither stored nor counted.
+* ``hierarchical`` — hierarchical_block_sparse_lib: quadtree inside the leaf;
+                     for accounting identical to block_sparse with
+                     power-of-two internal blocks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .matrix import BSMatrix
+
+__all__ = ["LeafSpec", "inner_masks", "exact_spgemm_flops", "nnz_elements"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSpec:
+    kind: str = "block_sparse"  # dense | block_sparse | hierarchical
+    inner_bs: int = 64
+
+    def __post_init__(self):
+        assert self.kind in ("dense", "block_sparse", "hierarchical")
+
+
+def inner_masks(a: BSMatrix, spec: LeafSpec) -> np.ndarray:
+    """Bool [nnzb, bs/ibs, bs/ibs]: which internal blocks are nonzero."""
+    ibs = a.bs if spec.kind == "dense" else spec.inner_bs
+    assert a.bs % ibs == 0
+    ni = a.bs // ibs
+    data = np.asarray(a.data)
+    blocks = data.reshape(a.nnzb, ni, ibs, ni, ibs)
+    return np.any(blocks != 0, axis=(2, 4))
+
+
+def nnz_elements(a: BSMatrix, spec: LeafSpec) -> int:
+    """Stored elements under the leaf policy (zero internal blocks free)."""
+    ibs = a.bs if spec.kind == "dense" else spec.inner_bs
+    m = inner_masks(a, spec)
+    return int(m.sum()) * ibs * ibs
+
+
+def exact_spgemm_flops(
+    a: BSMatrix, b: BSMatrix, tasks, spec: LeafSpec
+) -> float:
+    """Exact flops of the task list under the leaf policy.
+
+    Counts 2*ibs^3 per internal (i,k)x(k,j) product with both internal blocks
+    nonzero — the convention behind the paper's Table 1 Tflop column.
+    """
+    ibs = a.bs if spec.kind == "dense" else spec.inner_bs
+    ma = inner_masks(a, spec).astype(np.int64)
+    mb = inner_masks(b, spec).astype(np.int64)
+    # triples per task = sum_ik ma[i,k] * (number of j with mb[k,j])
+    mb_rowsum = mb.sum(axis=2)  # [nnzb_b, ni]
+    triples = np.einsum(
+        "tik,tk->t", ma[tasks.a_idx], mb_rowsum[tasks.b_idx]
+    )
+    return float(triples.sum()) * 2.0 * ibs**3

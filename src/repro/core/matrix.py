@@ -1,0 +1,218 @@
+"""Block-sparse matrix with quadtree (Morton) structure.
+
+``BSMatrix`` is the Chunks-side object of the paper: the *structure* (which
+leaf blocks are nonzero) lives on the host as Morton-sorted block coordinates,
+the *values* live on device as one stacked array ``data[nnzb, bs, bs]``.
+All structure decisions (symbolic multiply, truncation selection, scheduling)
+are host-side and cheap; all flops run on device over the stacked blocks.
+
+Leaf representation is delegated to :mod:`repro.core.leaf` (the paper ships
+three leaf matrix libraries; see that module).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .quadtree import morton_encode, morton_sort
+
+__all__ = ["BSMatrix", "block_frobenius_norms"]
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@dataclasses.dataclass(frozen=True)
+class BSMatrix:
+    """Block-sparse matrix.
+
+    Attributes:
+      shape:  logical (rows, cols); may be any size, blocks pad with zeros.
+      bs:     leaf block size (uniform, square).
+      coords: host numpy int64 [nnzb, 2] block (row, col), Morton sorted.
+      data:   jnp [nnzb, bs, bs] leaf values.
+    """
+
+    shape: tuple[int, int]
+    bs: int
+    coords: np.ndarray
+    data: jax.Array
+
+    # -- invariants ---------------------------------------------------------
+    def __post_init__(self):
+        assert self.coords.ndim == 2 and self.coords.shape[1] == 2
+        assert self.data.ndim == 3 and self.data.shape[0] == self.coords.shape[0]
+        assert self.data.shape[1] == self.bs and self.data.shape[2] == self.bs
+
+    @property
+    def nnzb(self) -> int:
+        return int(self.coords.shape[0])
+
+    @property
+    def nblocks(self) -> tuple[int, int]:
+        return (_ceil_div(self.shape[0], self.bs), _ceil_div(self.shape[1], self.bs))
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    def codes(self) -> np.ndarray:
+        return morton_encode(self.coords[:, 0], self.coords[:, 1])
+
+    # -- constructors -------------------------------------------------------
+    @staticmethod
+    def zeros(shape: tuple[int, int], bs: int, dtype=jnp.float32) -> "BSMatrix":
+        return BSMatrix(
+            shape=tuple(shape),
+            bs=bs,
+            coords=np.zeros((0, 2), dtype=np.int64),
+            data=jnp.zeros((0, bs, bs), dtype=dtype),
+        )
+
+    @staticmethod
+    def from_dense(a, bs: int, prune_tol: float = 0.0) -> "BSMatrix":
+        """Build from a dense array, pruning blocks with Frobenius norm <= tol."""
+        a = np.asarray(a)
+        m, n = a.shape
+        nbr, nbc = _ceil_div(m, bs), _ceil_div(n, bs)
+        pad = np.zeros((nbr * bs, nbc * bs), dtype=a.dtype)
+        pad[:m, :n] = a
+        blocks = pad.reshape(nbr, bs, nbc, bs).transpose(0, 2, 1, 3)
+        norms = np.sqrt((blocks.astype(np.float64) ** 2).sum(axis=(2, 3)))
+        rows, cols = np.nonzero(norms > prune_tol)
+        coords = np.stack([rows, cols], axis=1).astype(np.int64)
+        order = morton_sort(coords)
+        coords = coords[order]
+        data = jnp.asarray(blocks[coords[:, 0], coords[:, 1]])
+        return BSMatrix(shape=(m, n), bs=bs, coords=coords, data=data)
+
+    @staticmethod
+    def from_blocks(
+        shape: tuple[int, int], bs: int, coords: np.ndarray, data
+    ) -> "BSMatrix":
+        """Build from explicit block coords (deduplicated, Morton-sorted here)."""
+        coords = np.asarray(coords, dtype=np.int64).reshape(-1, 2)
+        data = jnp.asarray(data)
+        if coords.shape[0] == 0:
+            return BSMatrix.zeros(shape, bs, data.dtype)
+        codes = morton_encode(coords[:, 0], coords[:, 1])
+        order = np.argsort(codes, kind="stable")
+        codes_s = codes[order]
+        uniq, first = np.unique(codes_s, return_index=True)
+        if uniq.size != codes_s.size:  # sum duplicates
+            seg = np.zeros(codes_s.size, dtype=np.int64)
+            seg[first] = 1
+            seg = np.cumsum(seg) - 1
+            data = jax.ops.segment_sum(
+                data[order], jnp.asarray(seg), num_segments=int(uniq.size)
+            )
+            coords = coords[order][first]
+        else:
+            coords = coords[order]
+            data = data[order]
+        return BSMatrix(shape=tuple(shape), bs=bs, coords=coords, data=data)
+
+    @staticmethod
+    def from_coo(
+        shape: tuple[int, int],
+        bs: int,
+        rows: Sequence[int],
+        cols: Sequence[int],
+        vals,
+        dtype=jnp.float32,
+    ) -> "BSMatrix":
+        """Paper functionality: assignment from (row, col, value) vectors."""
+        rows = np.asarray(rows, dtype=np.int64)
+        cols = np.asarray(cols, dtype=np.int64)
+        vals = np.asarray(vals)
+        br, bc = rows // bs, cols // bs
+        codes = morton_encode(br, bc)
+        uniq, inv = np.unique(codes, return_inverse=True)
+        nblk = int(uniq.size)
+        if nblk == 0:
+            return BSMatrix.zeros(shape, bs, dtype)
+        # scatter element values into stacked blocks (host, then ship once)
+        blocks = np.zeros((nblk, bs, bs), dtype=np.dtype(dtype))
+        np.add.at(blocks, (inv, rows % bs, cols % bs), vals)
+        order = np.argsort(uniq, kind="stable")  # already sorted by unique, but be safe
+        from .quadtree import morton_decode
+
+        r, c = morton_decode(uniq[order])
+        coords = np.stack([r, c], axis=1)
+        return BSMatrix(shape=tuple(shape), bs=bs, coords=coords, data=jnp.asarray(blocks[order]))
+
+    # -- extraction ---------------------------------------------------------
+    def to_dense(self) -> np.ndarray:
+        m, n = self.shape
+        nbr, nbc = self.nblocks
+        out = np.zeros((nbr * self.bs, nbc * self.bs), dtype=np.asarray(self.data).dtype)
+        data = np.asarray(self.data)
+        for t in range(self.nnzb):
+            i, j = self.coords[t]
+            out[i * self.bs : (i + 1) * self.bs, j * self.bs : (j + 1) * self.bs] = data[t]
+        return out[:m, :n]
+
+    def get_elements(self, rows: Sequence[int], cols: Sequence[int]) -> np.ndarray:
+        """Paper functionality: extract elements by (row, col) index vectors."""
+        rows = np.asarray(rows, dtype=np.int64)
+        cols = np.asarray(cols, dtype=np.int64)
+        codes = morton_encode(rows // self.bs, cols // self.bs)
+        my = self.codes()
+        pos = np.searchsorted(my, codes)
+        out = np.zeros(rows.shape, dtype=np.asarray(self.data).dtype)
+        hit = (pos < my.size) & (my[np.minimum(pos, my.size - 1)] == codes)
+        if hit.any():
+            data = np.asarray(self.data)
+            out[hit] = data[pos[hit], rows[hit] % self.bs, cols[hit] % self.bs]
+        return out
+
+    # -- simple ops ---------------------------------------------------------
+    def scale(self, alpha) -> "BSMatrix":
+        return dataclasses.replace(self, data=self.data * jnp.asarray(alpha, self.dtype))
+
+    def transpose(self) -> "BSMatrix":
+        coords = self.coords[:, ::-1]
+        order = morton_sort(coords)
+        return BSMatrix(
+            shape=(self.shape[1], self.shape[0]),
+            bs=self.bs,
+            coords=coords[order],
+            data=jnp.transpose(self.data, (0, 2, 1))[jnp.asarray(order)]
+            if self.nnzb
+            else self.data,
+        )
+
+    def block_norms(self) -> np.ndarray:
+        """Frobenius norm of each stored block (host numpy)."""
+        if self.nnzb == 0:
+            return np.zeros((0,), dtype=np.float64)
+        return np.asarray(block_frobenius_norms(self.data))
+
+    def frobenius_norm(self) -> float:
+        n = self.block_norms()
+        return float(np.sqrt((n.astype(np.float64) ** 2).sum()))
+
+    def trace(self) -> float:
+        diag = self.coords[:, 0] == self.coords[:, 1]
+        if not diag.any():
+            return 0.0
+        d = self.data[jnp.asarray(np.nonzero(diag)[0])]
+        return float(jnp.sum(jnp.trace(d, axis1=1, axis2=2)))
+
+    def density(self) -> float:
+        nbr, nbc = self.nblocks
+        return self.nnzb / float(nbr * nbc)
+
+    def astype(self, dtype) -> "BSMatrix":
+        return dataclasses.replace(self, data=self.data.astype(dtype))
+
+
+@jax.jit
+def block_frobenius_norms(data: jax.Array) -> jax.Array:
+    return jnp.sqrt(jnp.sum(jnp.square(data.astype(jnp.float32)), axis=(1, 2)))

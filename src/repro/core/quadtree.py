@@ -1,0 +1,111 @@
+"""Sparse quadtree structure utilities (host side, numpy).
+
+The paper represents a matrix as a sparse quaternary tree: a node is either
+identically zero, a leaf matrix, or four recursively represented quadrants.
+On TPU we keep the *data* in a flat device array of fixed-size leaf blocks and
+the *structure* as host-side block coordinates.  The quadtree is implicit in
+the Morton (Z-order) codes of the block coordinates: every quadtree node at
+level L corresponds to a 2L-bit Morton prefix, and zero branches are exactly
+the absent prefixes.  Morton order is the canonical block ordering throughout
+the library — it is what gives the scheduler its locality (children of a
+quadtree node are contiguous in Morton order, mirroring the paper's
+"tasks operating on the same chunk execute on the same worker").
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "morton_encode",
+    "morton_decode",
+    "morton_sort",
+    "quadtree_node_counts",
+    "quadtree_depth",
+    "expand_prefix",
+]
+
+_B = [
+    0x5555555555555555,
+    0x3333333333333333,
+    0x0F0F0F0F0F0F0F0F,
+    0x00FF00FF00FF00FF,
+    0x0000FFFF0000FFFF,
+]
+
+
+def _part1by1(x: np.ndarray) -> np.ndarray:
+    """Spread the low 32 bits of x so there is a zero bit between each."""
+    x = x.astype(np.uint64)
+    x = (x | (x << np.uint64(16))) & np.uint64(_B[4])
+    x = (x | (x << np.uint64(8))) & np.uint64(_B[3])
+    x = (x | (x << np.uint64(4))) & np.uint64(_B[2])
+    x = (x | (x << np.uint64(2))) & np.uint64(_B[1])
+    x = (x | (x << np.uint64(1))) & np.uint64(_B[0])
+    return x
+
+
+def _compact1by1(x: np.ndarray) -> np.ndarray:
+    x = x.astype(np.uint64) & np.uint64(_B[0])
+    x = (x | (x >> np.uint64(1))) & np.uint64(_B[1])
+    x = (x | (x >> np.uint64(2))) & np.uint64(_B[2])
+    x = (x | (x >> np.uint64(4))) & np.uint64(_B[3])
+    x = (x | (x >> np.uint64(8))) & np.uint64(_B[4])
+    x = (x | (x >> np.uint64(16))) & np.uint64(0x00000000FFFFFFFF)
+    return x
+
+
+def morton_encode(row: np.ndarray, col: np.ndarray) -> np.ndarray:
+    """Interleave bits of (row, col) -> Z-order code.  row in even bits."""
+    row = np.asarray(row)
+    col = np.asarray(col)
+    return (_part1by1(row) << np.uint64(1)) | _part1by1(col)
+
+
+def morton_decode(code: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    code = np.asarray(code, dtype=np.uint64)
+    row = _compact1by1(code >> np.uint64(1))
+    col = _compact1by1(code)
+    return row.astype(np.int64), col.astype(np.int64)
+
+
+def morton_sort(coords: np.ndarray) -> np.ndarray:
+    """Return the permutation that sorts (row, col) block coords in Z-order."""
+    coords = np.asarray(coords)
+    if coords.size == 0:
+        return np.zeros((0,), dtype=np.int64)
+    codes = morton_encode(coords[:, 0], coords[:, 1])
+    return np.argsort(codes, kind="stable")
+
+
+def quadtree_depth(nblocks_row: int, nblocks_col: int) -> int:
+    """Number of quadtree levels above the leaves for a grid of blocks."""
+    n = max(int(nblocks_row), int(nblocks_col), 1)
+    return int(np.ceil(np.log2(n))) if n > 1 else 0
+
+
+def quadtree_node_counts(coords: np.ndarray, depth: int | None = None) -> list[int]:
+    """Number of *nonzero* quadtree nodes per level, root (level 0) to leaves.
+
+    Level k nodes are the distinct 2k-bit Morton prefixes present in the
+    structure.  This is the paper's "nonzero branches": everything absent is a
+    nil chunk id and costs nothing.
+    """
+    coords = np.asarray(coords)
+    if coords.size == 0:
+        return [0]
+    codes = morton_encode(coords[:, 0], coords[:, 1])
+    if depth is None:
+        depth = quadtree_depth(int(coords[:, 0].max()) + 1, int(coords[:, 1].max()) + 1)
+    counts = []
+    for level in range(depth + 1):
+        shift = np.uint64(2 * (depth - level))
+        counts.append(int(np.unique(codes >> shift).size))
+    return counts
+
+
+def expand_prefix(prefix: int, level: int, depth: int) -> tuple[int, int, int, int]:
+    """Block-coordinate bounding box (r0, r1, c0, c1) of a Morton prefix node."""
+    side = 1 << (depth - level)
+    r, c = morton_decode(np.asarray([prefix << (2 * (depth - level))], dtype=np.uint64))
+    return int(r[0]), int(r[0]) + side, int(c[0]), int(c[0]) + side

@@ -1,0 +1,362 @@
+"""Locality-aware static scheduling — the CHT runtime analogue on TPU.
+
+CHT-MPI maps chunks and tasks to workers dynamically (decentralized data,
+breadth-first work stealing).  An XLA SPMD program cannot migrate work
+mid-step, so the equivalent decisions are made *here*, on the host, per
+matrix structure:
+
+* **Data placement** (= chunk placement): Morton-order contiguous range
+  partition of the block stacks.  Children of a quadtree node are contiguous
+  in Morton order, so this is precisely "blocks of the same subtree live on
+  the same worker" — the locality CHT gets from hierarchical chunk identifiers.
+* **Task placement** (= task scheduling): owner-of-C computes; the C
+  partition is weighted by per-block task counts (flop cost model), which is
+  the static equivalent of work stealing achieving flop balance.
+* **Communication plan** (= chunk fetching/caching): for every task, its A/B
+  operand blocks are either local or fetched from a peer; the full exchange
+  is planned here as per-offset ``ppermute`` rounds, and only referenced
+  blocks ever move (CHT's chunk cache pulls exactly the chunks tasks touch).
+
+A ``random`` placement mode destroys locality on purpose — it reproduces the
+random-permutation baseline family the paper argues against [5, 6, 8], and
+the comparison (bytes moved per device) is the Fig 1c experiment.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .quadtree import morton_encode
+from .spgemm import Tasks, spgemm_symbolic
+
+__all__ = [
+    "partition_morton",
+    "partition_random",
+    "SpgemmPlan",
+    "make_spgemm_plan",
+    "plan_stats",
+]
+
+
+def partition_morton(
+    nblocks: int, nparts: int, weights: np.ndarray | None = None
+) -> np.ndarray:
+    """Owner id per block: contiguous Morton ranges with ~equal total weight.
+
+    Blocks are assumed Morton-sorted (BSMatrix canonical order).  Boundary
+    placement is greedy on the weight prefix sum; this bounds the per-part
+    overshoot by one block's weight, the static analogue of CHT's balance.
+    """
+    if nblocks == 0:
+        return np.zeros((0,), dtype=np.int32)
+    w = np.ones(nblocks) if weights is None else np.asarray(weights, dtype=np.float64)
+    w = np.maximum(w, 1e-12)
+    csum = np.cumsum(w)
+    total = csum[-1]
+    # targets at equal weight quantiles
+    targets = total * (np.arange(1, nparts) / nparts)
+    bounds = np.searchsorted(csum, targets, side="left")
+    owner = np.zeros(nblocks, dtype=np.int32)
+    prev = 0
+    for p, b in enumerate(np.concatenate([bounds, [nblocks]])):
+        owner[prev:b] = p
+        prev = b
+    return owner
+
+
+def partition_random(nblocks: int, nparts: int, seed: int = 0) -> np.ndarray:
+    """Random-permutation placement (the locality-destroying baseline)."""
+    rng = np.random.default_rng(seed)
+    owner = np.arange(nblocks, dtype=np.int32) % nparts
+    rng.shuffle(owner)
+    return owner
+
+
+def _pad_ragged(lists: list[np.ndarray], pad_val: int) -> np.ndarray:
+    cap = max((len(x) for x in lists), default=0)
+    cap = max(cap, 1)
+    out = np.full((len(lists), cap), pad_val, dtype=np.int32)
+    for i, x in enumerate(lists):
+        out[i, : len(x)] = x
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class SpgemmPlan:
+    """Host-side static schedule for one distributed multiply C = A @ B.
+
+    All arrays with leading dim P are sharded over devices by shard_map.
+    Device-local A buffer layout during execution:
+      [ own A store (a_cap) | recv buffers per offset, in offset order ]
+    and similarly for B.  Task operand indices point into that layout.
+    """
+
+    nparts: int
+    bs: int
+    exchange: str  # "p2p" (planned ppermute rounds) | "allgather" (baseline)
+    # block placement: owner[i] and local slot of every global block
+    a_owner: np.ndarray
+    b_owner: np.ndarray
+    a_slot: np.ndarray
+    b_slot: np.ndarray
+    a_cap: int
+    b_cap: int
+    a_store_idx: np.ndarray  # [P, a_cap] global A block idx per local slot (pad -> 0)
+    b_store_idx: np.ndarray
+    a_store_valid: np.ndarray  # [P, a_cap] bool
+    b_store_valid: np.ndarray
+    # exchange: per offset d, send slot lists  [P, cap_d]
+    a_offsets: tuple[int, ...]
+    b_offsets: tuple[int, ...]
+    a_send: dict[int, np.ndarray]
+    b_send: dict[int, np.ndarray]
+    a_send_count: dict[int, np.ndarray]  # true counts per device (stats)
+    b_send_count: dict[int, np.ndarray]
+    # tasks per device (padded): operand idx into device-local buffer layout
+    t_cap: int
+    task_a: np.ndarray  # [P, t_cap]
+    task_b: np.ndarray
+    task_c: np.ndarray  # [P, t_cap] local C slot, sorted; pad -> c_cap (trash row)
+    task_count: np.ndarray  # [P]
+    # output
+    c_coords: np.ndarray
+    c_owner: np.ndarray
+    c_slot: np.ndarray
+    c_cap: int
+    c_store_idx: np.ndarray  # [P, c_cap] global C block idx (pad -> 0)
+    c_store_valid: np.ndarray
+    tasks: Tasks
+
+    @property
+    def shapes(self):
+        return dict(
+            a_cap=self.a_cap, b_cap=self.b_cap, c_cap=self.c_cap, t_cap=self.t_cap
+        )
+
+
+def _owner_slots(owner: np.ndarray, nparts: int):
+    """Local slot per block + per-part store index lists."""
+    slot = np.zeros(owner.shape[0], dtype=np.int32)
+    stores = []
+    for p in range(nparts):
+        idx = np.nonzero(owner == p)[0]
+        slot[idx] = np.arange(idx.size, dtype=np.int32)
+        stores.append(idx.astype(np.int32))
+    return slot, stores
+
+
+def make_spgemm_plan(
+    a_coords: np.ndarray,
+    b_coords: np.ndarray,
+    nparts: int,
+    bs: int,
+    *,
+    placement: str = "morton",  # morton | random
+    exchange: str = "p2p",  # p2p | allgather
+    tasks: Tasks | None = None,
+    seed: int = 0,
+) -> SpgemmPlan:
+    """Plan a distributed multiply: placement, task schedule, exchange."""
+    tasks = tasks if tasks is not None else spgemm_symbolic(a_coords, b_coords)
+    na, nb, nc = a_coords.shape[0], b_coords.shape[0], tasks.num_out
+
+    # -- placement (chunk -> worker) ---------------------------------------
+    if placement == "morton":
+        # weight C blocks by task count (flops); A/B by uniform block weight
+        cw = np.bincount(tasks.c_idx, minlength=nc).astype(np.float64)
+        c_owner = partition_morton(nc, nparts, cw)
+        a_owner = partition_morton(na, nparts)
+        b_owner = partition_morton(nb, nparts)
+    elif placement == "random":
+        c_owner = partition_random(nc, nparts, seed)
+        a_owner = partition_random(na, nparts, seed + 1)
+        b_owner = partition_random(nb, nparts, seed + 2)
+    else:
+        raise ValueError(placement)
+
+    a_slot, a_stores = _owner_slots(a_owner, nparts)
+    b_slot, b_stores = _owner_slots(b_owner, nparts)
+    c_slot, c_stores = _owner_slots(c_owner, nparts)
+    a_cap = max(max((len(s) for s in a_stores), default=0), 1)
+    b_cap = max(max((len(s) for s in b_stores), default=0), 1)
+    c_cap = max(max((len(s) for s in c_stores), default=0), 1)
+
+    def store_arrays(stores, cap):
+        idx = np.zeros((nparts, cap), dtype=np.int32)
+        valid = np.zeros((nparts, cap), dtype=bool)
+        for p, s in enumerate(stores):
+            idx[p, : len(s)] = s
+            valid[p, : len(s)] = True
+        return idx, valid
+
+    a_store_idx, a_store_valid = store_arrays(a_stores, a_cap)
+    b_store_idx, b_store_valid = store_arrays(b_stores, b_cap)
+    c_store_idx, c_store_valid = store_arrays(c_stores, c_cap)
+
+    # -- task -> owner of C -------------------------------------------------
+    t_owner = c_owner[tasks.c_idx]
+
+    # -- exchange plan (chunk fetches) ---------------------------------------
+    # For matrix X in {A, B}: device p needs the distinct X blocks referenced
+    # by its tasks; those owned elsewhere arrive via ppermute rounds keyed by
+    # ring offset d = (dst - src) mod P.  Receive layout on dst: blocks sorted
+    # by global index, per offset.
+    def _exchange(x_owner, x_slot, ref_idx):
+        needs = [
+            np.unique(ref_idx[t_owner == p]) if np.any(t_owner == p) else np.zeros(0, np.int64)
+            for p in range(nparts)
+        ]
+        send: dict[int, list] = {}
+        recv_pos = {}  # (dst, global block) -> (offset, position)
+        for dst in range(nparts):
+            remote = needs[dst][x_owner[needs[dst]] != dst]
+            for src in np.unique(x_owner[remote]) if remote.size else []:
+                d = int((dst - src) % nparts)
+                blocks = remote[x_owner[remote] == src]  # sorted (np.unique)
+                send.setdefault(d, [np.zeros(0, np.int32)] * nparts)
+                send[d][src] = x_slot[blocks].astype(np.int32)
+                for pos, g in enumerate(blocks):
+                    recv_pos[(dst, int(g))] = (d, pos)
+        offsets = tuple(sorted(send.keys()))
+        send_pad = {d: _pad_ragged(send[d], 0) for d in offsets}
+        send_cnt = {
+            d: np.array([len(x) for x in send[d]], dtype=np.int64) for d in offsets
+        }
+        return offsets, send_pad, send_cnt, recv_pos
+
+    if exchange == "p2p":
+        a_offsets, a_send, a_send_cnt, a_recv_pos = _exchange(a_owner, a_slot, tasks.a_idx)
+        b_offsets, b_send, b_send_cnt, b_recv_pos = _exchange(b_owner, b_slot, tasks.b_idx)
+    else:  # allgather baseline: no planned exchange, full replication
+        a_offsets = b_offsets = ()
+        a_send = b_send = {}
+        a_send_cnt = b_send_cnt = {}
+        a_recv_pos = b_recv_pos = {}
+
+    # -- device-local operand indices ----------------------------------------
+    # local buffer layout: [store (cap) | offset buffers in tuple order]
+    def local_index(x_owner, x_slot, offsets, send_pad, recv_pos, cap, g, dev):
+        if exchange == "allgather":
+            # gathered layout: [owner0 store | owner1 store | ...]
+            return int(x_owner[g]) * cap + int(x_slot[g])
+        if x_owner[g] == dev:
+            return int(x_slot[g])
+        d, pos = recv_pos[(dev, int(g))]
+        base = cap
+        for dd in offsets:
+            if dd == d:
+                break
+            base += send_pad[dd].shape[1]
+        return base + pos
+
+    task_a_l, task_b_l, task_c_l = [], [], []
+    for p in range(nparts):
+        sel = np.nonzero(t_owner == p)[0]
+        # keep tasks sorted by local C slot for kernel-friendly accumulation
+        order = np.argsort(c_slot[tasks.c_idx[sel]], kind="stable")
+        sel = sel[order]
+        ta = np.array(
+            [
+                local_index(a_owner, a_slot, a_offsets, a_send, a_recv_pos, a_cap, g, p)
+                for g in tasks.a_idx[sel]
+            ],
+            dtype=np.int32,
+        )
+        tb = np.array(
+            [
+                local_index(b_owner, b_slot, b_offsets, b_send, b_recv_pos, b_cap, g, p)
+                for g in tasks.b_idx[sel]
+            ],
+            dtype=np.int32,
+        )
+        tc = c_slot[tasks.c_idx[sel]].astype(np.int32)
+        task_a_l.append(ta)
+        task_b_l.append(tb)
+        task_c_l.append(tc)
+    t_cap = max(max((len(x) for x in task_a_l), default=0), 1)
+    task_count = np.array([len(x) for x in task_a_l], dtype=np.int64)
+    task_a = _pad_ragged(task_a_l, 0)
+    task_b = _pad_ragged(task_b_l, 0)
+    task_c = _pad_ragged(task_c_l, c_cap)  # trash row
+
+    return SpgemmPlan(
+        nparts=nparts,
+        bs=bs,
+        exchange=exchange,
+        a_owner=a_owner,
+        b_owner=b_owner,
+        a_slot=a_slot,
+        b_slot=b_slot,
+        a_cap=a_cap,
+        b_cap=b_cap,
+        a_store_idx=a_store_idx,
+        b_store_idx=b_store_idx,
+        a_store_valid=a_store_valid,
+        b_store_valid=b_store_valid,
+        a_offsets=a_offsets,
+        b_offsets=b_offsets,
+        a_send=a_send,
+        b_send=b_send,
+        a_send_count=a_send_cnt,
+        b_send_count=b_send_cnt,
+        t_cap=t_cap,
+        task_a=task_a,
+        task_b=task_b,
+        task_c=task_c,
+        task_count=task_count,
+        c_coords=tasks.c_coords,
+        c_owner=c_owner,
+        c_slot=c_slot,
+        c_cap=c_cap,
+        c_store_idx=c_store_idx,
+        c_store_valid=c_store_valid,
+        tasks=tasks,
+    )
+
+
+def plan_stats(plan: SpgemmPlan) -> dict:
+    """Schedule quality metrics — the paper's Fig 1 quantities.
+
+    * flop balance: max/mean tasks per device (CHT's load balancing claim)
+    * recv bytes per device: actual (true counts) and padded (what the SPMD
+      program moves) — Fig 1c 'data received per worker process'.
+    """
+    P = plan.nparts
+    itemsize = 4
+    blk = plan.bs * plan.bs * itemsize
+    recv_actual = np.zeros(P, dtype=np.float64)
+    recv_padded = np.zeros(P, dtype=np.float64)
+    if plan.exchange == "allgather":
+        # every device receives everyone else's full (padded) store
+        per_dev = (P - 1) * (plan.a_cap + plan.b_cap) * blk
+        recv_padded[:] = per_dev
+        a_counts = np.bincount(plan.a_owner, minlength=P)
+        b_counts = np.bincount(plan.b_owner, minlength=P)
+        recv_actual[:] = (a_counts.sum() + b_counts.sum()) * blk  # upper: full matrices
+        for p in range(P):
+            recv_actual[p] -= (a_counts[p] + b_counts[p]) * blk
+    else:
+        for offs, send_cnt, send_pad in (
+            (plan.a_offsets, plan.a_send_count, plan.a_send),
+            (plan.b_offsets, plan.b_send_count, plan.b_send),
+        ):
+            for d in offs:
+                cnt = send_cnt[d]  # indexed by src; dst = (src + d) % P
+                for src in range(P):
+                    dst = (src + d) % P
+                    recv_actual[dst] += cnt[src] * blk
+                    recv_padded[dst] += send_pad[d].shape[1] * blk
+    tasks = plan.task_count.astype(np.float64)
+    mean_t = max(tasks.mean(), 1e-12)
+    return dict(
+        nparts=P,
+        tasks_total=int(tasks.sum()),
+        task_balance=float(tasks.max() / mean_t),
+        flops_per_dev_mean=2.0 * mean_t * plan.bs**3,
+        recv_bytes_mean=float(recv_actual.mean()),
+        recv_bytes_max=float(recv_actual.max()),
+        recv_bytes_padded_mean=float(recv_padded.mean()),
+        n_offsets=len(plan.a_offsets) + len(plan.b_offsets),
+    )

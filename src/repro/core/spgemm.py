@@ -1,0 +1,314 @@
+"""Sparse matrix-matrix multiplication over quadtree block structures.
+
+Mirrors the paper's multiplication task templates in two phases:
+
+* **Symbolic** (host, structure only): enumerate the leaf-level block products
+  ``C[c] += A[a] @ B[b]``.  Two implementations: a vectorized hash/merge join
+  (production path) and a literal recursive quadtree descent
+  (:func:`spgemm_symbolic_recursive`) that matches the paper's task-template
+  recursion; both must produce identical task sets (tested).
+* **Numeric** (device): grouped block matmul over the stacked leaf data —
+  either the pure-jnp reference (segment_sum) or the Pallas TPU kernel in
+  :mod:`repro.kernels.block_spmm`.
+
+Also provides symmetric multiply (syrk), and SpAMM — the paper's sparse
+approximate multiply with norm-based task pruning and an error bound.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .matrix import BSMatrix, block_frobenius_norms
+from .quadtree import morton_encode, morton_decode
+
+__all__ = [
+    "Tasks",
+    "spgemm_symbolic",
+    "spgemm_symbolic_recursive",
+    "spgemm_numeric",
+    "multiply",
+    "syrk",
+    "spamm",
+    "task_flops",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Tasks:
+    """Leaf-level multiply task list: C[c_idx[t]] += A[a_idx[t]] @ B[b_idx[t]].
+
+    Tasks are sorted by (c_idx, a_idx); c_coords is Morton-sorted so that
+    ``c_idx`` ascending == Morton order of output blocks.
+    """
+
+    a_idx: np.ndarray  # [T] int64 into A block stack
+    b_idx: np.ndarray  # [T] int64 into B block stack
+    c_idx: np.ndarray  # [T] int64 into c_coords
+    c_coords: np.ndarray  # [nnzb_c, 2] block coords of the output
+
+    @property
+    def num_tasks(self) -> int:
+        return int(self.a_idx.shape[0])
+
+    @property
+    def num_out(self) -> int:
+        return int(self.c_coords.shape[0])
+
+
+def _empty_tasks() -> Tasks:
+    z = np.zeros((0,), dtype=np.int64)
+    return Tasks(z, z, z, np.zeros((0, 2), dtype=np.int64))
+
+
+def spgemm_symbolic(a_coords: np.ndarray, b_coords: np.ndarray) -> Tasks:
+    """Vectorized symbolic phase: join A's block-cols against B's block-rows."""
+    a_coords = np.asarray(a_coords)
+    b_coords = np.asarray(b_coords)
+    if a_coords.shape[0] == 0 or b_coords.shape[0] == 0:
+        return _empty_tasks()
+
+    # group A by k = col, B by k = row
+    a_ord = np.argsort(a_coords[:, 1], kind="stable")
+    b_ord = np.argsort(b_coords[:, 0], kind="stable")
+    ak = a_coords[a_ord, 1]
+    bk = b_coords[b_ord, 0]
+    a_uk, a_start, a_cnt = np.unique(ak, return_index=True, return_counts=True)
+    b_uk, b_start, b_cnt = np.unique(bk, return_index=True, return_counts=True)
+    common, ia, ib = np.intersect1d(a_uk, b_uk, assume_unique=True, return_indices=True)
+    if common.size == 0:
+        return _empty_tasks()
+    ca, cb = a_cnt[ia], b_cnt[ib]  # per-k group sizes
+    sa, sb = a_start[ia], b_start[ib]  # per-k group starts
+    pairs = ca * cb
+    total = int(pairs.sum())
+    # expand: for group g, a index repeats cb[g] times each; b index tiles ca[g] times
+    goff = np.concatenate([[0], np.cumsum(pairs)])[:-1]
+    gid = np.repeat(np.arange(common.size), pairs)
+    local = np.arange(total) - goff[gid]  # 0..pairs[g)-1 within each group
+    a_local = local // cb[gid]
+    b_local = local % cb[gid]
+    a_idx = a_ord[sa[gid] + a_local]
+    b_idx = b_ord[sb[gid] + b_local]
+
+    ci = a_coords[a_idx, 0]
+    cj = b_coords[b_idx, 1]
+    codes = morton_encode(ci, cj)
+    uniq, c_idx = np.unique(codes, return_inverse=True)
+    r, c = morton_decode(uniq)
+    c_coords = np.stack([r, c], axis=1)
+    order = np.lexsort((a_idx, c_idx))
+    return Tasks(
+        a_idx=a_idx[order].astype(np.int64),
+        b_idx=b_idx[order].astype(np.int64),
+        c_idx=c_idx[order].astype(np.int64),
+        c_coords=c_coords,
+    )
+
+
+def spgemm_symbolic_recursive(a_coords: np.ndarray, b_coords: np.ndarray) -> Tasks:
+    """Literal quadtree-descent symbolic phase (the paper's task recursion).
+
+    A multiply task at level L on nodes (A_ik, B_kj) registers child tasks for
+    every pair of nonzero child quadrants with matching inner index; nil
+    children (absent Morton prefixes) are pruned — the fallback execute
+    function of the paper.  Equivalent to :func:`spgemm_symbolic` (tested);
+    kept as the faithful reference and used by the scheduler's cost model.
+    """
+    a_coords = np.asarray(a_coords)
+    b_coords = np.asarray(b_coords)
+    if a_coords.shape[0] == 0 or b_coords.shape[0] == 0:
+        return _empty_tasks()
+    depth = 0
+    top = int(
+        max(
+            a_coords.max(initial=0),
+            b_coords.max(initial=0),
+            1,
+        )
+    )
+    while (1 << depth) <= top:
+        depth += 1
+    # per-level sets of (node codes) plus leaf code -> stack index maps
+    a_codes = morton_encode(a_coords[:, 0], a_coords[:, 1])
+    b_codes = morton_encode(b_coords[:, 0], b_coords[:, 1])
+    a_pos = {int(c): i for i, c in enumerate(a_codes)}
+    b_pos = {int(c): i for i, c in enumerate(b_codes)}
+    a_levels = [set((a_codes >> np.uint64(2 * (depth - l))).tolist()) for l in range(depth + 1)]
+    b_levels = [set((b_codes >> np.uint64(2 * (depth - l))).tolist()) for l in range(depth + 1)]
+
+    out_a, out_b, out_ci, out_cj = [], [], [], []
+
+    def child(prefix: int, qr: int, qc: int) -> int:
+        return (prefix << 2) | (qr << 1) | qc
+
+    def descend(an: int, bn: int, level: int) -> None:
+        # an encodes (i,k) interleaved; bn encodes (k,j).  Children quadrants
+        # are indexed by (qi,qk) for A and (qk,qj) for B.
+        if level == depth:
+            ar, ac = morton_decode(np.asarray([an], dtype=np.uint64))
+            br, bc = morton_decode(np.asarray([bn], dtype=np.uint64))
+            out_a.append(a_pos[an])
+            out_b.append(b_pos[bn])
+            out_ci.append(int(ar[0]))
+            out_cj.append(int(bc[0]))
+            return
+        nl = level + 1
+        for qi in range(2):
+            for qk in range(2):
+                ac = child(an, qi, qk)
+                if ac not in a_levels[nl]:
+                    continue  # nil chunk id: zero branch pruned
+                for qj in range(2):
+                    bc = child(bn, qk, qj)
+                    if bc in b_levels[nl]:
+                        descend(ac, bc, nl)
+
+    descend(0, 0, 0)
+    if not out_a:
+        return _empty_tasks()
+    a_idx = np.asarray(out_a, dtype=np.int64)
+    b_idx = np.asarray(out_b, dtype=np.int64)
+    codes = morton_encode(np.asarray(out_ci), np.asarray(out_cj))
+    uniq, c_idx = np.unique(codes, return_inverse=True)
+    r, c = morton_decode(uniq)
+    order = np.lexsort((a_idx, c_idx))
+    return Tasks(a_idx[order], b_idx[order], c_idx[order].astype(np.int64), np.stack([r, c], axis=1))
+
+
+def task_flops(tasks: Tasks, bs: int) -> float:
+    """Dense-leaf flop count: 2 * bs^3 per task (mul+add)."""
+    return 2.0 * float(tasks.num_tasks) * bs**3
+
+
+def spgemm_numeric(
+    a_data: jax.Array,
+    b_data: jax.Array,
+    tasks: Tasks,
+    *,
+    impl: str = "auto",
+    out_dtype=None,
+) -> jax.Array:
+    """Numeric phase: grouped block matmul C[c] += A[a] @ B[b].
+
+    impl: 'ref' (pure jnp segment_sum), 'kernel' (Pallas), or 'auto'.
+    """
+    out_dtype = out_dtype or a_data.dtype
+    bs = a_data.shape[-2]
+    if tasks.num_tasks == 0:
+        return jnp.zeros((0, bs, b_data.shape[-1]), dtype=out_dtype)
+    if impl == "auto":
+        impl = "kernel" if bs % 8 == 0 and bs >= 8 else "ref"
+    if impl == "kernel":
+        from repro.kernels import ops as kops
+
+        return kops.block_spmm(
+            a_data,
+            b_data,
+            jnp.asarray(tasks.a_idx, jnp.int32),
+            jnp.asarray(tasks.b_idx, jnp.int32),
+            jnp.asarray(tasks.c_idx, jnp.int32),
+            tasks.num_out,
+        ).astype(out_dtype)
+    from repro.kernels import ref as kref
+
+    return kref.block_spmm_ref(
+        a_data,
+        b_data,
+        jnp.asarray(tasks.a_idx),
+        jnp.asarray(tasks.b_idx),
+        jnp.asarray(tasks.c_idx),
+        tasks.num_out,
+    ).astype(out_dtype)
+
+
+def multiply(a: BSMatrix, b: BSMatrix, *, impl: str = "auto") -> BSMatrix:
+    """C = A @ B (regular multiplication task type)."""
+    assert a.shape[1] == b.shape[0], (a.shape, b.shape)
+    assert a.bs == b.bs
+    tasks = spgemm_symbolic(a.coords, b.coords)
+    data = spgemm_numeric(a.data, b.data, tasks, impl=impl)
+    return BSMatrix(
+        shape=(a.shape[0], b.shape[1]), bs=a.bs, coords=tasks.c_coords, data=data
+    )
+
+
+def syrk(a: BSMatrix, *, impl: str = "auto") -> BSMatrix:
+    """Symmetric rank-k construction: C = A @ A^T, exploiting symmetry.
+
+    Only tasks with c_row <= c_col are computed; the mirror is materialized by
+    transposing the strictly-upper blocks (paper: symmetric square / rank-k
+    task types).
+    """
+    at = a.transpose()
+    tasks = spgemm_symbolic(a.coords, at.coords)
+    keep = tasks.c_coords[tasks.c_idx, 0] <= tasks.c_coords[tasks.c_idx, 1]
+    # re-index kept tasks onto the kept output blocks
+    kept_out = np.unique(tasks.c_idx[keep])
+    remap = -np.ones(tasks.num_out, dtype=np.int64)
+    remap[kept_out] = np.arange(kept_out.size)
+    upper = Tasks(
+        a_idx=tasks.a_idx[keep],
+        b_idx=tasks.b_idx[keep],
+        c_idx=remap[tasks.c_idx[keep]],
+        c_coords=tasks.c_coords[kept_out],
+    )
+    data = spgemm_numeric(a.data, at.data, upper, impl=impl)
+    upper_m = BSMatrix(shape=(a.shape[0], a.shape[0]), bs=a.bs, coords=upper.c_coords, data=data)
+    strict = upper.c_coords[:, 0] < upper.c_coords[:, 1]
+    if not strict.any():
+        return upper_m
+    mirror_coords = upper.c_coords[strict][:, ::-1]
+    mirror_data = jnp.transpose(data[jnp.asarray(np.nonzero(strict)[0])], (0, 2, 1))
+    return BSMatrix.from_blocks(
+        (a.shape[0], a.shape[0]),
+        a.bs,
+        np.concatenate([upper.c_coords, mirror_coords]),
+        jnp.concatenate([data, mirror_data]),
+    )
+
+
+def symm_square(a: BSMatrix, *, impl: str = "auto") -> BSMatrix:
+    """Symmetric matrix square (paper task type): for symmetric A,
+    A^2 = A A^T, so only the upper triangle is computed and mirrored."""
+    return syrk(a, impl=impl)
+
+
+def spamm(a: BSMatrix, b: BSMatrix, tau: float, *, impl: str = "auto"):
+    """Sparse approximate multiply (paper: SpAMM task type).
+
+    Skips tasks whose contribution bound ||A_a||_F * ||B_b||_F <= tau_task,
+    with tau_task chosen greedily so the *total* skipped bound <= tau.
+    Returns (C, error_bound) with ||AB - C||_F <= error_bound <= tau.
+    """
+    tasks = spgemm_symbolic(a.coords, b.coords)
+    if tasks.num_tasks == 0:
+        return BSMatrix.zeros((a.shape[0], b.shape[1]), a.bs, a.dtype), 0.0
+    na = np.asarray(block_frobenius_norms(a.data), dtype=np.float64)
+    nb = np.asarray(block_frobenius_norms(b.data), dtype=np.float64)
+    bound = na[tasks.a_idx] * nb[tasks.b_idx]
+    order = np.argsort(bound)
+    csum = np.cumsum(bound[order])
+    ndrop = int(np.searchsorted(csum, tau, side="right"))
+    drop = np.zeros(tasks.num_tasks, dtype=bool)
+    drop[order[:ndrop]] = True
+    err = float(csum[ndrop - 1]) if ndrop else 0.0
+    keep = ~drop
+    kept_out = np.unique(tasks.c_idx[keep])
+    remap = -np.ones(tasks.num_out, dtype=np.int64)
+    remap[kept_out] = np.arange(kept_out.size)
+    kept = Tasks(
+        a_idx=tasks.a_idx[keep],
+        b_idx=tasks.b_idx[keep],
+        c_idx=remap[tasks.c_idx[keep]],
+        c_coords=tasks.c_coords[kept_out],
+    )
+    data = spgemm_numeric(a.data, b.data, kept, impl=impl)
+    return (
+        BSMatrix(shape=(a.shape[0], b.shape[1]), bs=a.bs, coords=kept.c_coords, data=data),
+        err,
+    )

@@ -1,0 +1,51 @@
+"""Truncation task types: removal of small matrix elements with error control.
+
+The paper ships several error-control variants; we implement:
+
+* :func:`truncate` — block-level truncation with a *global* Frobenius-norm
+  guarantee: the blocks with smallest norms are removed greedily such that
+  ``||A - truncate(A, tau)||_F <= tau`` (tight by construction).
+* :func:`truncate_elementwise` — zero every element with ``|a_ij| <= eps``
+  and drop blocks that become empty (the classic drop-tolerance variant).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from .matrix import BSMatrix
+
+__all__ = ["truncate", "truncate_elementwise"]
+
+
+def truncate(a: BSMatrix, tau: float) -> BSMatrix:
+    """Remove smallest-norm blocks while sqrt(sum of removed norms^2) <= tau."""
+    if a.nnzb == 0 or tau <= 0:
+        return a
+    norms = a.block_norms().astype(np.float64)
+    order = np.argsort(norms)
+    csum = np.sqrt(np.cumsum(norms[order] ** 2))
+    ndrop = int(np.searchsorted(csum, tau, side="right"))
+    if ndrop == 0:
+        return a
+    keep = np.ones(a.nnzb, dtype=bool)
+    keep[order[:ndrop]] = False
+    idx = np.nonzero(keep)[0]
+    return BSMatrix(
+        shape=a.shape, bs=a.bs, coords=a.coords[idx], data=a.data[jnp.asarray(idx)]
+    )
+
+
+def truncate_elementwise(a: BSMatrix, eps: float) -> BSMatrix:
+    """Zero elements with |a_ij| <= eps; drop blocks that become all-zero."""
+    if a.nnzb == 0:
+        return a
+    data = jnp.where(jnp.abs(a.data) > eps, a.data, jnp.zeros_like(a.data))
+    alive = np.asarray(jnp.any(data != 0, axis=(1, 2)))
+    idx = np.nonzero(alive)[0]
+    return BSMatrix(
+        shape=a.shape, bs=a.bs, coords=a.coords[idx], data=data[jnp.asarray(idx)]
+    )

@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: grouped block-sparse matmul (the paper's numeric phase).
+
+Computes ``C[c[t]] += A[a[t]] @ B[b[t]]`` for a host-computed task list with
+``c`` sorted ascending (the symbolic phase guarantees this).  This one kernel
+is the leaf-level engine for every multiplication task type in the library
+(regular / symmetric / SpAMM) *and* for MegaBlocks-style MoE expert GEMMs.
+
+TPU mapping
+-----------
+* Task indices are **scalar-prefetched** (SMEM) so BlockSpec index maps can
+  gather A/B tiles straight from HBM into VMEM double-buffered pipelines —
+  no [T, bs, bs] gather is ever materialized (unlike the jnp reference).
+* Grid is ``(nm, nn, T, nk)``; the innermost two dims iterate tasks and the
+  contraction.  For a fixed output tile (m, n), consecutive grid steps with
+  the same ``c[t]`` revisit the same output block, so the accumulator lives
+  in VMEM across both k-steps and same-output tasks; it is zero-initialised
+  exactly at ``(k == 0) & (t == 0 | c[t] != c[t-1])``.
+* MXU: tiles are (tm, tk) x (tk, tn) with fp32 accumulation via
+  ``preferred_element_type``; tile sizes are multiples of 128 when the block
+  size allows (bs >= 128), otherwise the full block is one tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["block_spmm_kernel_call"]
+
+
+def _kernel(a_idx_ref, b_idx_ref, c_idx_ref, a_ref, b_ref, o_ref, *, nk: int):
+    t = pl.program_id(2)
+    k = pl.program_id(3)
+    prev = c_idx_ref[jnp.maximum(t - 1, 0)]
+    first_task_for_block = jnp.logical_or(t == 0, c_idx_ref[t] != prev)
+
+    @pl.when(jnp.logical_and(k == 0, first_task_for_block))
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[0]
+    b = b_ref[0]
+    o_ref[0] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def _pick_tile(n: int, cap: int = 512) -> int:
+    """Largest divisor of n that is <= cap, preferring MXU-aligned sizes."""
+    if n <= cap:
+        return n
+    for cand in (512, 384, 256, 128):
+        if cand <= cap and n % cand == 0:
+            return cand
+    t = cap
+    while n % t:
+        t -= 1
+    return t
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_out", "tm", "tn", "tk", "interpret")
+)
+def block_spmm_kernel_call(
+    a_data: jax.Array,
+    b_data: jax.Array,
+    a_idx: jax.Array,
+    b_idx: jax.Array,
+    c_idx: jax.Array,
+    *,
+    num_out: int,
+    tm: int | None = None,
+    tn: int | None = None,
+    tk: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Raw pallas_call wrapper. Prefer repro.kernels.ops.block_spmm."""
+    T = a_idx.shape[0]
+    bm, bk = a_data.shape[1], a_data.shape[2]
+    bn = b_data.shape[2]
+    assert b_data.shape[1] == bk, (a_data.shape, b_data.shape)
+    tm = tm or _pick_tile(bm)
+    tn = tn or _pick_tile(bn)
+    tk = tk or _pick_tile(bk)
+    nm, nn, nk = bm // tm, bn // tn, bk // tk
+
+    grid = (nm, nn, T, nk)
+
+    def a_map(m, n, t, k, a_idx_ref, b_idx_ref, c_idx_ref):
+        del n
+        return (a_idx_ref[t], m, k)
+
+    def b_map(m, n, t, k, a_idx_ref, b_idx_ref, c_idx_ref):
+        del m
+        return (b_idx_ref[t], k, n)
+
+    def o_map(m, n, t, k, a_idx_ref, b_idx_ref, c_idx_ref):
+        del k
+        return (c_idx_ref[t], m, n)
+
+    flops = 2 * T * bm * bn * bk
+    bytes_accessed = int(
+        T * (tm * bk * a_data.dtype.itemsize + bk * tn * b_data.dtype.itemsize)
+        + num_out * bm * bn * 4
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, nk=nk),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, tm, tk), a_map),
+                pl.BlockSpec((1, tk, tn), b_map),
+            ],
+            out_specs=pl.BlockSpec((1, tm, tn), o_map),
+        ),
+        out_shape=jax.ShapeDtypeStruct((num_out, bm, bn), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary", "arbitrary"),
+        ),
+        cost_estimate=pl.CostEstimate(
+            flops=flops, bytes_accessed=bytes_accessed, transcendentals=0
+        ),
+        interpret=interpret,
+    )(a_idx, b_idx, c_idx, a_data, b_data)
+    return out

@@ -1,0 +1,176 @@
+"""Pallas TPU flash attention (online softmax), causal + sliding-window.
+
+The prefill/training attention hot spot.  GQA-aware: K/V may have fewer heads
+than Q; the kv head is selected in the BlockSpec index map (h // rep), so K/V
+are never materially repeated.
+
+Grid: (batch, q_heads, q_tiles, kv_tiles), kv innermost.  Softmax state
+(m, l, acc) lives in VMEM scratch across kv steps; fully-masked kv tiles are
+skipped (causal: tiles entirely above the diagonal; window: tiles entirely
+outside the band) — for sliding-window attention this makes the kernel
+O(seq * window) instead of O(seq^2), which is what lets recurrentgemma-style
+local attention run at 500k context.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_call"]
+
+_NEG_INF = -1e30
+
+
+def _fa_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    acc_ref,
+    m_ref,
+    l_ref,
+    *,
+    scale: float,
+    causal: bool,
+    window: int | None,
+    bq: int,
+    bkv: int,
+    nkv: int,
+    sq: int,
+    sk: int,
+):
+    iq = pl.program_id(2)
+    ikv = pl.program_id(3)
+
+    @pl.when(ikv == 0)
+    def _reset():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # global positions; q positions are aligned to the END of the kv axis so
+    # the same kernel serves decode-style suffix queries.
+    q_lo = iq * bq + (sk - sq)
+    k_lo = ikv * bkv
+    # tile-level skip tests (static shapes, dynamic predicates)
+    live = jnp.bool_(True)
+    if causal:
+        live = jnp.logical_and(live, k_lo <= q_lo + bq - 1)
+    if window is not None:
+        live = jnp.logical_and(live, k_lo + bkv - 1 > q_lo - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        s *= scale
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        mask = jnp.ones((bq, bkv), dtype=bool)
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window is not None:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_ref[:, 0]
+        l_prev = l_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1)
+        pv = jax.lax.dot_general(
+            p.astype(jnp.float32),
+            v.astype(jnp.float32),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    @pl.when(ikv == nkv - 1)
+    def _finish():
+        l = l_ref[:, 0]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "bq", "bkv", "interpret")
+)
+def flash_attention_call(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    bq: int = 256,
+    bkv: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: [B, H, Sq, D]; k, v: [B, HK, Sk, D] with H % HK == 0."""
+    B, H, Sq, D = q.shape
+    _, HK, Sk, _ = k.shape
+    assert H % HK == 0, (H, HK)
+    rep = H // HK
+    bq = min(bq, Sq)
+    bkv = min(bkv, Sk)
+    assert Sq % bq == 0 and Sk % bkv == 0, (Sq, bq, Sk, bkv)
+    nq, nkv = Sq // bq, Sk // bkv
+    scale = D**-0.5
+
+    def q_map(b, h, iq, ikv):
+        del ikv
+        return (b, h, iq, 0)
+
+    def kv_map(b, h, iq, ikv):
+        del iq
+        return (b, h // rep, ikv, 0)
+
+    def o_map(b, h, iq, ikv):
+        del ikv
+        return (b, h, iq, 0)
+
+    kernel = functools.partial(
+        _fa_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        bq=bq,
+        bkv=bkv,
+        nkv=nkv,
+        sq=Sq,
+        sk=Sk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), q_map),
+            pl.BlockSpec((1, 1, bkv, D), kv_map),
+            pl.BlockSpec((1, 1, bkv, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), o_map),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,141 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Selects interpret mode automatically off-TPU so the same call sites work in
+CPU tests (interpret=True) and on real hardware (compiled Mosaic).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .block_spmm import block_spmm_kernel_call
+
+__all__ = ["block_spmm", "flash_attention"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def block_spmm(
+    a_data: jax.Array,
+    b_data: jax.Array,
+    a_idx: jax.Array,
+    b_idx: jax.Array,
+    c_idx: jax.Array,
+    num_out: int,
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Grouped block matmul: C[c[t]] += A[a[t]] @ B[b[t]], c sorted ascending.
+
+    Contract: every output row in [0, num_out) must receive at least one
+    task, except an optional TRAILING trash region (padded tasks), whose
+    content is unspecified — callers slice it off.  The symbolic phase and
+    the distributed scheduler both satisfy this by construction.
+
+    Returns fp32 [num_out, bm, bn].
+    """
+    if a_idx.shape[0] == 0:
+        return jnp.zeros((num_out, a_data.shape[1], b_data.shape[2]), jnp.float32)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    # Tiny/odd blocks (tests, partial leaves) go through the oracle — the
+    # kernel wants lane-aligned tiles.
+    bm, bk, bn = a_data.shape[1], a_data.shape[2], b_data.shape[2]
+    if min(bm, bk, bn) < 8 or bm % 8 or bk % 8 or bn % 8:
+        return ref.block_spmm_ref(a_data, b_data, a_idx, b_idx, c_idx, num_out)
+    return block_spmm_kernel_call(
+        a_data,
+        b_data,
+        jnp.asarray(a_idx, jnp.int32),
+        jnp.asarray(b_idx, jnp.int32),
+        jnp.asarray(c_idx, jnp.int32),
+        num_out=num_out,
+        interpret=interpret,
+    )
+
+
+def grouped_gemm_varsize(
+    x: jax.Array,
+    group_sizes,
+    w: jax.Array,
+    *,
+    tile_m: int = 8,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """MegaBlocks-style dropless grouped GEMM through the paper's kernel.
+
+    x: [T, K] rows sorted by group (tokens sorted by expert);
+    group_sizes: host list/array, sum == T; w: [G, K, N] per-group weights.
+    Returns [T, N] with row t multiplied by its group's weight.
+
+    The variable group boundaries become a *block-sparse task list*: x is
+    tiled into [T/tile_m, tile_m, K] row blocks and each tile is paired with
+    the weight(s) of the group(s) it spans — exactly the symbolic/numeric
+    split of the sparse matrix library, with tokens as block rows.  Tiles
+    spanning a group boundary are handled by masking each (tile, group) pair
+    to the rows owned by that group — so no token is ever dropped and no
+    capacity padding is computed (vs the capacity-factor path in
+    repro.models.moe).
+    """
+    import numpy as np
+
+    group_sizes = np.asarray(group_sizes)
+    T, K = x.shape
+    G, _, N = w.shape
+    assert group_sizes.sum() == T, (group_sizes.sum(), T)
+    pad = (-T) % tile_m
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    nt = (T + pad) // tile_m
+    # host symbolic phase: one task per (row-tile, group) pair it overlaps
+    starts = np.concatenate([[0], np.cumsum(group_sizes)])
+    row_group = np.repeat(np.arange(G), group_sizes)
+    row_group = np.concatenate([row_group, np.full(pad, G - 1)])
+    a_idx, b_idx, c_idx, mask_lo, mask_hi = [], [], [], [], []
+    for t in range(nt):
+        lo, hi = t * tile_m, (t + 1) * tile_m
+        for g in np.unique(row_group[lo:hi]):
+            a_idx.append(t)
+            b_idx.append(int(g))
+            c_idx.append(t)
+            g_lo = int(starts[g])
+            g_hi = int(starts[g + 1]) if g < G - 1 else T + pad
+            mask_lo.append(max(g_lo - lo, 0))
+            mask_hi.append(min(g_hi - lo, tile_m))
+    xt = x.reshape(nt, tile_m, K)
+    # mask each task's tile to its group's rows (numeric phase stays a pure
+    # grouped block matmul; boundary tiles appear once per group)
+    rows = jnp.arange(tile_m)
+    sel = (rows[None, :] >= jnp.asarray(mask_lo)[:, None]) & (
+        rows[None, :] < jnp.asarray(mask_hi)[:, None]
+    )
+    a_data = xt[jnp.asarray(a_idx)] * sel[:, :, None].astype(x.dtype)
+    out = block_spmm(
+        a_data,
+        w.astype(x.dtype),
+        jnp.arange(len(a_idx), dtype=jnp.int32),
+        jnp.asarray(b_idx, jnp.int32),
+        jnp.asarray(c_idx, jnp.int32),
+        nt,
+        interpret=interpret,
+    )
+    return out.reshape(nt * tile_m, N)[:T].astype(x.dtype)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Online-softmax attention (Pallas on TPU, oracle fallback elsewhere)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    from .flash_attention import flash_attention_call
+
+    return flash_attention_call(q, k, v, causal=causal, window=window, interpret=interpret)

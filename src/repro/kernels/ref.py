@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["block_spmm_ref", "flash_attention_ref"]
+
+
+@functools.partial(jax.jit, static_argnames=("num_out",))
+def block_spmm_ref(
+    a_data: jax.Array,
+    b_data: jax.Array,
+    a_idx: jax.Array,
+    b_idx: jax.Array,
+    c_idx: jax.Array,
+    num_out: int,
+) -> jax.Array:
+    """Grouped block matmul oracle: C[c[t]] += A[a[t]] @ B[b[t]].
+
+    fp32 accumulation regardless of input dtype (matches the kernel).
+    """
+    lhs = a_data[a_idx].astype(jnp.float32)
+    rhs = b_data[b_idx].astype(jnp.float32)
+    prods = jnp.einsum("tij,tjk->tik", lhs, rhs)
+    return jax.ops.segment_sum(prods, c_idx, num_segments=num_out)
+
+
+def flash_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """Reference attention. q,k,v: [batch, heads, seq, head_dim] (kv may have
+    fewer heads — GQA — broadcast here). Optional sliding window."""
+    bq, hq, sq, d = q.shape
+    hk = k.shape[1]
+    if hk != hq:
+        rep = hq // hk
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else d**-0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    logits *= scale
+    sk = k.shape[2]
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)  # align ends (decode-style)
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,338 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: the SPMD
+partitioner must accept every sharding, the compiled module must fit, and
+its cost/memory/collective analyses feed the roofline (EXPERIMENTS.md).
+
+Usage:
+  python -m repro.launch.dryrun --arch olmo-1b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --out results/dryrun   (every cell)
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.launch.hlo_analysis import analyze_collectives, op_census
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (
+    abstract_state_and_shardings,
+    make_ctx,
+    serve_input_shardings,
+    serve_input_specs,
+    train_input_shardings,
+    train_input_specs,
+)
+from repro.models import model as model_mod
+from repro.models import transformer
+from repro.runtime.elastic import state_shardings  # noqa: F401  (docs)
+from repro.sharding.rules import spec_tree
+
+# TPU v5e-ish hardware model (per chip)
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # bytes/s
+LINK_BW = 50e9  # bytes/s per ICI link
+
+
+def _params_shardings(ctx, cfg, dtype=None):
+    from jax.sharding import NamedSharding
+
+    params, axes = transformer.abstract_params(cfg)
+    if dtype is not None:  # serving stores bf16 weights
+        params = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, dtype)
+            if jnp.issubdtype(x.dtype, jnp.floating)
+            else x,
+            params,
+        )
+    specs = spec_tree(ctx, params, axes)
+    return params, jax.tree.map(lambda s: NamedSharding(ctx.mesh, s), specs)
+
+
+def _lower_one(cfg, shape, mesh, ctx, *, attn_impl, unroll, kv_dtype=None, train_opts=None):
+    """Lower + compile one variant of a cell; returns (compiled, t_lower, t_compile)."""
+    t0 = time.time()
+    if shape.kind == "train":
+        topts = dict(train_opts or {})
+        state, st_sh = abstract_state_and_shardings(
+            ctx, cfg, param_dtype=topts.get("param_dtype", jnp.float32)
+        )
+        batch = train_input_specs(cfg, shape)
+        b_sh = train_input_shardings(ctx, cfg, shape)
+        step = model_mod.make_train_step(
+            cfg, ctx, attn_impl=attn_impl, unroll=unroll, **topts
+        )
+        jitted = jax.jit(
+            step,
+            in_shardings=(st_sh, b_sh),
+            out_shardings=(st_sh, None),
+            donate_argnums=(0,),
+        )
+        lowered = jitted.lower(state, batch)
+    elif shape.kind == "prefill":
+        params, p_sh = _params_shardings(ctx, cfg, dtype=jnp.bfloat16)
+        batch = train_input_specs(cfg, shape)
+        b_sh = train_input_shardings(ctx, cfg, shape)
+
+        def prefill_step(params, batch):
+            c = jax.tree.map(
+                lambda p: p.astype(jnp.bfloat16)
+                if jnp.issubdtype(p.dtype, jnp.floating)
+                else p,
+                params,
+            )
+            cb = {
+                k: v.astype(jnp.bfloat16) if jnp.issubdtype(v.dtype, jnp.floating) else v
+                for k, v in batch.items()
+            }
+            return transformer.apply(c, cfg, ctx, cb, attn_impl=attn_impl, unroll=unroll)
+
+        lowered = jax.jit(prefill_step, in_shardings=(p_sh, b_sh)).lower(params, batch)
+    else:  # decode
+        params, p_sh = _params_shardings(ctx, cfg, dtype=jnp.bfloat16)
+        cache, tokens, pos = serve_input_specs(cfg, shape, kv_dtype=kv_dtype)
+        c_sh, t_sh, pos_sh = serve_input_shardings(ctx, cfg, shape, kv_dtype=kv_dtype)
+        serve = model_mod.make_serve_step(cfg, ctx, unroll=unroll)
+        jitted = jax.jit(
+            serve,
+            in_shardings=(p_sh, c_sh, t_sh, pos_sh),
+            out_shardings=(None, c_sh),
+            donate_argnums=(1,),
+        )
+        lowered = jitted.lower(params, cache, tokens, pos)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    return compiled, t_lower, t_compile
+
+
+def _costs(compiled) -> dict:
+    cost = compiled.cost_analysis()
+    coll = analyze_collectives(compiled.as_text())
+    out = {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "operand_bytes": coll["operand_bytes"],
+        "wire_bytes": coll["wire_bytes"],
+    }
+    for k, v in coll["by_kind"].items():
+        out[f"kind/{k}/count"] = float(v["count"])
+        out[f"kind/{k}/wire_bytes"] = float(v["wire_bytes"])
+    return out
+
+
+def lower_cell(
+    arch_id: str,
+    shape_name: str,
+    multi_pod: bool,
+    *,
+    attn_impl="chunked",
+    unroll=True,
+    rules_override=None,
+    grad_accum=None,
+    cfg_overrides=None,
+    kv_dtype=None,
+    train_opts=None,
+):
+    """One cell: production (scan) lowering for memory + compile proof, and a
+    1-period/2-period unrolled pair to extrapolate exact per-device costs
+    (XLA's HloCostAnalysis counts while-loop bodies once, so the scan
+    module's totals would undercount by the trip count)."""
+    import dataclasses as _dc
+
+    cfg = get_config(arch_id)
+    shape = SHAPES[shape_name]
+    ok, why = cfg.supports(shape)
+    if not ok:
+        return {"arch": arch_id, "shape": shape_name, "status": "skipped", "why": why}, None
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = make_ctx(mesh, cfg, shape)
+    if rules_override:
+        ctx = ctx.with_rules(**rules_override)
+    if grad_accum is not None:
+        cfg = _dc.replace(cfg, grad_accum=grad_accum)
+    if cfg_overrides:
+        cfg = _dc.replace(cfg, **cfg_overrides)
+
+    # 1) production lowering: the deployable program (scan over periods)
+    compiled, t_lower, t_compile = _lower_one(
+        cfg, shape, mesh, ctx, attn_impl=attn_impl, unroll=False, kv_dtype=kv_dtype,
+        train_opts=train_opts,
+    )
+    mem = compiled.memory_analysis()
+    census = op_census(compiled.as_text())
+
+    # 2) cost extrapolation
+    pat = len(cfg.block_pattern)
+    periods = cfg.num_layers // pat
+    rem = cfg.num_layers % pat
+    if periods <= 2 and unroll:
+        cu, _, _ = _lower_one(
+            cfg, shape, mesh, ctx, attn_impl=attn_impl, unroll=True, kv_dtype=kv_dtype,
+            train_opts=train_opts,
+        )
+        costs = _costs(cu)
+        extrap = "exact-unrolled"
+    elif unroll:
+        cfg1 = _dc.replace(cfg, num_layers=1 * pat + rem)
+        cfg2 = _dc.replace(cfg, num_layers=2 * pat + rem)
+        c1, _, _ = _lower_one(
+            cfg1, shape, mesh, ctx, attn_impl=attn_impl, unroll=True, kv_dtype=kv_dtype,
+            train_opts=train_opts,
+        )
+        f1 = _costs(c1)
+        c2, _, _ = _lower_one(
+            cfg2, shape, mesh, ctx, attn_impl=attn_impl, unroll=True, kv_dtype=kv_dtype,
+            train_opts=train_opts,
+        )
+        f2 = _costs(c2)
+        keys = set(f1) | set(f2)
+        costs = {
+            k: f1.get(k, 0.0) + (periods - 1) * (f2.get(k, 0.0) - f1.get(k, 0.0))
+            for k in keys
+        }
+        extrap = "per-period"
+    else:
+        costs = _costs(compiled)
+        extrap = "scan-raw (body counted once)"
+
+    chips = mesh.devices.size
+    flops = costs["flops"]
+    bytes_acc = costs["bytes"]
+    model_flops = _model_flops(cfg, shape)
+    rec = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "status": "ok",
+        "extrapolation": extrap,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "hlo_flops_per_dev": flops,
+        "hlo_bytes_per_dev": bytes_acc,
+        "collective_operand_bytes_per_dev": costs["operand_bytes"],
+        "collective_wire_bytes_per_dev": costs["wire_bytes"],
+        "collectives_by_kind": {
+            k.split("/")[1]: {
+                "count": costs.get(f"kind/{k.split('/')[1]}/count", 0.0),
+                "wire_bytes": costs.get(f"kind/{k.split('/')[1]}/wire_bytes", 0.0),
+            }
+            for k in costs
+            if k.startswith("kind/")
+        },
+        "compute_term_s": flops / PEAK_FLOPS,
+        "memory_term_s": bytes_acc / HBM_BW,
+        "collective_term_s": costs["wire_bytes"] / LINK_BW,
+        "model_flops_global": model_flops,
+        "model_flops_per_dev": model_flops / chips,
+        "useful_flops_ratio": (model_flops / chips) / flops if flops else 0.0,
+        "memory_analysis": _mem_dict(mem),
+        "op_census": census,
+    }
+    terms = {
+        "compute": rec["compute_term_s"],
+        "memory": rec["memory_term_s"],
+        "collective": rec["collective_term_s"],
+    }
+    rec["bottleneck"] = max(terms, key=terms.get)
+    rec["roofline_fraction"] = (
+        rec["compute_term_s"] * rec["useful_flops_ratio"] / max(terms.values())
+        if max(terms.values()) > 0
+        else 0.0
+    )
+    return rec, compiled
+
+
+def _model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (fwd-only), N = matmul params."""
+    n = cfg.flops_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for attr in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    if not out:
+        out["repr"] = str(mem)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None, help="directory for per-cell JSON")
+    ap.add_argument("--attn-impl", default="chunked")
+    ap.add_argument("--no-unroll", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                cells.append((a, s, args.mesh == "multi"))
+    else:
+        assert args.arch and args.shape
+        cells.append((args.arch, args.shape, args.mesh == "multi"))
+
+    for arch, shp, multi in cells:
+        key = f"{arch}|{shp}|{'multi' if multi else 'single'}"
+        try:
+            rec, compiled = lower_cell(
+                arch, shp, multi, attn_impl=args.attn_impl, unroll=not args.no_unroll
+            )
+        except Exception as e:  # a failing cell is a bug: report loudly
+            rec = {
+                "arch": arch,
+                "shape": shp,
+                "mesh": "2x16x16" if multi else "16x16",
+                "status": "error",
+                "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-3000:],
+            }
+        if rec["status"] == "ok":
+            print(
+                f"[ok] {key}: compile={rec['compile_s']}s "
+                f"flops/dev={rec['hlo_flops_per_dev']:.3e} "
+                f"bytes/dev={rec['hlo_bytes_per_dev']:.3e} "
+                f"wire/dev={rec['collective_wire_bytes_per_dev']:.3e} "
+                f"bottleneck={rec['bottleneck']} frac={rec['roofline_fraction']:.3f}"
+            )
+            print("  memory_analysis:", rec["memory_analysis"])
+        else:
+            print(f"[{rec['status']}] {key}: {rec.get('why', rec.get('error'))}")
+        if args.out:
+            os.makedirs(args.out, exist_ok=True)
+            fn = f"{arch}__{shp}__{'multi' if multi else 'single'}.json"
+            with open(os.path.join(args.out, fn), "w") as f:
+                json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

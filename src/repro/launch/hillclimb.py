@@ -1,0 +1,101 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf hillclimbing: re-lower a dry-run cell under a named variant and diff
+the roofline terms against baseline.  Each variant encodes one hypothesis
+(EXPERIMENTS.md §Perf records hypothesis -> change -> before -> after).
+
+  python -m repro.launch.hillclimb --arch qwen2-72b --shape train_4k \
+      --variant accum4 --out results/hillclimb
+"""
+
+import argparse
+import json
+
+import jax.numpy as jnp
+
+from repro.launch.dryrun import lower_cell
+
+VARIANTS = {
+    # H-accum: FSDP re-gathers weights once per microbatch; collective term
+    # should scale ~linearly with grad_accum.
+    "baseline": {},
+    "accum8": dict(grad_accum=8),
+    "accum4": dict(grad_accum=4),
+    "accum2": dict(grad_accum=2),
+    "accum1": dict(grad_accum=1),
+    # H-remat: 'dots' keeps matmul outputs, removing recompute flops at the
+    # cost of activation memory (useful_flops_ratio up, memory term up).
+    "remat_dots": dict(cfg_overrides={"remat": "dots"}),
+    "remat_none": dict(cfg_overrides={"remat": "none"}),
+    # H-sp: Megatron-style sequence parallelism — residual stream sharded
+    # over the model axis between blocks; TP psums become (scattered) partial
+    # exchanges, activations 16x smaller on the model axis.
+    "sp": dict(rules_override={"seq": ("model",)}),
+    # H-kv8: int8 KV cache halves decode cache bytes; scales applied to
+    # logits, never to the cache.
+    "kv_int8": dict(kv_dtype=jnp.int8),
+    # H-cf: MoE capacity factor (dispatch padding waste vs drop rate).
+    "moe_cf1": dict(cfg_overrides={"moe_capacity_factor": 1.0}),
+    "moe_cf2": dict(cfg_overrides={"moe_capacity_factor": 2.0}),
+    # H-bf16: bf16 params + fp32 master -> bf16 weight-grad reductions.
+    "bf16master": dict(train_opts={"param_dtype": "bf16"}),
+    # H-rs: pin grads to param sharding -> reduce-scatter instead of AR.
+    "gradrs": dict(train_opts={"grad_reshard": True}),
+    "bf16_rs": dict(train_opts={"param_dtype": "bf16", "grad_reshard": True}),
+    "bf16_rs_accum4": dict(
+        train_opts={"param_dtype": "bf16", "grad_reshard": True}, grad_accum=4
+    ),
+    "bf16_rs_accum1": dict(
+        train_opts={"param_dtype": "bf16", "grad_reshard": True}, grad_accum=1
+    ),
+    # H-dispatch: decode MoE moves tokens, not expert weights (now default
+    # in the decode path; re-lower to measure vs the pre-dispatch baseline).
+    "token_dispatch": dict(),
+    # combos
+    "sp_accum4": dict(grad_accum=4, rules_override={"seq": ("model",)}),
+    "sp_accum1": dict(grad_accum=1, rules_override={"seq": ("model",)}),
+    "sp_accum2": dict(grad_accum=2, rules_override={"seq": ("model",)}),
+    "sp_accum4_dots": dict(
+        grad_accum=4,
+        rules_override={"seq": ("model",)},
+        cfg_overrides={"remat": "dots"},
+    ),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True, choices=sorted(VARIANTS))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--out", default="results/hillclimb")
+    args = ap.parse_args()
+
+    kw = dict(VARIANTS[args.variant])
+    if "train_opts" in kw:
+        topts = dict(kw["train_opts"])
+        if topts.get("param_dtype") == "bf16":
+            topts["param_dtype"] = jnp.bfloat16
+        kw["train_opts"] = topts
+    rec, _ = lower_cell(args.arch, args.shape, args.mesh == "multi", **kw)
+    rec["variant"] = args.variant
+    os.makedirs(args.out, exist_ok=True)
+    fn = f"{args.arch}__{args.shape}__{args.mesh}__{args.variant}.json"
+    with open(os.path.join(args.out, fn), "w") as f:
+        json.dump(rec, f, indent=1)
+    if rec["status"] == "ok":
+        print(
+            f"[{args.variant}] {args.arch}|{args.shape}: "
+            f"compute={rec['compute_term_s']:.3f}s memory={rec['memory_term_s']:.3f}s "
+            f"collective={rec['collective_term_s']:.3f}s useful={rec['useful_flops_ratio']:.2f} "
+            f"frac={rec['roofline_fraction']:.3f} temp={rec['memory_analysis'].get('temp_size_in_bytes', 0)/2**30:.1f}GiB"
+        )
+    else:
+        print(f"[{args.variant}] {rec['status']}: {rec.get('error', rec.get('why'))}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,141 @@
+"""Parse compiled HLO text: collective traffic + op census for the roofline.
+
+cost_analysis() has no collective bytes, so we extract them from the
+partitioned module.  Two conventions are reported:
+
+* ``operand_bytes`` — literal sum of operand sizes per collective (the spec's
+  definition of collective_bytes);
+* ``wire_bytes``    — per-device link traffic under ring algorithms:
+  all-gather -> result bytes (receives everyone's shard),
+  all-reduce -> 2x operand, reduce-scatter / all-to-all / collective-permute
+  -> operand bytes.  The roofline's collective term uses wire_bytes (it is
+  the one proportional to time on the busiest link).
+"""
+
+from __future__ import annotations
+
+import collections
+import re
+
+__all__ = ["analyze_collectives", "op_census", "dtype_bytes"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1, "f8e5m2fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([a-z][a-z0-9\-]*)\(")
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+    "ragged-all-to-all",
+)
+
+
+def dtype_bytes(dt: str) -> float:
+    return _DTYPE_BYTES.get(dt, 4)
+
+
+def _type_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES and not dt[0].isalpha():
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * dtype_bytes(dt)
+    return total
+
+
+def analyze_collectives(hlo_text: str) -> dict:
+    """Returns totals + per-op-kind breakdown from partitioned HLO."""
+    defs: dict[str, str] = {}
+    lines = hlo_text.splitlines()
+    parsed = []
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        name, type_str, opcode = m.groups()
+        defs[name] = type_str
+        parsed.append((name, type_str, opcode, ln))
+
+    per_kind_operand = collections.Counter()
+    per_kind_wire = collections.Counter()
+    per_kind_count = collections.Counter()
+    for name, type_str, opcode, ln in parsed:
+        base = None
+        for c in _COLLECTIVES:
+            if opcode == c or opcode == c + "-start":
+                base = c
+                break
+        if base is None:
+            continue
+        # operand names: inside the call parens, %refs only
+        call = ln.split(opcode + "(", 1)[1]
+        depth, args, cur = 1, [], []
+        for ch in call:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            if ch == "," and depth == 1:
+                args.append("".join(cur).strip())
+                cur = []
+            else:
+                cur.append(ch)
+        if cur:
+            args.append("".join(cur).strip())
+        operand_bytes = 0.0
+        for a in args:
+            a = a.strip().lstrip("%")
+            if a in defs:
+                operand_bytes += _type_bytes(defs[a])
+        result_bytes = _type_bytes(type_str)
+        if opcode.endswith("-start"):
+            # start-op result tuple repeats operand + result; halve it
+            result_bytes = result_bytes / 2.0
+        if base == "all-gather":
+            wire = result_bytes
+        elif base == "all-reduce":
+            wire = 2.0 * operand_bytes
+        else:
+            wire = operand_bytes
+        per_kind_operand[base] += operand_bytes
+        per_kind_wire[base] += wire
+        per_kind_count[base] += 1
+
+    return {
+        "operand_bytes": float(sum(per_kind_operand.values())),
+        "wire_bytes": float(sum(per_kind_wire.values())),
+        "by_kind": {
+            k: {
+                "count": per_kind_count[k],
+                "operand_bytes": float(per_kind_operand[k]),
+                "wire_bytes": float(per_kind_wire[k]),
+            }
+            for k in per_kind_count
+        },
+    }
+
+
+def op_census(hlo_text: str, top: int = 15) -> list[tuple[str, int]]:
+    """Opcode frequency (duplicate fusions/remat show up here)."""
+    counts = collections.Counter()
+    for ln in hlo_text.splitlines():
+        m = _DEF_RE.match(ln)
+        if m:
+            counts[m.group(3)] += 1
+    return counts.most_common(top)

@@ -1,0 +1,33 @@
+"""Production mesh builders.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (required so smoke tests see 1 device while the dry-run
+forces 512 host platform devices).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+__all__ = ["make_production_mesh", "make_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """Single pod: 16x16 = 256 chips (data, model).
+    Multi-pod: 2 pods x 256 = 512 chips (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
+    """jax.make_mesh, tolerant of a device pool larger than the mesh."""
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) == n:
+        return jax.make_mesh(shape, axes)
+    assert len(devs) >= n, f"need {n} devices, have {len(devs)}"
+    return Mesh(np.array(devs[:n]).reshape(shape), axes)

@@ -1,0 +1,66 @@
+"""Batched decode driver: greedy generation over a KV/state cache.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
+      --batch 4 --prompt-len 8 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.models import model as model_mod
+from repro.models import transformer
+
+
+def generate(cfg, params, prompts: np.ndarray, gen: int, *, dtype=jnp.float32):
+    """prompts: [B, P] int32. Greedy decode; prompt fed token by token."""
+    B, P = prompts.shape
+    max_len = P + gen
+    cache = transformer.init_cache(cfg, B, max_len, dtype)
+    serve = jax.jit(model_mod.make_serve_step(cfg, None, compute_dtype=dtype))
+    tok = jnp.asarray(prompts[:, :1])
+    out = [np.asarray(tok)]
+    logits = None
+    for pos in range(max_len - 1):
+        logits, cache = serve(params, cache, tok, jnp.int32(pos))
+        if pos + 1 < P:
+            tok = jnp.asarray(prompts[:, pos + 1 : pos + 2])  # teacher-force prompt
+        else:
+            tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)[:, None]  # greedy
+        out.append(np.asarray(tok))
+    return np.concatenate(out, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    assert cfg.kind != "encoder", "encoder archs have no decode step"
+    params, _ = transformer.init_params(jax.random.key(args.seed), cfg)
+    rng = np.random.default_rng(args.seed)
+    prompts = rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)).astype(np.int32)
+
+    t0 = time.perf_counter()
+    seqs = generate(cfg, params, prompts, args.gen)
+    dt = time.perf_counter() - t0
+    total_tokens = args.batch * (args.prompt_len + args.gen)
+    print(f"arch={cfg.name} generated {seqs.shape} in {dt:.2f}s "
+          f"({total_tokens / dt:.1f} tok/s incl. compile)")
+    print("first sequence:", seqs[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

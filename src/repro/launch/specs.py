@@ -1,0 +1,119 @@
+"""Input ShapeDtypeStructs + shardings for every (arch x shape) cell.
+
+``input_specs()`` returns weak-type-correct stand-ins (no allocation) for
+every model input; the shardings come from the same logical-axis rules the
+params use.  Shape-specific rule overrides:
+
+* ``long_500k`` (batch=1): activations can't shard on batch -> KV cache
+  shards its *sequence* dim over the data axis (sequence parallelism), and
+  batch falls back to replicated via the divisibility rule.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeSpec
+from repro.models import transformer
+from repro.sharding.rules import MeshCtx, logical_to_spec, spec_tree
+
+__all__ = [
+    "make_ctx",
+    "train_input_specs",
+    "train_input_shardings",
+    "serve_input_specs",
+    "serve_input_shardings",
+    "abstract_state_and_shardings",
+]
+
+
+def make_ctx(mesh, cfg: ArchConfig, shape: ShapeSpec) -> MeshCtx:
+    ctx = MeshCtx(mesh=mesh)
+    if shape.kind in ("prefill", "decode"):
+        # Inference: no optimizer state, so dense params fit TP-only —
+        # FSDP-gathering weights every step would be pure collective waste.
+        # Expert weights keep an FSDP axis: MoE volume never fits TP-only
+        # (kimi-k2 = 1T params).  Prefill keeps it on d_model ("embed_e",
+        # gather amortized over ~1M tokens); decode moves it to the expert
+        # d_ff dim ("moe_ff") so weights stay resident and the (tiny) token
+        # batch is dispatched instead (models/moe.py token_dispatch).
+        ctx = ctx.with_rules(embed=())
+    if shape.kind == "decode" and cfg.is_moe:
+        ctx = ctx.with_rules(embed_e=(), moe_ff=("data",))
+    if shape.name == "long_500k":
+        ctx = ctx.with_rules(seq_kv=("data",))
+    # NOTE: decode_32k keeps KV caches batch-sharded only.  Sharding the
+    # cache seq dim looks attractive memory-wise but the per-token
+    # dynamic-update-slice then crosses a sharded dim and the SPMD
+    # partitioner falls back to full rematerialization of the cache
+    # (measured: +36GB temp, +10x flops).  See EXPERIMENTS.md §Perf.
+    return ctx
+
+
+def _token_specs(cfg: ArchConfig, batch: int, seq: int):
+    specs, axes = {}, {}
+    if cfg.frontend == "audio_stub":
+        specs["frames"] = jax.ShapeDtypeStruct((batch, seq, cfg.frontend_dim), jnp.float32)
+        axes["frames"] = ("batch", "seq", None)
+        specs["labels"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+        axes["labels"] = ("batch", "seq")
+    elif cfg.frontend == "vision_stub":
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (batch, cfg.num_patches, cfg.d_model), jnp.float32
+        )
+        axes["patches"] = ("batch", None, None)
+        specs["tokens"] = jax.ShapeDtypeStruct((batch, seq - cfg.num_patches), jnp.int32)
+        axes["tokens"] = ("batch", None)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+        axes["tokens"] = ("batch", "seq")
+    return specs, axes
+
+
+def train_input_specs(cfg: ArchConfig, shape: ShapeSpec):
+    return _token_specs(cfg, shape.global_batch, shape.seq_len)[0]
+
+
+def train_input_shardings(ctx: MeshCtx, cfg: ArchConfig, shape: ShapeSpec):
+    specs, axes = _token_specs(cfg, shape.global_batch, shape.seq_len)
+    return {
+        k: NamedSharding(ctx.mesh, logical_to_spec(ctx, specs[k].shape, axes[k]))
+        for k in specs
+    }
+
+
+def serve_input_specs(cfg: ArchConfig, shape: ShapeSpec, kv_dtype=None):
+    """(cache, tokens, pos) abstract values for decode_step lowering."""
+    dt = kv_dtype if kv_dtype is not None else jnp.bfloat16
+    cache = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, shape.global_batch, shape.seq_len, dt)
+    )
+    tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return cache, tokens, pos
+
+
+def serve_input_shardings(ctx: MeshCtx, cfg: ArchConfig, shape: ShapeSpec, kv_dtype=None):
+    cache, tokens, pos = serve_input_specs(cfg, shape, kv_dtype=kv_dtype)
+    c_axes = transformer.cache_axes(cfg, int8=kv_dtype == jnp.int8)
+    cache_sh = jax.tree.map(
+        lambda x, s: NamedSharding(ctx.mesh, s),
+        cache,
+        spec_tree(ctx, cache, c_axes),
+    )
+    tok_sh = NamedSharding(ctx.mesh, logical_to_spec(ctx, tokens.shape, ("batch", None)))
+    pos_sh = NamedSharding(ctx.mesh, PartitionSpec())
+    return cache_sh, tok_sh, pos_sh
+
+
+def abstract_state_and_shardings(ctx: MeshCtx, cfg: ArchConfig, param_dtype=jnp.float32):
+    """Abstract train state + its NamedSharding tree."""
+    from repro.models import model as model_mod
+    from repro.runtime.elastic import state_shardings
+
+    state = model_mod.abstract_train_state(cfg, param_dtype=param_dtype)
+    axes = transformer.param_axes(cfg)
+    shardings = state_shardings(ctx, state, axes)
+    return state, shardings

@@ -1,0 +1,238 @@
+"""Attention: GQA full/causal/prefix/local variants + KV-cache decode.
+
+Layouts: activations are [B, S, H, hd].  Three implementations:
+
+* ``direct``  — materialized logits (small shapes, oracle).
+* ``chunked`` — lax.scan over KV chunks with online softmax ("flash in HLO"):
+  memory stays O(S * chunk) regardless of sequence length; this is the
+  CPU-compilable stand-in whose HLO memory profile tracks the Pallas kernel.
+* ``flash``   — the Pallas kernel (repro.kernels.flash_attention), TPU target.
+
+Local (sliding-window) attention uses banded chunking — q chunk i attends kv
+chunks {i-1, i} with an exact in-window mask — so HLO flops are O(S * 2W),
+not O(S^2); this is what makes recurrentgemma's 500k-context shapes
+sub-quadratic (DESIGN.md §Arch-applicability: the band is the paper's banded
+test case at the attention level).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention", "decode_attention"]
+
+_NEG = -1e30
+
+
+def _repeat_kv(k: jax.Array, heads: int) -> jax.Array:
+    hk = k.shape[2]
+    if hk == heads:
+        return k
+    return jnp.repeat(k, heads // hk, axis=2)
+
+
+def _mask(qpos, kpos, *, causal, window, prefix_len):
+    qp = qpos[..., :, None]
+    kp = kpos[..., None, :]
+    m = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if causal:
+        m &= kp <= qp
+    if window is not None:
+        m &= kp > qp - window
+    if prefix_len is not None:
+        m |= kp < prefix_len  # prefix-LM: everything sees the prefix
+    return m
+
+
+def _direct(q, k, v, qpos, kpos, *, causal, window, prefix_len, scale):
+    k = _repeat_kv(k, q.shape[2])
+    v = _repeat_kv(v, q.shape[2])
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    logits = logits * scale
+    m = _mask(qpos, kpos, causal=causal, window=window, prefix_len=prefix_len)
+    logits = jnp.where(m[:, None] if m.ndim == 3 else m[None, None], logits, _NEG)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def _chunked(q, k, v, qpos, kpos, *, causal, window, prefix_len, scale, chunk):
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    chunk = min(chunk, Sk)
+    if Sk % chunk:
+        pad = chunk - Sk % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, (0, pad), constant_values=-(10**9))
+        Sk = Sk + pad
+    nk = Sk // chunk
+    k = _repeat_kv(k, H)
+    v = _repeat_kv(v, H)
+    kc = k.reshape(B, nk, chunk, H, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nk, chunk, H, D).transpose(1, 0, 2, 3, 4)
+    kpc = kpos.reshape(nk, chunk)
+
+    def step(carry, xs):
+        m_run, l_run, acc = carry
+        kb, vb, kp = xs
+        logits = jnp.einsum(
+            "bqhd,bkhd->bhqk", q.astype(jnp.float32), kb.astype(jnp.float32)
+        )
+        logits *= scale
+        msk = _mask(qpos, kp, causal=causal, window=window, prefix_len=prefix_len)
+        logits = jnp.where(msk[None, None], logits, _NEG)
+        m_new = jnp.maximum(m_run, logits.max(-1))
+        p = jnp.exp(logits - m_new[..., None])
+        alpha = jnp.exp(m_run - m_new)
+        l_new = l_run * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, H, Sq), _NEG, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    (m_f, l_f, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, kpc))
+    l_f = jnp.where(l_f == 0.0, 1.0, l_f)
+    out = (acc / l_f[..., None]).transpose(0, 2, 1, 3)
+    return out.astype(q.dtype)
+
+
+def _local_banded(q, k, v, *, window, causal, scale):
+    """Sliding-window attention via banded chunking: O(S * 2W) flops."""
+    B, S, H, D = q.shape
+    W = window
+    pad = (-S) % W
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    n = Sp // W
+    k = _repeat_kv(k, H)
+    v = _repeat_kv(v, H)
+    qb = q.reshape(B, n, W, H, D)
+    # kv context for chunk i = chunks [i-1, i] -> width 2W
+    kb = k.reshape(B, n, W, H, D)
+    vb = v.reshape(B, n, W, H, D)
+    k_prev = jnp.pad(kb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    v_prev = jnp.pad(vb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    kctx = jnp.concatenate([k_prev, kb], axis=2)  # [B, n, 2W, H, D]
+    vctx = jnp.concatenate([v_prev, vb], axis=2)
+    logits = jnp.einsum(
+        "bnqhd,bnkhd->bnhqk", qb.astype(jnp.float32), kctx.astype(jnp.float32)
+    )
+    logits *= scale
+    qpos = jnp.arange(n * W).reshape(n, W)
+    # positions of the 2W context for chunk i: (i-1)*W ... (i+1)*W - 1
+    ctx = (jnp.arange(n)[:, None] - 1) * W + jnp.arange(2 * W)[None, :]
+    qp = qpos[:, :, None]
+    kp = ctx[:, None, :]
+    m = (kp >= 0) & (kp > qp - W)
+    if causal:
+        m &= kp <= qp
+    logits = jnp.where(m[None, :, None], logits, _NEG)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bnhqk,bnkhd->bnqhd", p, vctx.astype(jnp.float32))
+    out = out.reshape(B, Sp, H, D)[:, :S]
+    return out.astype(q.dtype)
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    prefix_len: int | None = None,
+    impl: str = "chunked",
+    chunk: int = 512,
+) -> jax.Array:
+    """q: [B, Sq, H, hd]; k, v: [B, Sk, HK, hd] (HK divides H)."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    scale = D**-0.5
+    qpos = jnp.arange(Sq) + (Sk - Sq)
+    kpos = jnp.arange(Sk)
+    if window is not None and prefix_len is None and Sq == Sk and impl != "direct":
+        return _local_banded(q, k, v, window=window, causal=causal, scale=scale)
+    if impl == "flash" and prefix_len is None:
+        from repro.kernels import ops as kops
+
+        qt = q.transpose(0, 2, 1, 3)
+        out = kops.flash_attention(
+            qt, k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3), causal=causal, window=window
+        )
+        return out.transpose(0, 2, 1, 3)
+    if impl == "direct" or Sq * Sk <= 256 * 256:
+        return _direct(
+            q, k, v, qpos, kpos, causal=causal, window=window, prefix_len=prefix_len, scale=scale
+        )
+    return _chunked(
+        q,
+        k,
+        v,
+        qpos,
+        kpos,
+        causal=causal,
+        window=window,
+        prefix_len=prefix_len,
+        scale=scale,
+        chunk=chunk,
+    )
+
+
+def decode_attention(
+    q: jax.Array,
+    cache_k: jax.Array,
+    cache_v: jax.Array,
+    pos: jax.Array,
+    *,
+    window: int | None = None,
+    kpos: jax.Array | None = None,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
+) -> jax.Array:
+    """One-token attention against a KV cache.
+
+    q: [B, 1, H, hd]; cache_k/v: [B, S, HK, hd]; pos: current index (scalar).
+    kpos optionally gives the true position held by each cache slot (ring
+    buffers); negative kpos = never written.  Positions > pos are masked;
+    with window, positions <= pos - window too.
+
+    int8 caches: pass per-(b, s, h) absmax scales; they are applied to the
+    (tiny) logits / probs, never to the (huge) cache, so quantized serving
+    halves cache bytes with no large dequantized temporary.
+    """
+    B, _, H, D = q.shape
+    S = cache_k.shape[1]
+    HK = cache_k.shape[2]
+    G = H // HK
+    # GQA without materializing repeated K/V: group q heads by kv head.
+    # preferred_element_type gives fp32 accumulation without materializing
+    # an fp32 copy of the (huge) cache.
+    qg = q.reshape(B, HK, G, D)
+    kq = cache_k.astype(jnp.bfloat16) if cache_k.dtype == jnp.int8 else cache_k
+    logits = jnp.einsum(
+        "bhgd,bshd->bhgs", qg.astype(kq.dtype), kq, preferred_element_type=jnp.float32
+    )
+    if k_scale is not None:  # [B, S, HK] -> scale logits rows
+        logits = logits * jnp.transpose(k_scale, (0, 2, 1))[:, :, None, :] / 127.0
+    logits *= D**-0.5
+    kpos = jnp.arange(S) if kpos is None else kpos
+    m = (kpos >= 0) & (kpos <= pos)
+    if window is not None:
+        m &= kpos > pos - window
+    logits = jnp.where(m[None, None, None, :], logits, _NEG)
+    p = jax.nn.softmax(logits, axis=-1)
+    if v_scale is not None:
+        p = p * jnp.transpose(v_scale, (0, 2, 1))[:, :, None, :] / 127.0
+    vq = cache_v.astype(jnp.bfloat16) if cache_v.dtype == jnp.int8 else cache_v
+    out = jnp.einsum(
+        "bhgs,bshd->bhgd",
+        p.astype(vq.dtype),
+        vq,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, 1, H, D).astype(q.dtype)

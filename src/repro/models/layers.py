@@ -1,0 +1,145 @@
+"""Shared transformer layers: norms, rotary, MLPs, embeddings.
+
+Parameters are plain nested dicts.  Every init returns ``(params, axes)``
+where ``axes`` mirrors the params tree with a tuple of logical axis names per
+array dim (None = unsharded/replicated).  :mod:`repro.sharding.rules` turns
+logical axes into mesh PartitionSpecs with divisibility fallback.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dense_init",
+    "dense",
+    "norm_init",
+    "apply_norm",
+    "embed_init",
+    "mlp_init",
+    "mlp_apply",
+    "rope",
+]
+
+
+def _normal(key, shape, scale, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * jnp.asarray(scale, dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, axes, *, bias: bool = False, scale=None):
+    scale = scale if scale is not None else d_in**-0.5
+    p = {"w": _normal(key, (d_in, d_out), scale)}
+    a = {"w": axes}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+        a["b"] = (axes[1],)
+    return p, a
+
+
+def dense(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def proj_in_init(key, d: int, heads: int, hd: int, head_axis: str, *, bias=False):
+    """Attention in-projection with explicit head dim: w [d, heads, hd].
+
+    Keeping heads as a real tensor dim lets the sharding rules decide at the
+    HEAD COUNT granularity (e.g. qwen2-0.5b's 14 heads correctly replicate on
+    a 16-way model axis instead of splitting head_dim)."""
+    p = {"w": _normal(key, (d, heads, hd), d**-0.5)}
+    a = {"w": ("embed", head_axis, None)}
+    if bias:
+        p["b"] = jnp.zeros((heads, hd), jnp.float32)
+        a["b"] = (head_axis, None)
+    return p, a
+
+
+def proj_in(p, x):
+    """[..., d] @ [d, H, hd] -> [..., H, hd]."""
+    y = jnp.einsum("...d,dhk->...hk", x, p["w"].astype(x.dtype))
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def proj_out_init(key, heads: int, hd: int, d: int, head_axis: str):
+    p = {"w": _normal(key, (heads, hd, d), (heads * hd) ** -0.5)}
+    a = {"w": (head_axis, None, "embed")}
+    return p, a
+
+
+def proj_out(p, x):
+    """[..., H, hd] @ [H, hd, d] -> [..., d]."""
+    return jnp.einsum("...hk,hkd->...d", x, p["w"].astype(x.dtype))
+
+
+def norm_init(kind: str, d: int):
+    """kind: rmsnorm | layernorm | nonparam_ln (OLMo: no learned params)."""
+    if kind == "nonparam_ln":
+        return {}, {}
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    a = {"scale": ("embed",)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+        a["bias"] = ("embed",)
+    return p, a
+
+
+def apply_norm(kind: str, p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + eps)
+        return (y * p["scale"]).astype(x.dtype)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if kind == "layernorm":
+        y = y * p["scale"] + p["bias"]
+    return y.astype(x.dtype)
+
+
+def embed_init(key, vocab: int, d: int):
+    p = {"table": _normal(key, (vocab, d), 1.0)}
+    a = {"table": ("vocab", "embed")}
+    return p, a
+
+
+def mlp_init(key, d: int, d_ff: int, act: str):
+    """act: silu (SwiGLU), geglu (gated GELU), gelu (plain 2-matrix MLP)."""
+    ks = jax.random.split(key, 3)
+    gated = act in ("silu", "geglu")
+    p, a = {}, {}
+    p["wi"], a["wi"] = _normal(ks[0], (d, d_ff), d**-0.5), ("embed", "mlp")
+    if gated:
+        p["wg"], a["wg"] = _normal(ks[1], (d, d_ff), d**-0.5), ("embed", "mlp")
+    p["wo"], a["wo"] = _normal(ks[2], (d_ff, d), d_ff**-0.5), ("mlp", "embed")
+    return p, a
+
+
+def mlp_apply(p, x, act: str):
+    h = x @ p["wi"].astype(x.dtype)
+    if act == "silu":
+        h = jax.nn.silu(h) * (x @ p["wg"].astype(x.dtype))
+    elif act == "geglu":
+        h = jax.nn.gelu(h) * (x @ p["wg"].astype(x.dtype))
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["wo"].astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 1e4) -> jax.Array:
+    """Rotary embedding. x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., seq, half]
+    cos = jnp.cos(ang)[..., None, :]  # [..., seq, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)

@@ -1,0 +1,277 @@
+"""Mixture-of-Experts with expert parallelism — the paper's technique in LMs.
+
+A dropless-ish MoE FFN *is* a block-sparse matrix multiply (MegaBlocks): the
+token-by-expert dispatch pattern is exactly a quadtree-style block structure
+known only at run time, and the expert GEMMs are the grouped block products
+our Pallas kernel executes.  Mapping onto the mesh:
+
+* activations are data-parallel over (pod, data) and **replicated along the
+  model axis**; experts are sharded over the model axis (EP).
+* the layer runs under shard_map: each device routes its local tokens,
+  selects the pairs destined to *its* experts (sort-based, capacity-bounded,
+  static shapes), runs the expert FFN, and psums partial outputs over the
+  model axis — the same all-reduce a TP MLP would pay, so EP costs no extra
+  collective class.
+* expert GEMM path: batched einsum (XLA) or the grouped block_spmm kernel
+  with trivially-grouped tasks (one per expert) — ``gemm_impl``.
+
+Capacity: Ce = ceil(T_local * top_k * capacity_factor / E).  Overflowing
+pairs are dropped (standard capacity-factor semantics); the combine step
+renormalizes surviving gates.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .layers import _normal
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(key, d: int, d_ff: int, num_experts: int, act: str):
+    ks = jax.random.split(key, 4)
+    gated = act in ("silu", "geglu")
+    p = {
+        "router": _normal(ks[0], (d, num_experts), d**-0.5),
+        "w1": _normal(ks[1], (num_experts, d, d_ff), d**-0.5),
+        "w2": _normal(ks[3], (num_experts, d_ff, d), d_ff**-0.5),
+    }
+    a = {
+        "router": ("embed", None),
+        "w1": ("expert", "embed_e", "moe_ff"),
+        "w2": ("expert", "moe_ff", "embed_e"),
+    }
+    if gated:
+        p["wg"] = _normal(ks[2], (num_experts, d, d_ff), d**-0.5)
+        a["wg"] = ("expert", "embed_e", "moe_ff")
+    return p, a
+
+
+def _expert_ffn(xe, w1, wg, w2, act: str, gemm_impl: str):
+    """xe: [E_l, Ce, D]; w1: [E_l, D, F].  Batched expert GEMMs."""
+    mm = functools.partial(_grouped_mm, gemm_impl=gemm_impl)
+    h = mm(xe, w1)
+    if act == "silu":
+        h = jax.nn.silu(h) * mm(xe, wg)
+    elif act == "geglu":
+        h = jax.nn.gelu(h) * mm(xe, wg)
+    else:
+        h = jax.nn.gelu(h)
+    return mm(h.astype(xe.dtype), w2)
+
+
+def _grouped_mm(x, w, *, gemm_impl: str):
+    """[E, M, K] x [E, K, N] -> [E, M, N] via einsum or the paper's kernel."""
+    if gemm_impl == "block_spmm":
+        from repro.kernels import ops as kops
+
+        E = x.shape[0]
+        idx = jnp.arange(E, dtype=jnp.int32)
+        return kops.block_spmm(x, w.astype(x.dtype), idx, idx, idx, E).astype(x.dtype)
+    return jnp.einsum("emk,ekn->emn", x, w.astype(x.dtype))
+
+
+def _moe_local(
+    x,
+    router,
+    w1,
+    wg,
+    w2,
+    *,
+    e_base,
+    num_experts,
+    top_k,
+    capacity,
+    act,
+    gemm_impl,
+):
+    """Per-device MoE over local tokens and local experts.
+
+    x: [B_l, S, D]; w1: [E_l, D, F].  Returns the partial output from local
+    experts (to be psum'd over the model axis).
+    """
+    B, S, D = x.shape
+    E_l = w1.shape[0]
+    T = B * S
+    xf = x.reshape(T, D)
+    logits = (xf @ router.astype(xf.dtype)).astype(jnp.float32)  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, top_k)  # [T, k]
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    pe = eidx.reshape(-1)  # [T*k] expert id per pair
+    pt = jnp.repeat(jnp.arange(T, dtype=jnp.int32), top_k)
+    pg = gates.reshape(-1)
+
+    # rank of each pair within its expert (stable arrival order)
+    order = jnp.argsort(pe, stable=True)
+    sorted_e = pe[order]
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    rank_sorted = jnp.arange(T * top_k, dtype=jnp.int32) - first.astype(jnp.int32)
+    rank = jnp.zeros((T * top_k,), jnp.int32).at[order].set(rank_sorted)
+
+    mine = (pe >= e_base) & (pe < e_base + E_l)
+    valid = mine & (rank < capacity)
+    slot = jnp.where(valid, (pe - e_base) * capacity + rank, E_l * capacity)
+
+    # dispatch: slot -> token index (pad rows read a zero token)
+    disp = jnp.full((E_l * capacity + 1,), T, jnp.int32).at[slot].set(
+        jnp.where(valid, pt, T)
+    )[:-1]
+    comb_gate = jnp.zeros((E_l * capacity + 1,), jnp.float32).at[slot].set(
+        jnp.where(valid, pg, 0.0)
+    )[:-1]
+    x_pad = jnp.concatenate([xf, jnp.zeros((1, D), xf.dtype)], axis=0)
+    xe = x_pad[disp].reshape(E_l, capacity, D)
+
+    ye = _expert_ffn(xe, w1, wg, w2, act, gemm_impl)  # [E_l, Ce, D]
+
+    ye_flat = ye.reshape(E_l * capacity, D) * comb_gate[:, None].astype(ye.dtype)
+    out = jax.ops.segment_sum(ye_flat, disp, num_segments=T + 1)[:T]
+    return out.reshape(B, S, D).astype(x.dtype)
+
+
+def moe_apply(
+    p,
+    x,
+    ctx,
+    *,
+    num_experts: int,
+    top_k: int,
+    act: str,
+    capacity_factor: float = 1.25,
+    gemm_impl: str = "einsum",
+    dropless: bool = False,
+    token_dispatch: bool = False,
+):
+    """x: [B, S, D] (dp-sharded, replicated over model axis).
+
+    dropless=True sets capacity to the worst case (every token's top-k hits
+    the same expert => cap = local token count): no pair is ever dropped.
+    Used at decode time, where token counts are tiny and drops would skew
+    generation; training keeps the classic capacity factor.
+    """
+    wg = p.get("wg")
+
+    def _cap(Tl):
+        if dropless:
+            return Tl
+        return max(1, math.ceil(Tl * top_k * capacity_factor / num_experts))
+
+    if ctx is None or ctx.tp_axis is None or num_experts % ctx.tp_size() != 0:
+        # single-device / no-EP fallback: all experts local
+        Tl = x.shape[0] * x.shape[1]
+        cap = _cap(Tl)
+        return _moe_local(
+            x,
+            p["router"],
+            p["w1"],
+            wg if wg is not None else p["w1"],
+            p["w2"],
+            e_base=0,
+            num_experts=num_experts,
+            top_k=top_k,
+            capacity=cap,
+            act=act,
+            gemm_impl=gemm_impl,
+        )
+
+    tp = ctx.tp_axis
+    tp_size = ctx.tp_size()
+    dp = ctx.dp_axes
+    E_l = num_experts // tp_size
+    dp_size = int(np.prod([ctx.axis_sizes[a] for a in dp])) if dp else 1
+    B = x.shape[0]
+    wg_in = wg if wg is not None else p["w1"][:, :, :0]
+
+    if (
+        token_dispatch
+        and dp
+        and B % dp_size == 0
+        and p["w1"].shape[-1] % dp_size == 0
+    ):
+        # ---- decode dispatch mode: move tokens (KB), not weights (GB) ----
+        # Expert weights stay fully resident, F-dim sharded over the data
+        # axes; the (tiny) decode batch is all-gathered so every device
+        # serves its own experts' F-slice, then one psum over the whole mesh
+        # recombines.  Replaces the per-token FSDP gather of expert weights.
+        B_l = B // dp_size
+        T_full = B * x.shape[1]
+
+        def body_dispatch(x_l, router, w1_l, wg_l, w2_l):
+            xg = jax.lax.all_gather(x_l, dp, axis=0, tiled=True)  # [B, 1, D]
+            e_base = jax.lax.axis_index(tp) * E_l
+            out = _moe_local(
+                xg,
+                router,
+                w1_l,
+                wg_l,
+                w2_l,
+                e_base=e_base,
+                num_experts=num_experts,
+                top_k=top_k,
+                capacity=T_full,  # dropless at decode scale
+                act=act,
+                gemm_impl=gemm_impl,
+            )
+            out = jax.lax.psum(out, (tp, *dp))
+            # slice back this device's batch rows
+            idx = jax.lax.axis_index(dp[0])
+            for a in dp[1:]:
+                idx = idx * ctx.axis_sizes[a] + jax.lax.axis_index(a)
+            return jax.lax.dynamic_slice_in_dim(out, idx * B_l, B_l, axis=0)
+
+        return jax.shard_map(
+            body_dispatch,
+            mesh=ctx.mesh,
+            in_specs=(
+                P(dp, None, None),
+                P(None, None),
+                P(tp, None, dp),
+                P(tp, None, dp),
+                P(tp, dp, None),
+            ),
+            out_specs=P(dp, None, None),
+            check_vma=False,
+        )(x, p["router"], p["w1"], wg_in, p["w2"])
+
+    Tl = (B // max(dp_size, 1)) * x.shape[1]
+    cap = _cap(Tl)
+
+    def body(x_l, router, w1, wg_l, w2):
+        e_base = jax.lax.axis_index(tp) * E_l
+        out = _moe_local(
+            x_l,
+            router,
+            w1,
+            wg_l,
+            w2,
+            e_base=e_base,
+            num_experts=num_experts,
+            top_k=top_k,
+            capacity=cap,
+            act=act,
+            gemm_impl=gemm_impl,
+        )
+        return jax.lax.psum(out, tp)
+
+    return jax.shard_map(
+        body,
+        mesh=ctx.mesh,
+        in_specs=(
+            P(dp, None, None),
+            P(None, None),
+            P(tp, None, None),
+            P(tp, None, None),
+            P(tp, None, None),
+        ),
+        out_specs=P(dp, None, None),
+        check_vma=False,
+    )(x, p["router"], p["w1"], wg_in, p["w2"])

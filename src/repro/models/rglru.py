@@ -1,0 +1,126 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence:  r_t = sigmoid(W_r u_t);  i_t = sigmoid(W_i u_t)
+             a_t = exp(-c * softplus(Lambda) * r_t)        (c = 8)
+             h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t u_t)
+
+Training/prefill uses a parallel associative scan over time (TPU-friendly:
+log-depth, no sequential loop); decode keeps h as O(1) state.  Gate weights
+are block-diagonal per head, as in Griffin.  The surrounding recurrent block
+is: linear-in (2 branches) -> causal depthwise conv (w=4) -> RG-LRU ->
+gated merge -> linear-out.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _normal
+
+__all__ = ["rglru_block_init", "rglru_block_apply", "rglru_decode_step", "rglru_init_state"]
+
+_C = 8.0
+_CONV_W = 4
+
+
+def rglru_block_init(key, d: int, heads: int):
+    ks = jax.random.split(key, 7)
+    dh = d // heads
+    p = {
+        "w_in_x": _normal(ks[0], (d, d), d**-0.5),
+        "w_in_g": _normal(ks[1], (d, d), d**-0.5),
+        "conv": _normal(ks[2], (_CONV_W, d), 0.1),
+        "w_r": _normal(ks[3], (heads, dh, dh), dh**-0.5),
+        "w_i": _normal(ks[4], (heads, dh, dh), dh**-0.5),
+        # Lambda parametrized so a ~ U(0.9, 0.999) at r = 1
+        "lam": jnp.log(jnp.expm1(-jnp.log(jnp.linspace(0.9, 0.999, d)) / _C)).astype(
+            jnp.float32
+        ),
+        "w_out": _normal(ks[5], (d, d), d**-0.5),
+    }
+    a = {
+        "w_in_x": ("embed", "rnn"),
+        "w_in_g": ("embed", "rnn"),
+        "conv": (None, "rnn"),
+        "w_r": ("heads", None, None),
+        "w_i": ("heads", None, None),
+        "lam": ("rnn",),
+        "w_out": ("rnn", "embed"),
+    }
+    return p, a
+
+
+def _gates(p, u, heads):
+    B, S, D = u.shape
+    dh = D // heads
+    uh = u.reshape(B, S, heads, dh)
+    r = jax.nn.sigmoid(jnp.einsum("bshd,hde->bshe", uh, p["w_r"].astype(u.dtype)))
+    i = jax.nn.sigmoid(jnp.einsum("bshd,hde->bshe", uh, p["w_i"].astype(u.dtype)))
+    return r.reshape(B, S, D), i.reshape(B, S, D)
+
+
+def _conv_causal(w, x, tail=None):
+    """Depthwise causal conv, width 4.  tail: [B, 3, D] previous inputs."""
+    if tail is None:
+        shifted = [x]
+        for j in range(1, _CONV_W):
+            shifted.append(jnp.pad(x, ((0, 0), (j, 0), (0, 0)))[:, : x.shape[1]])
+    else:
+        ctx = jnp.concatenate([tail, x], axis=1)  # [B, 3 + S, D]
+        shifted = [ctx[:, _CONV_W - 1 - j : ctx.shape[1] - j] for j in range(_CONV_W)]
+        shifted[0] = x
+    out = sum(w[j].astype(x.dtype) * s for j, s in enumerate(shifted))
+    return out
+
+
+def _rglru_scan(p, u, heads, h0=None):
+    """Parallel scan over time. u: [B, S, D] -> y, h_last."""
+    r, i = _gates(p, u, heads)
+    log_a = -_C * jax.nn.softplus(p["lam"]).astype(jnp.float32) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * (
+        i.astype(jnp.float32) * u.astype(jnp.float32)
+    )
+    if h0 is not None:  # fold initial state into step 0
+        gated = gated.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h.astype(u.dtype), h[:, -1]
+
+
+def rglru_block_apply(p, x, *, heads: int):
+    """Full block: [B, S, D] -> [B, S, D]."""
+    u = x @ p["w_in_x"].astype(x.dtype)
+    g = jax.nn.gelu(x @ p["w_in_g"].astype(x.dtype))
+    u = _conv_causal(p["conv"], u)
+    y, _ = _rglru_scan(p, u, heads)
+    return (y * g) @ p["w_out"].astype(x.dtype)
+
+
+def rglru_init_state(batch: int, d: int, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "conv": jnp.zeros((batch, _CONV_W - 1, d), dtype),
+    }
+
+
+def rglru_decode_step(p, x, state, *, heads: int):
+    """One-token step. x: [B, 1, D] -> (y, new_state)."""
+    u = x @ p["w_in_x"].astype(x.dtype)
+    g = jax.nn.gelu(x @ p["w_in_g"].astype(x.dtype))
+    conv_tail = state["conv"]
+    u_c = _conv_causal(p["conv"], u, tail=conv_tail)
+    new_tail = jnp.concatenate([conv_tail[:, 1:], u], axis=1)
+    r, i = _gates(p, u_c, heads)
+    a = jnp.exp(-_C * jax.nn.softplus(p["lam"]) * r[:, 0].astype(jnp.float32))
+    h = a * state["h"] + jnp.sqrt(jnp.maximum(1 - a**2, 1e-12)) * (
+        i[:, 0].astype(jnp.float32) * u_c[:, 0].astype(jnp.float32)
+    )
+    y = (h.astype(x.dtype)[:, None] * g) @ p["w_out"].astype(x.dtype)
+    return y, {"h": h, "conv": new_tail}

@@ -1,0 +1,180 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060).
+
+The SSD chunked algorithm is itself a block-banded matrix computation (a
+semiseparable matrix product): intra-chunk terms are dense bs x bs blocks on
+the diagonal band, inter-chunk terms flow through a rank-N state — the same
+"exploit block structure, skip zero blocks" insight the paper applies to
+quadtrees (DESIGN.md §Arch-applicability).
+
+Block layout (mamba2): in_proj -> [z (gate), x, B, C, dt]; causal depthwise
+conv (w=4) on (x, B, C); SSD; gated RMSNorm; out_proj.  Decode carries the
+[B, H, P, N] state plus the conv tail: O(1) per token, which is what makes
+the 500k-context decode shape runnable.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _normal, apply_norm
+
+__all__ = ["ssd_block_init", "ssd_block_apply", "ssd_decode_step", "ssd_init_state"]
+
+_CONV_W = 4
+
+
+def ssd_block_init(key, d: int, *, d_inner: int, heads: int, d_state: int):
+    ks = jax.random.split(key, 5)
+    hp = d_inner // heads  # head dim P
+    conv_dim = d_inner + 2 * d_state
+    p = {
+        "in_proj": _normal(
+            ks[0], (d, 2 * d_inner + 2 * d_state + heads), d**-0.5
+        ),
+        "conv": _normal(ks[1], (_CONV_W, conv_dim), 0.1),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, heads)).astype(jnp.float32),
+        "d_skip": jnp.ones((heads,), jnp.float32),
+        "dt_bias": jnp.zeros((heads,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": _normal(ks[2], (d_inner, d), d_inner**-0.5),
+    }
+    a = {
+        "in_proj": ("embed", "rnn"),
+        "conv": (None, None),
+        "a_log": ("heads",),
+        "d_skip": ("heads",),
+        "dt_bias": ("heads",),
+        "norm_scale": ("rnn",),
+        "out_proj": ("rnn", "embed"),
+    }
+    return p, a
+
+
+def _split_proj(p, x, d_inner, d_state, heads):
+    proj = x @ p["in_proj"].astype(x.dtype)
+    z, xs, B, C, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + d_state, 2 * d_inner + 2 * d_state], -1
+    )
+    return z, xs, B, C, dt
+
+
+def _conv(w, u, tail=None):
+    if tail is None:
+        shifted = [u] + [
+            jnp.pad(u, ((0, 0), (j, 0), (0, 0)))[:, : u.shape[1]] for j in range(1, _CONV_W)
+        ]
+    else:
+        ctx = jnp.concatenate([tail, u], axis=1)
+        shifted = [ctx[:, _CONV_W - 1 - j : ctx.shape[1] - j] for j in range(_CONV_W)]
+        shifted[0] = u
+    return jax.nn.silu(sum(w[j].astype(u.dtype) * s for j, s in enumerate(shifted)))
+
+
+def _segsum(x):
+    """log-space cumulative segment sums: out[..., i, j] = sum_{j<k<=i} x[k]."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, -1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(xh, dt, a_log, Bm, Cm, *, chunk: int):
+    """SSD over chunks.  xh: [B, S, H, P]; dt: [B, S, H]; Bm/Cm: [B, S, N].
+
+    Returns y [B, S, H, P] and final state [B, H, P, N].
+    """
+    Bsz, S, H, Pd = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+    A = -jnp.exp(a_log)  # [H] negative
+    dtA = dt * A  # [B, S, H]
+    xt = (xh * dt[..., None]).reshape(Bsz, nc, Q, H, Pd)
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+    dA = dtA.reshape(Bsz, nc, Q, H).transpose(0, 3, 1, 2)  # [B, H, nc, Q]
+    dA_cs = jnp.cumsum(dA, -1)
+
+    # intra-chunk (block-diagonal band): L = exp(segsum(dA))
+    L = jnp.exp(_segsum(dA))  # [B, H, nc, Q, Q]
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", Cc, Bc, L, xt)
+
+    # chunk states: decay to end of chunk
+    decay_states = jnp.exp(dA_cs[..., -1:] - dA_cs)  # [B, H, nc, Q]
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", Bc, decay_states, xt)
+
+    # inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(dA_cs[..., -1])  # [B, H, nc]
+
+    def step(h, inp):
+        dec, s = inp  # dec: [B, H]; s: [B, H, P, N]
+        h_new = h * dec[..., None, None] + s
+        return h_new, h
+
+    h0 = jnp.zeros((Bsz, H, Pd, N), jnp.float32)
+    _, prev_states = jax.lax.scan(
+        step,
+        h0,
+        (chunk_decay.transpose(2, 0, 1), states.transpose(1, 0, 2, 3, 4).astype(jnp.float32)),
+    )
+    # prev_states[c] = state entering chunk c
+    final_state, _ = step(
+        prev_states[-1], (chunk_decay[..., -1], states[:, -1].astype(jnp.float32))
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # [B, nc, H, P, N]
+
+    decay_out = jnp.exp(dA_cs)  # [B, H, nc, Q]
+    y_off = jnp.einsum(
+        "bcln,bhcl,bchpn->bclhp", Cc, decay_out, prev_states.astype(Cc.dtype)
+    )
+    y = (y_diag + y_off).reshape(Bsz, S, H, Pd)
+    return y, final_state
+
+
+def ssd_block_apply(p, x, *, d_inner: int, heads: int, d_state: int, chunk: int = 128):
+    B, S, D = x.shape
+    Pd = d_inner // heads
+    z, xs, Bm, Cm, dt = _split_proj(p, x, d_inner, d_state, heads)
+    conv_in = jnp.concatenate([xs, Bm, Cm], -1)
+    conv_out = _conv(p["conv"], conv_in)
+    xs, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + d_state], -1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B, S, H]
+    xh = xs.reshape(B, S, heads, Pd)
+    y, _ = ssd_chunked(xh.astype(jnp.float32), dt, p["a_log"], Bm.astype(jnp.float32), Cm.astype(jnp.float32), chunk=chunk)
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = apply_norm("rmsnorm", {"scale": p["norm_scale"]}, y * jax.nn.silu(z))
+    return y @ p["out_proj"].astype(x.dtype)
+
+
+def ssd_init_state(batch: int, *, d_inner: int, heads: int, d_state: int, dtype=jnp.float32):
+    Pd = d_inner // heads
+    return {
+        "h": jnp.zeros((batch, heads, Pd, d_state), jnp.float32),
+        "conv": jnp.zeros((batch, _CONV_W - 1, d_inner + 2 * d_state), dtype),
+    }
+
+
+def ssd_decode_step(p, x, state, *, d_inner: int, heads: int, d_state: int):
+    """One-token recurrent step.  x: [B, 1, D]."""
+    B = x.shape[0]
+    Pd = d_inner // heads
+    z, xs, Bm, Cm, dt = _split_proj(p, x, d_inner, d_state, heads)
+    conv_in = jnp.concatenate([xs, Bm, Cm], -1)
+    conv_out = _conv(p["conv"], conv_in, tail=state["conv"])
+    new_tail = jnp.concatenate([state["conv"][:, 1:], conv_in], axis=1)
+    xs, Bm, Cm = jnp.split(conv_out[:, 0], [d_inner, d_inner + d_state], -1)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B, H]
+    A = -jnp.exp(p["a_log"])
+    dec = jnp.exp(dt * A)  # [B, H]
+    xh = xs.reshape(B, heads, Pd).astype(jnp.float32)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, xh, Bm.astype(jnp.float32))
+    h = state["h"] * dec[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", h, Cm.astype(jnp.float32))
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(B, 1, d_inner).astype(x.dtype)
+    y = apply_norm("rmsnorm", {"scale": p["norm_scale"]}, y * jax.nn.silu(z))
+    return y @ p["out_proj"].astype(x.dtype), {"h": h, "conv": new_tail}

@@ -1,0 +1,506 @@
+"""Model assembly: decoder / encoder / VLM / hybrid / SSM from ArchConfig.
+
+Layers are grouped by the repeating block pattern and scanned over pattern
+periods (stacked params, compact HLO — SPMD partitions one period body).
+Pattern remainder layers are unrolled at the end.  Decode carries a cache
+pytree with the same period structure.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.sharding.rules import constrain
+
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import rglru as rec_mod
+from . import ssd as ssm_mod
+from .layers import (
+    apply_norm,
+    dense,
+    dense_init,
+    embed_init,
+    mlp_apply,
+    mlp_init,
+    norm_init,
+    proj_in,
+    proj_in_init,
+    proj_out,
+    proj_out_init,
+    rope,
+)
+
+__all__ = ["init_params", "param_axes", "apply", "init_cache", "decode_step"]
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+
+def _block_init(key, cfg: ArchConfig, kind: str):
+    ks = jax.random.split(key, 8)
+    p, a = {}, {}
+    p["ln1"], a["ln1"] = norm_init(cfg.norm, cfg.d_model)
+    if kind in ("attn", "local"):
+        hd = cfg.hd
+        p["q"], a["q"] = proj_in_init(
+            ks[0], cfg.d_model, cfg.num_heads, hd, "heads", bias=cfg.qkv_bias
+        )
+        p["k"], a["k"] = proj_in_init(
+            ks[1], cfg.d_model, cfg.num_kv_heads, hd, "kv_heads", bias=cfg.qkv_bias
+        )
+        p["v"], a["v"] = proj_in_init(
+            ks[2], cfg.d_model, cfg.num_kv_heads, hd, "kv_heads", bias=cfg.qkv_bias
+        )
+        p["o"], a["o"] = proj_out_init(ks[3], cfg.num_heads, hd, cfg.d_model, "heads")
+    elif kind == "rec":
+        p["mix"], a["mix"] = rec_mod.rglru_block_init(ks[0], cfg.d_model, cfg.num_heads)
+    elif kind == "ssm":
+        p["mix"], a["mix"] = ssm_mod.ssd_block_init(
+            ks[0], cfg.d_model, d_inner=cfg.d_inner, heads=cfg.ssm_heads, d_state=cfg.ssm_state
+        )
+        return p, a  # mamba block: norm + mixer only, no separate MLP
+    p["ln2"], a["ln2"] = norm_init(cfg.norm, cfg.d_model)
+    if cfg.is_moe and kind in ("attn", "local"):
+        p["moe"], a["moe"] = moe_mod.moe_init(
+            ks[4], cfg.d_model, cfg.d_ff, cfg.num_experts, cfg.mlp_act
+        )
+    else:
+        p["mlp"], a["mlp"] = mlp_init(ks[4], cfg.d_model, cfg.d_ff, cfg.mlp_act)
+    return p, a
+
+
+def _prepend_layers_axis(axes):
+    return jax.tree.map(
+        lambda ax: ("layers", *ax), axes, is_leaf=lambda x: isinstance(x, tuple)
+    )
+
+
+def _pattern_layout(cfg: ArchConfig):
+    pattern = cfg.block_pattern
+    periods = cfg.num_layers // len(pattern)
+    rem = cfg.num_layers % len(pattern)
+    return pattern, periods, rem
+
+
+def init_params(key, cfg: ArchConfig):
+    """Returns (params, axes) — axes mirrors params with logical axis names."""
+    pattern, periods, rem = _pattern_layout(cfg)
+    keys = jax.random.split(key, 8)
+    p, a = {}, {}
+    p["embed"], a["embed"] = embed_init(keys[0], cfg.vocab_size, cfg.d_model)
+    if cfg.frontend == "audio_stub":
+        p["frontend"], a["frontend"] = dense_init(
+            keys[1], cfg.frontend_dim, cfg.d_model, ("embed", None)
+        )
+    blocks_p, blocks_a = {}, {}
+    for pos, kind in enumerate(pattern):
+        kpos = jax.random.fold_in(keys[2], pos)
+        ks = jax.random.split(kpos, periods)
+        blocks_p[f"p{pos}"] = jax.vmap(lambda k: _block_init(k, cfg, kind)[0])(ks)
+        blocks_a[f"p{pos}"] = _prepend_layers_axis(_block_init(kpos, cfg, kind)[1])
+    p["blocks"], a["blocks"] = blocks_p, blocks_a
+    tail_p, tail_a = [], []
+    for i in range(rem):
+        kind = pattern[i % len(pattern)]
+        tp, ta = _block_init(jax.random.fold_in(keys[3], i), cfg, kind)
+        tail_p.append(tp)
+        tail_a.append(ta)
+    if tail_p:
+        p["tail"], a["tail"] = tail_p, tail_a
+    p["final_norm"], a["final_norm"] = norm_init(
+        cfg.norm if cfg.norm != "nonparam_ln" else "rmsnorm", cfg.d_model
+    )
+    if not cfg.tie_embeddings:
+        p["head"], a["head"] = dense_init(
+            keys[4], cfg.d_model, cfg.vocab_size, ("embed", "vocab")
+        )
+    return p, a
+
+
+def abstract_params(cfg: ArchConfig):
+    """(ShapeDtypeStruct params, axes) without materializing any array.
+
+    init runs under eval_shape (tracers, no flops); the axes tree — pure
+    python, key-independent — is captured via a side channel.
+    """
+    box = {}
+
+    def f(key):
+        p, a = init_params(key, cfg)
+        box["axes"] = a
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.key(0))
+    return shapes, box["axes"]
+
+
+def param_axes(cfg: ArchConfig):
+    return abstract_params(cfg)[1]
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+
+def _sinusoidal(S: int, D: int, dtype):
+    pos = np.arange(S)[:, None]
+    i = np.arange(D // 2)[None, :]
+    ang = pos / (10000 ** (2 * i / D))
+    pe = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(pe, dtype)
+
+
+def _apply_block(
+    p,
+    x,
+    cfg: ArchConfig,
+    ctx,
+    kind: str,
+    *,
+    positions,
+    prefix_len=None,
+    attn_impl="chunked",
+):
+    B, S, D = x.shape
+    h = apply_norm(cfg.norm, p["ln1"], x)
+    if kind in ("attn", "local"):
+        q = proj_in(p["q"], h)  # [B, S, H, hd]
+        k = proj_in(p["k"], h)
+        v = proj_in(p["v"], h)
+        if cfg.positions == "rope":
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+        q = constrain(ctx, q, "batch", "seq", "heads", None)
+        out = attn_mod.attention(
+            q,
+            k,
+            v,
+            causal=cfg.kind != "encoder",
+            window=cfg.window if kind == "local" else None,
+            prefix_len=prefix_len,
+            impl=attn_impl,
+        )
+        mixed = proj_out(p["o"], out)
+    elif kind == "rec":
+        mixed = rec_mod.rglru_block_apply(p["mix"], h, heads=cfg.num_heads)
+    elif kind == "ssm":
+        mixed = ssm_mod.ssd_block_apply(
+            p["mix"], h, d_inner=cfg.d_inner, heads=cfg.ssm_heads, d_state=cfg.ssm_state
+        )
+        return x + mixed  # mamba block has no separate MLP
+    x = x + mixed
+    x = constrain(ctx, x, "batch", "seq", None)
+    h2 = apply_norm(cfg.norm, p["ln2"], x)
+    if cfg.is_moe and kind in ("attn", "local"):
+        ff = moe_mod.moe_apply(
+            p["moe"],
+            h2,
+            ctx,
+            num_experts=cfg.num_experts,
+            top_k=cfg.top_k,
+            act=cfg.mlp_act,
+            capacity_factor=cfg.moe_capacity_factor,
+        )
+    else:
+        ff = mlp_apply(p["mlp"], h2, cfg.mlp_act)
+    return x + ff
+
+
+def _embed_inputs(p, cfg: ArchConfig, inputs, ctx):
+    table = p["embed"]["table"]
+    if cfg.frontend == "audio_stub":
+        x = dense(p["frontend"], inputs["frames"])
+    elif cfg.frontend == "vision_stub":
+        tok = table[inputs["tokens"]]
+        x = jnp.concatenate([inputs["patches"].astype(tok.dtype), tok], axis=1)
+    else:
+        x = table[inputs["tokens"]]
+    if cfg.positions == "sinusoidal":
+        x = x + _sinusoidal(x.shape[1], cfg.d_model, x.dtype)[None]
+    return constrain(ctx, x, "batch", "seq", None)
+
+
+def _head(p, cfg: ArchConfig, x, ctx):
+    if cfg.tie_embeddings and "head" not in p:
+        logits = x @ p["embed"]["table"].T.astype(x.dtype)
+    else:
+        logits = dense(p["head"], x)
+    return constrain(ctx, logits, "batch", "seq", "vocab")
+
+
+def apply(
+    params,
+    cfg: ArchConfig,
+    ctx,
+    inputs,
+    *,
+    attn_impl: str = "chunked",
+    unroll: bool = False,
+):
+    """Full forward -> logits [B, S, vocab].
+
+    unroll=True replaces the layer scan with a python loop (identical math;
+    used by the dry-run so cost_analysis counts every period, since XLA's
+    HloCostAnalysis does not multiply while-loop bodies by trip count).
+    """
+    pattern, periods, rem = _pattern_layout(cfg)
+    x = _embed_inputs(params, cfg, inputs, ctx)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    prefix_len = cfg.num_patches if cfg.frontend == "vision_stub" else None
+
+    def period_body(x, pslice):
+        for pos, kind in enumerate(pattern):
+            x = _apply_block(
+                pslice[f"p{pos}"],
+                x,
+                cfg,
+                ctx,
+                kind,
+                positions=positions,
+                prefix_len=prefix_len,
+                attn_impl=attn_impl,
+            )
+        return x
+
+    body = period_body
+    if cfg.remat == "full":
+        body = jax.checkpoint(period_body, policy=None)
+    elif cfg.remat == "dots":
+        body = jax.checkpoint(
+            period_body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+
+    if periods > 0 and unroll:
+        for i in range(periods):
+            x = body(x, jax.tree.map(lambda a: a[i], params["blocks"]))
+    elif periods > 0:
+        x, _ = jax.lax.scan(
+            lambda c, ps: (body(c, ps), None), x, params["blocks"]
+        )
+    for i in range(rem):
+        kind = pattern[i % len(pattern)]
+        x = _apply_block(
+            params["tail"][i],
+            x,
+            cfg,
+            ctx,
+            kind,
+            positions=positions,
+            prefix_len=prefix_len,
+            attn_impl=attn_impl,
+        )
+    x = apply_norm(
+        cfg.norm if cfg.norm != "nonparam_ln" else "rmsnorm", params["final_norm"], x
+    )
+    return _head(params, cfg, x, ctx)
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+
+def _cache_for_kind(cfg: ArchConfig, kind: str, batch: int, max_len: int, dtype):
+    hd = cfg.hd
+    if kind in ("attn", "local"):
+        w = max_len if kind == "attn" else min(cfg.window, max_len)
+        shape = (batch, w, cfg.num_kv_heads, hd)
+        c = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+        if dtype == jnp.int8:  # quantized serving: per-(b, s, h) absmax scales
+            c["k_scale"] = jnp.zeros(shape[:3], jnp.bfloat16)
+            c["v_scale"] = jnp.zeros(shape[:3], jnp.bfloat16)
+        return c
+    sdt = jnp.bfloat16 if dtype == jnp.int8 else dtype
+    if kind == "rec":
+        return rec_mod.rglru_init_state(batch, cfg.d_model, sdt)
+    if kind == "ssm":
+        return ssm_mod.ssd_init_state(
+            batch, d_inner=cfg.d_inner, heads=cfg.ssm_heads, d_state=cfg.ssm_state, dtype=sdt
+        )
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Cache pytree: {"blocks": {pN: stacked [periods, ...]}, "tail": [...]}."""
+    pattern, periods, rem = _pattern_layout(cfg)
+    blocks = {}
+    for pos, kind in enumerate(pattern):
+        one = _cache_for_kind(cfg, kind, batch, max_len, dtype)
+        blocks[f"p{pos}"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (periods, *x.shape)).copy(), one
+        )
+    cache = {"blocks": blocks}
+    tail = [
+        _cache_for_kind(cfg, pattern[i % len(pattern)], batch, max_len, dtype)
+        for i in range(rem)
+    ]
+    if tail:
+        cache["tail"] = tail
+    return cache
+
+
+def cache_axes(cfg: ArchConfig, int8: bool = False):
+    """Logical axes tree mirroring init_cache (for serve-step shardings)."""
+    pattern, periods, rem = _pattern_layout(cfg)
+
+    def kind_axes(kind: str, layered: bool):
+        pre = ("layers",) if layered else ()
+        if kind in ("attn", "local"):
+            # kv_heads shards when divisible; otherwise head_dim picks up
+            # the model axis (cache updates are along seq: no cross-shard
+            # scatter, unlike seq sharding which triggers full remat).
+            kv = pre + ("batch", "seq_kv", "kv_heads", "head_dim")
+            d = {"k": kv, "v": kv}
+            if int8:
+                sc = pre + ("batch", "seq_kv", "kv_heads")
+                d["k_scale"] = sc
+                d["v_scale"] = sc
+            return d
+        if kind == "rec":
+            return {"h": pre + ("batch", "rnn"), "conv": pre + ("batch", None, "rnn")}
+        if kind == "ssm":
+            return {
+                "h": pre + ("batch", "heads", None, None),
+                "conv": pre + ("batch", None, "rnn"),
+            }
+        raise ValueError(kind)
+
+    axes = {"blocks": {f"p{i}": kind_axes(k, True) for i, k in enumerate(pattern)}}
+    if rem:
+        axes["tail"] = [kind_axes(pattern[i % len(pattern)], False) for i in range(rem)]
+    return axes
+
+
+def _decode_block(p, c, x, cfg: ArchConfig, ctx, kind: str, pos):
+    B = x.shape[0]
+    h = apply_norm(cfg.norm, p["ln1"], x)
+    if kind in ("attn", "local"):
+        q = proj_in(p["q"], h)  # [B, 1, H, hd]
+        k = proj_in(p["k"], h)
+        v = proj_in(p["v"], h)
+        if cfg.positions == "rope":
+            pp = jnp.full((B, 1), pos)
+            q = rope(q, pp, cfg.rope_theta)
+            k = rope(k, pp, cfg.rope_theta)
+        int8kv = c["k"].dtype == jnp.int8
+        slot = pos if kind == "attn" else pos % c["k"].shape[1]
+        if int8kv:
+            ks = jnp.max(jnp.abs(k[:, 0]).astype(jnp.float32), axis=-1)  # [B, KH]
+            vs = jnp.max(jnp.abs(v[:, 0]).astype(jnp.float32), axis=-1)
+            k8 = jnp.round(
+                k[:, 0].astype(jnp.float32) / jnp.maximum(ks, 1e-6)[..., None] * 127.0
+            ).astype(jnp.int8)
+            v8 = jnp.round(
+                v[:, 0].astype(jnp.float32) / jnp.maximum(vs, 1e-6)[..., None] * 127.0
+            ).astype(jnp.int8)
+            ck = c["k"].at[:, slot].set(k8)
+            cv = c["v"].at[:, slot].set(v8)
+            newc = {
+                "k": ck,
+                "v": cv,
+                "k_scale": c["k_scale"].at[:, slot].set(ks.astype(jnp.bfloat16)),
+                "v_scale": c["v_scale"].at[:, slot].set(vs.astype(jnp.bfloat16)),
+            }
+        else:
+            ck = c["k"].at[:, slot].set(k[:, 0].astype(c["k"].dtype))
+            cv = c["v"].at[:, slot].set(v[:, 0].astype(c["v"].dtype))
+            newc = {"k": ck, "v": cv}
+        if kind == "attn":
+            kpos = jnp.arange(ck.shape[1])
+        else:  # ring buffer of size window
+            w = c["k"].shape[1]
+            s = jnp.arange(w)
+            kpos = pos - ((pos - s) % w)
+        out = attn_mod.decode_attention(
+            q,
+            ck,
+            cv,
+            pos,
+            window=cfg.window if kind == "local" else None,
+            kpos=kpos,
+            k_scale=newc.get("k_scale"),
+            v_scale=newc.get("v_scale"),
+        )
+        mixed = proj_out(p["o"], out)
+    elif kind == "rec":
+        mixed, newc = rec_mod.rglru_decode_step(p["mix"], h, c, heads=cfg.num_heads)
+    elif kind == "ssm":
+        mixed, newc = ssm_mod.ssd_decode_step(
+            p["mix"], h, c, d_inner=cfg.d_inner, heads=cfg.ssm_heads, d_state=cfg.ssm_state
+        )
+        return x + mixed, newc
+    x = x + mixed
+    h2 = apply_norm(cfg.norm, p["ln2"], x)
+    if cfg.is_moe and kind in ("attn", "local"):
+        ff = moe_mod.moe_apply(
+            p["moe"],
+            h2,
+            ctx,
+            num_experts=cfg.num_experts,
+            top_k=cfg.top_k,
+            act=cfg.mlp_act,
+            dropless=True,  # decode: never drop a generation token
+            token_dispatch=True,  # decode: move tokens (KB), not weights (GB)
+        )
+    else:
+        ff = mlp_apply(p["mlp"], h2, cfg.mlp_act)
+    return x + ff, newc
+
+
+def decode_step(params, cfg: ArchConfig, ctx, cache, tokens, pos, *, unroll: bool = False):
+    """One decode step.  tokens: [B, 1] int32; pos: scalar position index."""
+    pattern, periods, rem = _pattern_layout(cfg)
+    x = params["embed"]["table"][tokens]
+    x = constrain(ctx, x, "batch", None, None)
+
+    def body(x, xs):
+        pslice, cslice = xs
+        newc = {}
+        for p_i, kind in enumerate(pattern):
+            x, newc[f"p{p_i}"] = _decode_block(
+                pslice[f"p{p_i}"], cslice[f"p{p_i}"], x, cfg, ctx, kind, pos
+            )
+        return x, newc
+
+    new_cache = {}
+    if periods > 0 and unroll:
+        ys = []
+        for i in range(periods):
+            x, nc = body(
+                x,
+                (
+                    jax.tree.map(lambda a: a[i], params["blocks"]),
+                    jax.tree.map(lambda a: a[i], cache["blocks"]),
+                ),
+            )
+            ys.append(nc)
+        new_cache["blocks"] = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    elif periods > 0:
+        x, new_blocks = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
+        new_cache["blocks"] = new_blocks
+    else:
+        new_cache["blocks"] = cache["blocks"]
+    if rem:
+        new_tail = []
+        for i in range(rem):
+            kind = pattern[i % len(pattern)]
+            x, nc = _decode_block(
+                params["tail"][i], cache["tail"][i], x, cfg, ctx, kind, pos
+            )
+            new_tail.append(nc)
+        new_cache["tail"] = new_tail
+    x = apply_norm(
+        cfg.norm if cfg.norm != "nonparam_ln" else "rmsnorm", params["final_norm"], x
+    )
+    logits = _head(params, cfg, x, ctx)
+    return logits, new_cache

@@ -1,0 +1,43 @@
+"""Int8 gradient compression with error feedback (cross-pod all-reduce aid).
+
+At multi-pod scale the pod axis rides the slow inter-pod links; quantizing
+gradients to int8 with per-tensor scale cuts that all-reduce volume 4x.
+Error feedback accumulates the quantization residual locally and re-injects
+it next step, preserving convergence (Karimireddy et al., 2019).
+
+Usage inside train_step:
+    q, scales = compress_grads(add_error(grads, err))
+    grads_hat = decompress_grads(q, scales)       # what actually gets reduced
+    err = error_feedback_update(grads_plus_err, grads_hat)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compress_grads", "decompress_grads", "error_feedback_update"]
+
+
+def _q_one(g):
+    g32 = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_grads(grads):
+    flat, treedef = jax.tree.flatten(grads)
+    qs, scales = zip(*[_q_one(g) for g in flat]) if flat else ((), ())
+    return jax.tree.unflatten(treedef, list(qs)), jax.tree.unflatten(treedef, list(scales))
+
+
+def decompress_grads(q, scales):
+    return jax.tree.map(lambda qq, s: qq.astype(jnp.float32) * s, q, scales)
+
+
+def error_feedback_update(intended, transmitted):
+    """New residual = what we wanted to send - what the wire carried."""
+    return jax.tree.map(
+        lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32), intended, transmitted
+    )

@@ -1,0 +1,4 @@
+from .fault_tolerance import StragglerDetector, run_with_retries, TrainLoop
+from .elastic import reshard_state
+
+__all__ = ["StragglerDetector", "run_with_retries", "TrainLoop", "reshard_state"]

@@ -1,0 +1,39 @@
+"""Elastic scaling: re-shard a checkpointed state onto a different mesh.
+
+Checkpoints store unsharded arrays + the model's logical axes; placement is
+purely a function of (mesh, rules).  Growing or shrinking the cluster is
+therefore: restore -> device_put with the new mesh's NamedShardings.  The
+dry-run proves alternative mesh shapes compile (launch/dryrun.py --mesh).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.sharding.rules import MeshCtx, spec_tree
+
+__all__ = ["reshard_state", "state_shardings"]
+
+
+def state_shardings(ctx: MeshCtx, state_abstract, params_axes):
+    """NamedSharding tree for a train state {params, opt{...}, step}.
+
+    Optimizer slots mirroring the param tree (mu, nu, optional fp32 master)
+    share the params' shardings; scalars replicate."""
+    p_specs = spec_tree(ctx, state_abstract["params"], params_axes)
+    mk = lambda spec: NamedSharding(ctx.mesh, spec)
+    p_sh = jax.tree.map(mk, p_specs)
+    opt = {}
+    for k, v in state_abstract["opt"].items():
+        opt[k] = jax.tree.map(mk, p_specs) if isinstance(v, dict) else mk(PartitionSpec())
+    return {"params": p_sh, "opt": opt, "step": mk(PartitionSpec())}
+
+
+def reshard_state(state, old_ctx: MeshCtx | None, new_ctx: MeshCtx, params_axes):
+    """Move a state pytree onto ``new_ctx.mesh`` (elastic grow/shrink)."""
+    abstract = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state
+    )
+    shardings = state_shardings(new_ctx, abstract, params_axes)
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), state, shardings)

@@ -1,0 +1,121 @@
+"""Fault tolerance & straggler mitigation for the training runtime.
+
+At 1000+ nodes, failures are the steady state.  Mechanisms here:
+
+* **step retry** (:func:`run_with_retries`): transient device/runtime errors
+  (preempted host, flaky link) retry the step; the stateless data pipeline
+  makes the retried step deterministic.
+* **checkpoint/restart** (:class:`TrainLoop`): periodic async checkpoints +
+  resume from the latest manifest; a restarted run continues bitwise
+  identically (tested in tests/test_fault_tolerance.py).
+* **straggler detection** (:class:`StragglerDetector`): step-time EWMA with
+  a multiplicative threshold.  On real pods the response is re-scheduling the
+  slow host's shard (the CHT work-stealing analogue at step granularity);
+  here we surface the signal and count events.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+
+__all__ = ["run_with_retries", "StragglerDetector", "TrainLoop"]
+
+
+def run_with_retries(fn: Callable, *args, max_retries: int = 3, on_failure=None):
+    """Run fn; retry on transient failure (deterministic step => safe)."""
+    for attempt in range(max_retries + 1):
+        try:
+            return fn(*args)
+        except (RuntimeError, jax.errors.JaxRuntimeError) as e:  # transient class
+            if attempt == max_retries:
+                raise
+            if on_failure is not None:
+                on_failure(attempt, e)
+    raise AssertionError("unreachable")
+
+
+@dataclasses.dataclass
+class StragglerDetector:
+    """EWMA step-time monitor: flags steps slower than ``threshold`` x EWMA."""
+
+    alpha: float = 0.1
+    threshold: float = 2.0
+    ewma: float | None = None
+    events: int = 0
+
+    def observe(self, dt: float) -> bool:
+        if self.ewma is None:
+            self.ewma = dt
+            return False
+        slow = dt > self.threshold * self.ewma
+        if slow:
+            self.events += 1
+        # don't poison the EWMA with the straggler sample
+        self.ewma = self.ewma if slow else (1 - self.alpha) * self.ewma + self.alpha * dt
+        return slow
+
+
+class TrainLoop:
+    """Checkpointed, restartable, straggler-aware outer loop."""
+
+    def __init__(
+        self,
+        train_step,
+        pipeline,
+        ckpt_dir: str,
+        *,
+        ckpt_every: int = 50,
+        keep: int = 3,
+        max_retries: int = 3,
+    ):
+        self.train_step = train_step
+        self.pipeline = pipeline
+        self.manager = CheckpointManager(ckpt_dir, keep=keep)
+        self.ckpt_every = ckpt_every
+        self.max_retries = max_retries
+        self.straggler = StragglerDetector()
+        self.retries = 0
+
+    def resume_or_init(self, state_like_or_init):
+        from repro.checkpoint import latest_step
+
+        step = latest_step(self.manager.directory)
+        if step is not None:
+            state, step = self.manager.restore_latest(state_like_or_init)
+            return jax.tree.map(jax.numpy.asarray, state), step
+        return state_like_or_init, 0
+
+    def run(self, state, start_step: int, num_steps: int, log_every: int = 10, log=print):
+        metrics_hist = []
+        for step in range(start_step, start_step + num_steps):
+            batch = self.pipeline.global_batch(step)
+            t0 = time.perf_counter()
+
+            def attempt():
+                return self.train_step(state, batch)
+
+            def on_failure(k, e):
+                self.retries += 1
+                log(f"[retry {k}] step {step}: {e}")
+
+            state, metrics = run_with_retries(
+                attempt, max_retries=self.max_retries, on_failure=on_failure
+            )
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            if self.straggler.observe(dt):
+                log(f"[straggler] step {step} took {dt:.3f}s (ewma {self.straggler.ewma:.3f}s)")
+            metrics_hist.append({k: float(v) for k, v in metrics.items()})
+            if step % log_every == 0:
+                log(f"step {step} loss {float(metrics['loss']):.4f} ({dt*1e3:.0f} ms)")
+            if (step + 1) % self.ckpt_every == 0:
+                self.manager.save(step + 1, state)
+        self.manager.save(start_step + num_steps, state)
+        self.manager.wait()
+        return state, metrics_hist

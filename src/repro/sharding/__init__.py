@@ -1,0 +1,3 @@
+from .rules import MeshCtx, logical_to_spec, spec_tree, constrain
+
+__all__ = ["MeshCtx", "logical_to_spec", "spec_tree", "constrain"]

@@ -1,0 +1,128 @@
+"""Logical-axis -> mesh-axis sharding rules (DP/FSDP/TP/EP/SP).
+
+Every parameter is annotated at init time with logical axis names per dim
+(e.g. ("embed", "heads")).  A rule table maps logical names to mesh axes;
+:func:`logical_to_spec` applies it with a **divisibility fallback**: if a
+dim's size does not divide by the mapped mesh axes, that dim is replicated
+instead (e.g. qwen2-0.5b's 14 heads on a 16-way model axis).  This keeps one
+rule table valid across all 10 architectures.
+
+Default rule table (mesh axes: pod, data, model):
+  embed   -> data          (FSDP: params sharded over the data axis)
+  heads/kv_heads/mlp/vocab/expert/rnn -> model  (TP / EP)
+  layers  -> None          (stacked scan axis)
+Batch is data-parallel over (pod, data); `long_500k` overrides activations
+to sequence-parallel over data (see launch/specs.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+__all__ = ["MeshCtx", "logical_to_spec", "spec_tree", "constrain", "DEFAULT_RULES"]
+
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "embed": ("data",),  # FSDP
+    "embed_e": ("data",),  # expert-weight d_model dim: FSDP even at inference
+    # (MoE param volume never fits TP-only; dense params do)
+    "moe_ff": (),  # expert d_ff dim; decode overrides to ("data",) so expert
+    # weights stay fully resident (tokens are dispatched instead)
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "expert": ("model",),
+    "rnn": ("model",),
+    "head_dim": ("model",),  # KV-cache fallback when kv_heads can't shard
+    "state": (),
+    "layers": (),
+    "batch": ("pod", "data"),
+    "seq": (),
+    "seq_sp": ("data",),  # sequence parallelism (long-context override)
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshCtx:
+    """Mesh + axis-name context threaded through model apply functions."""
+
+    mesh: Mesh
+    rules: tuple[tuple[str, tuple[str, ...]], ...] = tuple(
+        (k, v) for k, v in DEFAULT_RULES.items()
+    )
+
+    @property
+    def rule_map(self) -> dict[str, tuple[str, ...]]:
+        return dict(self.rules)
+
+    @property
+    def axis_sizes(self) -> dict[str, int]:
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+
+    def present(self, axes: tuple[str, ...]) -> tuple[str, ...]:
+        return tuple(a for a in axes if a in self.mesh.axis_names)
+
+    @property
+    def dp_axes(self) -> tuple[str, ...]:
+        return self.present(("pod", "data"))
+
+    @property
+    def tp_axis(self) -> str | None:
+        return "model" if "model" in self.mesh.axis_names else None
+
+    def tp_size(self) -> int:
+        return self.axis_sizes.get("model", 1)
+
+    def with_rules(self, **overrides) -> "MeshCtx":
+        r = self.rule_map
+        r.update(overrides)
+        return dataclasses.replace(self, rules=tuple(r.items()))
+
+
+def logical_to_spec(
+    ctx: MeshCtx, shape: tuple[int, ...], axes: tuple[str | None, ...]
+) -> PartitionSpec:
+    """Map logical axes to a PartitionSpec, replicating non-divisible dims."""
+    assert len(shape) == len(axes), (shape, axes)
+    rule_map = ctx.rule_map
+    sizes = ctx.axis_sizes
+    used: set[str] = set()
+    entries = []
+    for dim, name in zip(shape, axes):
+        if name is None:
+            entries.append(None)
+            continue
+        mesh_axes = tuple(
+            a for a in rule_map.get(name, ()) if a in sizes and a not in used
+        )
+        total = int(np.prod([sizes[a] for a in mesh_axes])) if mesh_axes else 1
+        if mesh_axes and dim % total == 0:
+            entries.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+            used.update(mesh_axes)
+        else:
+            entries.append(None)
+    return PartitionSpec(*entries)
+
+
+def spec_tree(ctx: MeshCtx, params, axes_tree):
+    """PartitionSpec tree for a params tree + parallel logical-axes tree."""
+    leaves, treedef = jax.tree.flatten(params)
+    ax_leaves = treedef.flatten_up_to(axes_tree)
+
+    def one(p, ax):
+        shape = p.shape if hasattr(p, "shape") else np.shape(p)
+        return logical_to_spec(ctx, tuple(shape), tuple(ax))
+
+    return jax.tree.unflatten(treedef, [one(p, ax) for p, ax in zip(leaves, ax_leaves)])
+
+
+def constrain(ctx: MeshCtx | None, x, *entries):
+    """with_sharding_constraint with divisibility fallback; no-op without ctx."""
+    if ctx is None:
+        return x
+    spec = logical_to_spec(ctx, x.shape, tuple(entries))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))

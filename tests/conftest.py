@@ -1,0 +1,8 @@
+import os
+import sys
+
+# src layout import path (tests run with PYTHONPATH=src, but be robust)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
+# and benches must see 1 device (dry-run sets 512 itself, in subprocesses).

@@ -1,0 +1,33 @@
+"""Shared test utilities."""
+
+import numpy as np
+
+from repro.core import BSMatrix
+
+
+def banded_matrix(n: int, halfwidth: int, bs: int, seed: int = 0) -> BSMatrix:
+    rng = np.random.default_rng(seed)
+    a = np.zeros((n, n), dtype=np.float32)
+    for i in range(n):
+        lo, hi = max(0, i - halfwidth), min(n, i + halfwidth + 1)
+        a[i, lo:hi] = rng.standard_normal(hi - lo)
+    return BSMatrix.from_dense(a, bs)
+
+
+def random_block_matrix(
+    n: int, bs: int, density: float, seed: int = 0
+) -> BSMatrix:
+    """Random block sparsity pattern with given block density."""
+    rng = np.random.default_rng(seed)
+    nb = -(-n // bs)
+    mask = rng.random((nb, nb)) < density
+    a = np.zeros((nb * bs, nb * bs), dtype=np.float32)
+    for i, j in zip(*np.nonzero(mask)):
+        a[i * bs : (i + 1) * bs, j * bs : (j + 1) * bs] = rng.standard_normal((bs, bs))
+    return BSMatrix.from_dense(a[:n, :n], bs)
+
+
+def spd_banded(n: int, halfwidth: int, bs: int, seed: int = 0) -> BSMatrix:
+    m = banded_matrix(n, halfwidth, bs, seed)
+    d = m.to_dense()
+    return BSMatrix.from_dense(d @ d.T + n * np.eye(n, dtype=np.float32), bs)

@@ -1,0 +1,70 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    add,
+    add_scaled_identity,
+    identity,
+    truncate,
+    truncate_elementwise,
+)
+
+from helpers import banded_matrix, random_block_matrix
+
+
+@given(
+    n=st.integers(8, 60),
+    bs=st.sampled_from([4, 8]),
+    alpha=st.floats(-3, 3),
+    beta=st.floats(-3, 3),
+    seed=st.integers(0, 5),
+)
+@settings(max_examples=20, deadline=None)
+def test_add(n, bs, alpha, beta, seed):
+    a = random_block_matrix(n, bs, 0.4, seed)
+    b = random_block_matrix(n, bs, 0.4, seed + 9)
+    c = add(a, b, alpha, beta)
+    assert np.allclose(
+        c.to_dense(), alpha * a.to_dense() + beta * b.to_dense(), atol=1e-4
+    )
+
+
+def test_identity_partial_block():
+    i = identity(10, 4)
+    assert np.allclose(i.to_dense(), np.eye(10))
+
+
+def test_add_scaled_identity():
+    a = banded_matrix(30, 3, 8)
+    c = add_scaled_identity(a, -2.5)
+    assert np.allclose(c.to_dense(), a.to_dense() - 2.5 * np.eye(30), atol=1e-5)
+
+
+@given(tau=st.floats(0.0, 100.0), seed=st.integers(0, 8))
+@settings(max_examples=30, deadline=None)
+def test_truncate_error_control(tau, seed):
+    a = random_block_matrix(48, 8, 0.6, seed)
+    t = truncate(a, tau)
+    err = np.linalg.norm(a.to_dense() - t.to_dense())
+    assert err <= tau + 1e-5
+    assert t.nnzb <= a.nnzb
+
+
+def test_truncate_greedy_maximal():
+    # dropping any additional block must exceed tau
+    a = random_block_matrix(32, 8, 0.8, 3)
+    tau = 0.5 * a.frobenius_norm()
+    t = truncate(a, tau)
+    if t.nnzb:
+        dropped_sq = a.frobenius_norm() ** 2 - t.frobenius_norm() ** 2
+        smallest_kept = t.block_norms().min()
+        assert np.sqrt(max(dropped_sq, 0) + smallest_kept**2) > tau - 1e-4
+
+
+def test_truncate_elementwise():
+    a = banded_matrix(40, 4, 8)
+    t = truncate_elementwise(a, 0.5)
+    d = t.to_dense()
+    assert ((np.abs(d) > 0.5) | (d == 0)).all()

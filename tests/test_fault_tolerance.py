@@ -1,0 +1,83 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.data import TokenPipeline
+from repro.models import model as model_mod
+from repro.runtime.fault_tolerance import StragglerDetector, TrainLoop, run_with_retries
+
+
+def test_run_with_retries_recovers():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("transient")
+        return 42
+
+    failures = []
+    out = run_with_retries(flaky, max_retries=5, on_failure=lambda k, e: failures.append(k))
+    assert out == 42 and len(failures) == 2
+
+
+def test_run_with_retries_exhausts():
+    def dead():
+        raise RuntimeError("permanent")
+
+    with pytest.raises(RuntimeError):
+        run_with_retries(dead, max_retries=2)
+
+
+def test_straggler_detector():
+    det = StragglerDetector(alpha=0.5, threshold=2.0)
+    for _ in range(5):
+        assert not det.observe(1.0)
+    assert det.observe(5.0)  # 5x ewma
+    assert det.events == 1
+    # ewma not poisoned by the straggler
+    assert det.ewma == pytest.approx(1.0)
+
+
+def test_train_loop_with_injected_failures(tmp_path):
+    cfg = reduced_config("qwen2-0.5b")
+    pipe = TokenPipeline(cfg, batch=4, seq=16, seed=0)
+    inner = jax.jit(model_mod.make_train_step(cfg, None, compute_dtype=jnp.float32))
+    fail_at = {"steps": {2, 5}}
+
+    def flaky_step(state, batch):
+        step = int(state["step"])
+        if step in fail_at["steps"]:
+            fail_at["steps"].discard(step)
+            raise RuntimeError(f"injected failure at step {step}")
+        return inner(state, batch)
+
+    loop = TrainLoop(flaky_step, pipe, str(tmp_path), ckpt_every=4, max_retries=2)
+    state = model_mod.init_train_state(jax.random.key(0), cfg)
+    state, hist = loop.run(state, 0, 8, log_every=100, log=lambda *_: None)
+    assert loop.retries == 2
+    assert len(hist) == 8
+    # continuation after retries matches failure-free run exactly
+    clean = model_mod.init_train_state(jax.random.key(0), cfg)
+    for i in range(8):
+        clean, _ = inner(clean, pipe.global_batch(i))
+    for a, b in zip(jax.tree.leaves(clean["params"]), jax.tree.leaves(state["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_train_loop_restart_from_checkpoint(tmp_path):
+    cfg = reduced_config("olmo-1b")
+    pipe = TokenPipeline(cfg, batch=4, seq=16, seed=1)
+    step = jax.jit(model_mod.make_train_step(cfg, None, compute_dtype=jnp.float32))
+    # first run: 6 steps, checkpoint every 3
+    loop1 = TrainLoop(step, pipe, str(tmp_path), ckpt_every=3)
+    s0 = model_mod.init_train_state(jax.random.key(0), cfg)
+    s1, _ = loop1.run(s0, 0, 6, log_every=100, log=lambda *_: None)
+    # "crash" and restart: a new loop resumes from the committed checkpoint
+    loop2 = TrainLoop(step, pipe, str(tmp_path), ckpt_every=3)
+    s2, start = loop2.resume_or_init(model_mod.init_train_state(jax.random.key(0), cfg))
+    assert start == 6
+    for a, b in zip(jax.tree.leaves(s1["params"]), jax.tree.leaves(s2["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,40 @@
+"""HLO collective-parser unit tests (synthetic HLO text)."""
+
+from repro.launch.hlo_analysis import analyze_collectives, op_census
+
+_HLO = """
+HloModule test
+ENTRY main {
+  %p0 = bf16[16,4096,8192]{2,1,0} parameter(0)
+  %p1 = f32[8192,1848]{1,0} parameter(1)
+  %ar = bf16[16,4096,8192]{2,1,0} all-reduce(%p0), replica_groups={}
+  %ag = f32[8192,29568]{1,0} all-gather(%p1), dimensions={1}
+  %rs = bf16[16,4096,512]{2,1,0} reduce-scatter(%ar), dimensions={2}
+  %cp = bf16[16,4096,8192]{2,1,0} collective-permute(%ar), source_target_pairs={{0,1}}
+  ROOT %out = bf16[16,4096,512]{2,1,0} copy(%rs)
+}
+"""
+
+
+def test_collective_totals():
+    r = analyze_collectives(_HLO)
+    bf16 = 16 * 4096 * 8192 * 2
+    f32_in = 8192 * 1848 * 4
+    f32_out = 8192 * 29568 * 4
+    k = r["by_kind"]
+    # all-reduce: operand bytes; wire 2x
+    assert k["all-reduce"]["operand_bytes"] == bf16
+    assert k["all-reduce"]["wire_bytes"] == 2 * bf16
+    # all-gather: wire = result bytes (receives everyone's shard)
+    assert k["all-gather"]["operand_bytes"] == f32_in
+    assert k["all-gather"]["wire_bytes"] == f32_out
+    # reduce-scatter / permute: operand bytes
+    assert k["reduce-scatter"]["wire_bytes"] == bf16
+    assert k["collective-permute"]["wire_bytes"] == bf16
+    assert r["operand_bytes"] == bf16 * 3 + f32_in
+
+
+def test_op_census():
+    census = dict(op_census(_HLO))
+    assert census["all-reduce"] == 1
+    assert census["parameter"] == 2

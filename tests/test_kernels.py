@@ -1,0 +1,202 @@
+"""Per-kernel allclose vs the pure-jnp oracle, sweeping shapes/dtypes
+(interpret mode executes the kernel body on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.block_spmm import block_spmm_kernel_call
+from repro.kernels.flash_attention import flash_attention_call
+from repro.kernels.ref import block_spmm_ref, flash_attention_ref
+
+
+def _random_tasks(rng, na, nb, nc, T):
+    """Random tasks satisfying the kernel contract: c sorted AND covering
+    every output row (the symbolic phase guarantees both)."""
+    T = max(T, nc)
+    a = rng.integers(0, na, T)
+    b = rng.integers(0, nb, T)
+    c = np.sort(np.concatenate([np.arange(nc), rng.integers(0, nc, T - nc)]))
+    return a.astype(np.int32), b.astype(np.int32), c.astype(np.int32)
+
+
+@pytest.mark.parametrize("bs", [8, 16, 64, 128])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_block_spmm_square(bs, dtype):
+    rng = np.random.default_rng(bs)
+    na, nb, nc, T = 7, 5, 6, 23
+    A = jnp.asarray(rng.standard_normal((na, bs, bs)), dtype)
+    B = jnp.asarray(rng.standard_normal((nb, bs, bs)), dtype)
+    a, b, c = _random_tasks(rng, na, nb, nc, T)
+    out = block_spmm_kernel_call(
+        A, B, jnp.asarray(a), jnp.asarray(b), jnp.asarray(c), num_out=nc, interpret=True
+    )
+    ref = block_spmm_ref(A, B, jnp.asarray(a), jnp.asarray(b), jnp.asarray(c), nc)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("bm,bk,bn", [(16, 32, 8), (64, 16, 32), (128, 256, 128)])
+def test_block_spmm_rectangular(bm, bk, bn):
+    rng = np.random.default_rng(0)
+    na, nb, nc, T = 4, 4, 3, 11
+    A = jnp.asarray(rng.standard_normal((na, bm, bk)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((nb, bk, bn)), jnp.float32)
+    a, b, c = _random_tasks(rng, na, nb, nc, T)
+    out = block_spmm_kernel_call(
+        A, B, jnp.asarray(a), jnp.asarray(b), jnp.asarray(c), num_out=nc, interpret=True
+    )
+    ref = block_spmm_ref(A, B, jnp.asarray(a), jnp.asarray(b), jnp.asarray(c), nc)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-4)
+
+
+def test_block_spmm_tiled_large_block():
+    # bs 1024 forces multi-tile (tm=tn=tk=512) accumulation paths
+    rng = np.random.default_rng(1)
+    A = jnp.asarray(rng.standard_normal((2, 1024, 1024)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((2, 1024, 1024)), jnp.float32)
+    a = jnp.asarray([0, 1, 1], jnp.int32)
+    b = jnp.asarray([1, 0, 1], jnp.int32)
+    c = jnp.asarray([0, 0, 1], jnp.int32)
+    out = block_spmm_kernel_call(A, B, a, b, c, num_out=2, interpret=True)
+    ref = block_spmm_ref(A, B, a, b, c, 2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-2)
+
+
+def test_block_spmm_trailing_trash_row():
+    """Kernel contract: every row in [0, num_out) receives >= 1 task (the
+    symbolic phase guarantees it); a trailing padded-task trash row is
+    allowed and its content is unspecified — callers slice it off.  Rows
+    covered by tasks must match the oracle exactly."""
+    rng = np.random.default_rng(2)
+    A = jnp.asarray(rng.standard_normal((3, 16, 16)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((3, 16, 16)), jnp.float32)
+    a = jnp.asarray([0, 1, 2, 2], jnp.int32)
+    b = jnp.asarray([0, 1, 0, 1], jnp.int32)
+    c = jnp.asarray([0, 1, 1, 2], jnp.int32)  # rows 0..2 covered; row 3 = trash
+    out = block_spmm_kernel_call(A, B, a, b, c, num_out=4, interpret=True)
+    ref = block_spmm_ref(A, B, a, b, c, 4)
+    np.testing.assert_allclose(
+        np.asarray(out)[:3], np.asarray(ref)[:3], rtol=1e-5, atol=1e-4
+    )
+
+
+@given(
+    T=st.integers(1, 40),
+    na=st.integers(1, 8),
+    nc=st.integers(1, 8),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=15, deadline=None)
+def test_block_spmm_property(T, na, nc, seed):
+    rng = np.random.default_rng(seed)
+    bs = 8
+    A = jnp.asarray(rng.standard_normal((na, bs, bs)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((na, bs, bs)), jnp.float32)
+    a, b, c = _random_tasks(rng, na, na, nc, T)
+    out = block_spmm_kernel_call(
+        A, B, jnp.asarray(a), jnp.asarray(b), jnp.asarray(c), num_out=nc, interpret=True
+    )
+    ref = block_spmm_ref(A, B, jnp.asarray(a), jnp.asarray(b), jnp.asarray(c), nc)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("hq,hk", [(4, 4), (4, 1), (8, 2)])
+def test_flash_attention_vs_ref(causal, hq, hk):
+    rng = np.random.default_rng(0)
+    B, S, D = 2, 256, 32
+    q = jnp.asarray(rng.standard_normal((B, hq, S, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, hk, S, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, hk, S, D)), jnp.float32)
+    out = flash_attention_call(q, k, v, causal=causal, bq=64, bkv=64, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_window():
+    rng = np.random.default_rng(1)
+    B, H, S, D = 1, 2, 512, 16
+    q = jnp.asarray(rng.standard_normal((B, H, S, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, H, S, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, H, S, D)), jnp.float32)
+    out = flash_attention_call(q, k, v, causal=True, window=128, bq=64, bkv=64, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True, window=128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(2)
+    B, H, S, D = 1, 2, 128, 64
+    q = jnp.asarray(rng.standard_normal((B, H, S, D)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((B, H, S, D)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((B, H, S, D)), jnp.bfloat16)
+    out = flash_attention_call(q, k, v, causal=True, bq=64, bkv=64, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=5e-2, atol=5e-2
+    )
+
+
+def test_flash_attention_decode_suffix():
+    # Sq < Sk: suffix-aligned queries (speculative/chunked decode)
+    rng = np.random.default_rng(3)
+    B, H, D = 1, 2, 32
+    q = jnp.asarray(rng.standard_normal((B, H, 64, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, H, 256, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, H, 256, D)), jnp.float32)
+    out = flash_attention_call(q, k, v, causal=True, bq=64, bkv=64, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# MegaBlocks-style variable-size grouped GEMM (dropless MoE via block_spmm)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "sizes", [[5, 11, 0, 16], [32], [1, 1, 1, 29], [8, 8, 8, 8]]
+)
+def test_grouped_gemm_varsize(sizes):
+    from repro.kernels.ops import grouped_gemm_varsize
+
+    rng = np.random.default_rng(sum(sizes))
+    T, K, N, G = sum(sizes), 16, 24, len(sizes)
+    x = jnp.asarray(rng.standard_normal((T, K)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((G, K, N)), jnp.float32)
+    out = grouped_gemm_varsize(x, sizes, w)
+    # reference: row-by-row
+    starts = np.concatenate([[0], np.cumsum(sizes)])
+    ref = np.zeros((T, N), np.float32)
+    for g in range(G):
+        ref[starts[g] : starts[g + 1]] = np.asarray(x)[starts[g] : starts[g + 1]] @ np.asarray(w)[g]
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-4, atol=1e-4)
+
+
+@given(
+    g1=st.integers(0, 40), g2=st.integers(0, 40), g3=st.integers(1, 40), seed=st.integers(0, 50)
+)
+@settings(max_examples=15, deadline=None)
+def test_grouped_gemm_varsize_property(g1, g2, g3, seed):
+    from repro.kernels.ops import grouped_gemm_varsize
+
+    sizes = [g1, g2, g3]
+    rng = np.random.default_rng(seed)
+    T, K, N = sum(sizes), 8, 8
+    x = jnp.asarray(rng.standard_normal((T, K)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, K, N)), jnp.float32)
+    out = grouped_gemm_varsize(x, sizes, w, tile_m=8)
+    starts = np.concatenate([[0], np.cumsum(sizes)])
+    ref = np.zeros((T, N), np.float32)
+    for g in range(3):
+        ref[starts[g] : starts[g + 1]] = np.asarray(x)[starts[g] : starts[g + 1]] @ np.asarray(w)[g]
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,84 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import BSMatrix, LeafSpec, inner_masks, nnz_elements
+
+from helpers import banded_matrix, random_block_matrix
+
+
+@given(
+    n=st.integers(5, 80),
+    bs=st.sampled_from([4, 8, 16]),
+    density=st.floats(0.0, 1.0),
+    seed=st.integers(0, 10),
+)
+@settings(max_examples=25, deadline=None)
+def test_dense_roundtrip(n, bs, density, seed):
+    m = random_block_matrix(n, bs, density, seed)
+    d = m.to_dense()
+    m2 = BSMatrix.from_dense(d, bs)
+    assert np.allclose(m2.to_dense(), d)
+    assert m2.shape == (n, n)
+
+
+def test_zero_blocks_not_stored():
+    m = banded_matrix(64, 3, 8)
+    nb = m.nblocks[0]
+    assert m.nnzb < nb * nb  # off-band pruned
+    d = m.to_dense()
+    # every stored block is nonzero
+    assert (m.block_norms() > 0).all()
+
+
+def test_from_coo_and_extract():
+    rng = np.random.default_rng(0)
+    rows = rng.integers(0, 100, 200)
+    cols = rng.integers(0, 100, 200)
+    vals = rng.standard_normal(200)
+    m = BSMatrix.from_coo((100, 100), 16, rows, cols, vals)
+    dense = np.zeros((100, 100))
+    np.add.at(dense, (rows, cols), vals)
+    assert np.allclose(m.to_dense(), dense, atol=1e-6)
+    got = m.get_elements(rows, cols)
+    assert np.allclose(got, dense[rows, cols], atol=1e-6)
+    # extraction of absent elements returns 0
+    assert m.get_elements([99], [0])[0] == dense[99, 0]
+
+
+def test_transpose():
+    m = banded_matrix(50, 4, 8)
+    assert np.allclose(m.transpose().to_dense(), m.to_dense().T)
+    # double transpose identity incl. Morton canonical order
+    m2 = m.transpose().transpose()
+    assert np.array_equal(m2.coords, m.coords)
+    assert np.allclose(np.asarray(m2.data), np.asarray(m.data))
+
+
+def test_norms_and_trace():
+    m = banded_matrix(40, 3, 8)
+    d = m.to_dense()
+    assert np.isclose(m.frobenius_norm(), np.linalg.norm(d), rtol=1e-5)
+    assert np.isclose(m.trace(), np.trace(d), rtol=1e-5)
+
+
+def test_from_blocks_sums_duplicates():
+    data = np.ones((3, 4, 4), dtype=np.float32)
+    coords = np.array([[0, 0], [0, 0], [1, 1]])
+    m = BSMatrix.from_blocks((8, 8), 4, coords, data)
+    assert m.nnzb == 2
+    d = m.to_dense()
+    assert np.allclose(d[:4, :4], 2.0)
+    assert np.allclose(d[4:, 4:], 1.0)
+
+
+def test_leaf_specs():
+    m = banded_matrix(128, 5, 32)
+    spec = LeafSpec("block_sparse", inner_bs=8)
+    masks = inner_masks(m, spec)
+    assert masks.shape == (m.nnzb, 4, 4)
+    # block-sparse leaf stores fewer elements than dense leaf
+    assert nnz_elements(m, spec) <= nnz_elements(m, LeafSpec("dense"))
+    # stored elements cover all actual nonzeros
+    assert nnz_elements(m, spec) >= int((m.to_dense() != 0).sum())

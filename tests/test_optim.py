@@ -1,0 +1,76 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.optim import (
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    compress_grads,
+    cosine_lr,
+    decompress_grads,
+    error_feedback_update,
+)
+
+
+def test_adamw_converges_quadratic():
+    target = jnp.asarray(np.random.default_rng(0).standard_normal(8), jnp.float32)
+    params = {"w": jnp.zeros(8)}
+    state = adamw_init(params)
+    for _ in range(300):
+        grads = {"w": params["w"] - target}
+        params, state = adamw_update(
+            grads, state, params, lr=0.05, weight_decay=0.0
+        )
+    assert float(jnp.abs(params["w"] - target).max()) < 0.05
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones(4) * 3.0, "b": jnp.ones(9) * 4.0}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    total = jnp.sqrt(sum(jnp.sum(x**2) for x in jax.tree.leaves(clipped)))
+    assert float(total) == pytest.approx(1.0, rel=1e-5)
+    # below threshold: untouched
+    same, _ = clip_by_global_norm(g, 1e9)
+    assert float(jnp.abs(same["a"] - 3.0).max()) < 1e-6
+
+
+def test_cosine_lr_shape():
+    peak, warm, total = 1e-3, 10, 100
+    lrs = [float(cosine_lr(jnp.asarray(s), peak=peak, warmup=warm, total=total)) for s in range(total)]
+    assert lrs[0] == 0.0
+    assert max(lrs) == pytest.approx(peak, rel=1e-3)
+    assert lrs[-1] < 0.2 * peak
+    assert np.argmax(lrs) == warm
+
+
+@given(seed=st.integers(0, 50), scale=st.floats(1e-4, 1e3))
+@settings(max_examples=20, deadline=None)
+def test_compression_bounded_error(seed, scale):
+    rng = np.random.default_rng(seed)
+    g = {"w": jnp.asarray(rng.standard_normal((16, 16)) * scale, jnp.float32)}
+    q, s = compress_grads(g)
+    back = decompress_grads(q, s)
+    max_err = float(jnp.abs(back["w"] - g["w"]).max())
+    # quantization error bounded by half a quantization step
+    step = float(jnp.max(jnp.abs(g["w"]))) / 127.0
+    assert max_err <= 0.51 * step + 1e-12
+    assert q["w"].dtype == jnp.int8  # 4x wire reduction vs f32
+
+
+def test_error_feedback_accumulates():
+    rng = np.random.default_rng(1)
+    true_g = jnp.asarray(rng.standard_normal(64), jnp.float32)
+    err = {"w": jnp.zeros(64)}
+    sent_sum = jnp.zeros(64)
+    for _ in range(50):
+        intended = {"w": true_g + err["w"]}
+        q, s = compress_grads(intended)
+        transmitted = decompress_grads(q, s)
+        err = error_feedback_update(intended, transmitted)
+        sent_sum = sent_sum + transmitted["w"]
+    # long-run average of transmitted gradients converges to the true gradient
+    assert float(jnp.abs(sent_sum / 50 - true_g).max()) < 0.02

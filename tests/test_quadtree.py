@@ -1,0 +1,72 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.quadtree import (
+    expand_prefix,
+    morton_decode,
+    morton_encode,
+    morton_sort,
+    quadtree_depth,
+    quadtree_node_counts,
+)
+
+
+@given(
+    st.lists(
+        st.tuples(st.integers(0, 2**20 - 1), st.integers(0, 2**20 - 1)),
+        min_size=1,
+        max_size=100,
+    )
+)
+@settings(max_examples=50, deadline=None)
+def test_morton_roundtrip(coords):
+    r = np.array([c[0] for c in coords], dtype=np.int64)
+    c = np.array([c[1] for c in coords], dtype=np.int64)
+    codes = morton_encode(r, c)
+    r2, c2 = morton_decode(codes)
+    assert np.array_equal(r, r2)
+    assert np.array_equal(c, c2)
+
+
+def test_morton_order_is_quadrant_recursive():
+    # within a 2x2 grid: (0,0) < (0,1) < (1,0) < (1,1)
+    codes = morton_encode(np.array([0, 0, 1, 1]), np.array([0, 1, 0, 1]))
+    assert list(codes) == sorted(codes)
+    # quadrant blocks of a 4x4 grid are contiguous in Morton order
+    r, c = np.meshgrid(np.arange(4), np.arange(4), indexing="ij")
+    codes = morton_encode(r.ravel(), c.ravel())
+    order = np.argsort(codes)
+    quadrant = (r.ravel()[order] // 2) * 2 + c.ravel()[order] // 2
+    # each quadrant's 4 blocks appear consecutively
+    assert all(len(set(quadrant[i : i + 4])) == 1 for i in range(0, 16, 4))
+
+
+def test_morton_sort_permutation():
+    rng = np.random.default_rng(0)
+    coords = rng.integers(0, 100, size=(50, 2))
+    perm = morton_sort(coords)
+    codes = morton_encode(coords[perm, 0], coords[perm, 1])
+    assert np.all(np.diff(codes.astype(np.int64)) >= 0)
+
+
+def test_node_counts_banded():
+    # dense diagonal: leaf count = n, upper levels shrink by ~4x for diag
+    n = 16
+    coords = np.stack([np.arange(n), np.arange(n)], 1)
+    counts = quadtree_node_counts(coords, depth=4)
+    assert counts[-1] == n
+    assert counts[0] == 1
+    assert all(a <= b for a, b in zip(counts, counts[1:]))  # monotone down the tree
+
+
+def test_expand_prefix():
+    r0, r1, c0, c1 = expand_prefix(0b11, 1, 3)  # quadrant (1,1) at level 1, depth 3
+    assert (r0, r1, c0, c1) == (4, 8, 4, 8)
+
+
+def test_depth():
+    assert quadtree_depth(1, 1) == 0
+    assert quadtree_depth(2, 2) == 1
+    assert quadtree_depth(5, 3) == 3

@@ -1,0 +1,79 @@
+import subprocess
+import sys
+import os
+
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec
+
+import jax
+from repro.configs import get_config
+from repro.models import transformer
+from repro.sharding.rules import DEFAULT_RULES, MeshCtx, logical_to_spec, spec_tree
+
+
+class _Ctx:
+    """Duck-typed ctx with arbitrary axis sizes (no devices needed)."""
+
+    def __init__(self, sizes, rules=None):
+        self._sizes = sizes
+        self.rule_map = dict(DEFAULT_RULES)
+        if rules:
+            self.rule_map.update(rules)
+
+    @property
+    def axis_sizes(self):
+        return self._sizes
+
+
+def test_divisible_dims_shard():
+    ctx = _Ctx({"data": 16, "model": 16})
+    spec = logical_to_spec(ctx, (8192, 29568), ("embed", "mlp"))
+    assert spec == PartitionSpec("data", "model")
+
+
+def test_non_divisible_dims_replicate():
+    ctx = _Ctx({"data": 16, "model": 16})
+    # qwen2-0.5b attention: 14 heads on a 16-way model axis -> replicated
+    # (3D weights expose the head count to the rules)
+    spec = logical_to_spec(ctx, (896, 14, 64), ("embed", "heads", None))
+    assert spec == PartitionSpec("data", None, None)
+    # qwen2-72b: 64 heads shard cleanly
+    spec = logical_to_spec(ctx, (8192, 64, 128), ("embed", "heads", None))
+    assert spec == PartitionSpec("data", "model", None)
+    # vocab 504 (hubert) not divisible -> replicated
+    spec = logical_to_spec(ctx, (1280, 504), ("embed", "vocab"))
+    assert spec == PartitionSpec("data", None)
+
+
+def test_axes_used_once():
+    ctx = _Ctx({"data": 16, "model": 16})
+    # both dims map to model: only the first gets it
+    spec = logical_to_spec(ctx, (64, 128), ("heads", "mlp"))
+    assert spec == PartitionSpec("model", None)
+
+
+def test_multi_axis_batch():
+    ctx = _Ctx({"pod": 2, "data": 16, "model": 16})
+    spec = logical_to_spec(ctx, (256, 4096), ("batch", "seq"))
+    assert spec == PartitionSpec(("pod", "data"), None)
+    # batch=1 (long_500k): falls back to replicated
+    spec = logical_to_spec(ctx, (1, 4096), ("batch", "seq"))
+    assert spec == PartitionSpec(None, None)
+
+
+def test_spec_tree_covers_all_arch_params():
+    ctx = _Ctx({"data": 16, "model": 16})
+    for arch in ["qwen2-72b", "kimi-k2-1t-a32b", "mamba2-370m", "recurrentgemma-9b"]:
+        cfg = get_config(arch)
+        params, axes = transformer.abstract_params(cfg)
+        specs = spec_tree(ctx, params, axes)
+        n_params = len(jax.tree.leaves(params))
+        n_specs = len(jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, PartitionSpec)))
+        assert n_params == n_specs
+        # every big tensor (>=8M elements) must be sharded on at least one axis
+        flat_p = jax.tree.leaves(params)
+        flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, PartitionSpec))
+        for p, s in zip(flat_p, flat_s):
+            if int(np.prod(p.shape)) >= (1 << 23):
+                assert any(e is not None for e in s), (p.shape, s)

@@ -1,0 +1,116 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    BSMatrix,
+    LeafSpec,
+    exact_spgemm_flops,
+    multiply,
+    spamm,
+    spgemm_symbolic,
+    spgemm_symbolic_recursive,
+    syrk,
+    task_flops,
+)
+
+from helpers import banded_matrix, random_block_matrix
+
+
+@given(
+    n=st.integers(8, 70),
+    bs=st.sampled_from([4, 8, 16]),
+    da=st.floats(0.05, 0.9),
+    db=st.floats(0.05, 0.9),
+    seed=st.integers(0, 5),
+)
+@settings(max_examples=25, deadline=None)
+def test_multiply_matches_dense(n, bs, da, db, seed):
+    a = random_block_matrix(n, bs, da, seed)
+    b = random_block_matrix(n, bs, db, seed + 100)
+    c = multiply(a, b)
+    ref = a.to_dense() @ b.to_dense()
+    assert np.allclose(c.to_dense(), ref, atol=1e-3 * max(1, np.abs(ref).max()))
+
+
+def test_multiply_rectangular():
+    rng = np.random.default_rng(0)
+    a = BSMatrix.from_dense(rng.standard_normal((24, 40)).astype(np.float32), 8)
+    b = BSMatrix.from_dense(rng.standard_normal((40, 16)).astype(np.float32), 8)
+    c = multiply(a, b)
+    assert c.shape == (24, 16)
+    assert np.allclose(c.to_dense(), a.to_dense() @ b.to_dense(), atol=1e-4)
+
+
+@given(n=st.integers(8, 48), bs=st.sampled_from([4, 8]), seed=st.integers(0, 5))
+@settings(max_examples=10, deadline=None)
+def test_symbolic_recursive_equals_flat(n, bs, seed):
+    a = random_block_matrix(n, bs, 0.3, seed)
+    b = random_block_matrix(n, bs, 0.3, seed + 7)
+    t1 = spgemm_symbolic(a.coords, b.coords)
+    t2 = spgemm_symbolic_recursive(a.coords, b.coords)
+    k1 = set(zip(t1.a_idx.tolist(), t1.b_idx.tolist()))
+    k2 = set(zip(t2.a_idx.tolist(), t2.b_idx.tolist()))
+    assert k1 == k2
+    assert np.array_equal(t1.c_coords, t2.c_coords)
+
+
+def test_zero_branches_pruned():
+    # banded x banded: far-off-diagonal output blocks must not even appear
+    a = banded_matrix(128, 3, 8)
+    t = spgemm_symbolic(a.coords, a.coords)
+    i, j = t.c_coords[:, 0], t.c_coords[:, 1]
+    assert np.all(np.abs(i - j) <= 2)  # band of blocks only
+    nb = a.nblocks[0]
+    assert t.num_out < nb * nb / 2
+
+
+def test_syrk():
+    a = banded_matrix(80, 5, 8, seed=3)
+    s = syrk(a)
+    ref = a.to_dense() @ a.to_dense().T
+    assert np.allclose(s.to_dense(), ref, atol=1e-4)
+    # result is exactly symmetric in structure
+    codes = {tuple(x) for x in s.coords.tolist()}
+    assert all((j, i) in codes for i, j in codes)
+
+
+@given(tau=st.floats(0.01, 50.0), seed=st.integers(0, 5))
+@settings(max_examples=15, deadline=None)
+def test_spamm_error_bound(tau, seed):
+    a = banded_matrix(64, 4, 8, seed)
+    b = banded_matrix(64, 4, 8, seed + 1)
+    c, bound = spamm(a, b, tau)
+    err = np.linalg.norm(c.to_dense() - a.to_dense() @ b.to_dense())
+    assert bound <= tau + 1e-9
+    assert err <= bound + 1e-3  # float32 numeric slack
+
+
+def test_spamm_skips_work():
+    a = banded_matrix(128, 10, 8)
+    full = spgemm_symbolic(a.coords, a.coords).num_tasks
+    # large tau should prune tasks
+    c, bound = spamm(a, a, tau=a.frobenius_norm())
+    kept = spgemm_symbolic(a.coords, a.coords)  # recompute full for comparison
+    assert c.nnzb <= kept.num_out
+
+
+def test_flop_counting():
+    a = banded_matrix(64, 5, 16)
+    t = spgemm_symbolic(a.coords, a.coords)
+    dense_flops = task_flops(t, 16)
+    exact = exact_spgemm_flops(a, a, t, LeafSpec("block_sparse", inner_bs=4))
+    assert 0 < exact <= dense_flops
+    # dense leaf counting equals task_flops
+    assert exact_spgemm_flops(a, a, t, LeafSpec("dense")) == dense_flops
+
+
+def test_symm_square():
+    from repro.core import symm_square
+
+    a = banded_matrix(64, 5, 8, seed=11)
+    sym = BSMatrix.from_dense(a.to_dense() + a.to_dense().T, 8)
+    sq = symm_square(sym)
+    ref = sym.to_dense() @ sym.to_dense()
+    assert np.allclose(sq.to_dense(), ref, atol=1e-4)

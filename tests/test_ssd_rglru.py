@@ -1,0 +1,111 @@
+"""Recurrent blocks: chunked/parallel forms vs naive sequential recurrences,
+and decode steps vs the parallel form (cache-correctness)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import rglru as rec
+from repro.models import ssd
+
+
+def test_ssd_chunked_matches_sequential():
+    rng = np.random.default_rng(0)
+    B, S, H, P, N = 2, 32, 3, 4, 8
+    xh = jnp.asarray(rng.standard_normal((B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.random((B, S, H)) * 0.5 + 0.1, jnp.float32)
+    a_log = jnp.asarray(np.log(rng.random(H) * 2 + 0.5), jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((B, S, N)), jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((B, S, N)), jnp.float32)
+
+    y, final = ssd.ssd_chunked(xh, dt, a_log, Bm, Cm, chunk=8)
+
+    # naive recurrence
+    A = -np.exp(np.asarray(a_log))
+    h = np.zeros((B, H, P, N))
+    ys = []
+    for t in range(S):
+        dec = np.exp(np.asarray(dt)[:, t] * A)  # [B, H]
+        upd = np.einsum(
+            "bh,bhp,bn->bhpn", np.asarray(dt)[:, t], np.asarray(xh)[:, t], np.asarray(Bm)[:, t]
+        )
+        h = h * dec[..., None, None] + upd
+        ys.append(np.einsum("bhpn,bn->bhp", h, np.asarray(Cm)[:, t]))
+    y_ref = np.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(final), h, rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_chunk_size_invariance():
+    rng = np.random.default_rng(1)
+    B, S, H, P, N = 1, 64, 2, 4, 8
+    xh = jnp.asarray(rng.standard_normal((B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.random((B, S, H)) * 0.3 + 0.1, jnp.float32)
+    a_log = jnp.asarray(np.zeros(H), jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((B, S, N)), jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((B, S, N)), jnp.float32)
+    y8, _ = ssd.ssd_chunked(xh, dt, a_log, Bm, Cm, chunk=8)
+    y16, _ = ssd.ssd_chunked(xh, dt, a_log, Bm, Cm, chunk=16)
+    y64, _ = ssd.ssd_chunked(xh, dt, a_log, Bm, Cm, chunk=64)
+    np.testing.assert_allclose(np.asarray(y8), np.asarray(y16), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y8), np.asarray(y64), rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_block_decode_matches_apply():
+    key = jax.random.key(0)
+    d, d_inner, heads, d_state = 16, 32, 4, 8
+    p, _ = ssd.ssd_block_init(key, d, d_inner=d_inner, heads=heads, d_state=d_state)
+    rng = np.random.default_rng(2)
+    B, S = 2, 12
+    x = jnp.asarray(rng.standard_normal((B, S, d)), jnp.float32)
+    y_par = ssd.ssd_block_apply(p, x, d_inner=d_inner, heads=heads, d_state=d_state, chunk=4)
+    state = ssd.ssd_init_state(B, d_inner=d_inner, heads=heads, d_state=d_state)
+    outs = []
+    for t in range(S):
+        y, state = ssd.ssd_decode_step(
+            p, x[:, t : t + 1], state, d_inner=d_inner, heads=heads, d_state=d_state
+        )
+        outs.append(y)
+    y_seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq), rtol=1e-3, atol=1e-3)
+
+
+def test_rglru_scan_matches_sequential():
+    key = jax.random.key(1)
+    d, heads = 16, 4
+    p, _ = rec.rglru_block_init(key, d, heads)
+    rng = np.random.default_rng(3)
+    B, S = 2, 20
+    u = jnp.asarray(rng.standard_normal((B, S, d)), jnp.float32)
+    y, h_last = rec._rglru_scan(p, u, heads)
+    # sequential
+    r, i = rec._gates(p, u, heads)
+    a = np.exp(
+        -rec._C * np.asarray(jax.nn.softplus(p["lam"])) * np.asarray(r, np.float64)
+    )
+    g = np.sqrt(np.maximum(1 - a**2, 1e-12)) * (np.asarray(i) * np.asarray(u))
+    h = np.zeros((B, d))
+    ys = []
+    for t in range(S):
+        h = a[:, t] * h + g[:, t]
+        ys.append(h.copy())
+    np.testing.assert_allclose(np.asarray(y), np.stack(ys, 1), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_last), h, rtol=1e-4, atol=1e-4)
+
+
+def test_rglru_block_decode_matches_apply():
+    key = jax.random.key(2)
+    d, heads = 16, 4
+    p, _ = rec.rglru_block_init(key, d, heads)
+    rng = np.random.default_rng(4)
+    B, S = 2, 10
+    x = jnp.asarray(rng.standard_normal((B, S, d)), jnp.float32)
+    y_par = rec.rglru_block_apply(p, x, heads=heads)
+    state = rec.rglru_init_state(B, d)
+    outs = []
+    for t in range(S):
+        y, state = rec.rglru_decode_step(p, x[:, t : t + 1], state, heads=heads)
+        outs.append(y)
+    y_seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq), rtol=1e-3, atol=1e-3)

@@ -1,0 +1,100 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The paper's workflow: construct distributed sparse matrices, multiply with
+dynamic locality-aware scheduling, apply to electronic-structure kernels
+(inverse factorization, purification).  These tests run the whole stack —
+symbolic quadtree phase, schedule, numeric phase, truncation — against
+dense oracles.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    BSMatrix,
+    factorization_residual,
+    inv_chol,
+    multiply,
+    sp2_purify,
+    truncate,
+)
+from repro.core.schedule import make_spgemm_plan, plan_stats
+
+from helpers import banded_matrix
+
+
+def test_weak_scaling_families_end_to_end():
+    """The paper's three test families, full pipeline."""
+    rng = np.random.default_rng(0)
+    n, bs, hw = 512, 32, 48
+
+    def banded():
+        a = np.zeros((n, n), dtype=np.float32)
+        for i in range(n):
+            lo, hi = max(0, i - hw), min(n, i + hw + 1)
+            a[i, lo:hi] = rng.standard_normal(hi - lo)
+        return a
+
+    fams = {"banded": banded()}
+    g = banded()
+    g[: n // 4, : n // 4] = rng.standard_normal((n // 4, n // 4))
+    fams["growing"] = g
+    r = banded()
+    s = n // 8
+    for st in (0, n // 2):
+        r[st : st + s, st : st + s] = rng.standard_normal((s, s))
+    fams["random"] = r
+
+    for name, dense in fams.items():
+        a = BSMatrix.from_dense(dense, bs)
+        c = multiply(a, a)
+        assert np.allclose(c.to_dense(), dense @ dense, atol=1e-2), name
+        plan = make_spgemm_plan(a.coords, a.coords, 4, bs)
+        st = plan_stats(plan)
+        assert st["task_balance"] < 2.0, (name, st)
+
+
+def test_electronic_structure_pipeline():
+    """inv-factorize overlap, transform, purify — the paper's app domain."""
+    rng = np.random.default_rng(3)
+    n, bs, nocc = 128, 16, 40
+    h = np.zeros((n, n), dtype=np.float32)
+    for i in range(n):
+        lo, hi = max(0, i - 3), min(n, i + 4)
+        h[i, lo:hi] = 0.2 * rng.standard_normal(hi - lo)
+    h = (h + h.T) / 2 + np.diag(np.linspace(-1, 1, n))
+    f = BSMatrix.from_dense(h, bs)
+    s = BSMatrix.from_dense(np.eye(n, dtype=np.float32) + 0.01 * np.abs(h), bs)
+    z = inv_chol(s)
+    assert factorization_residual(s, z) < 1e-4
+    f_o = multiply(multiply(z.transpose(), f), z)
+    w = np.linalg.eigvalsh(np.asarray(f_o.to_dense(), np.float64))
+    d, stats = sp2_purify(
+        f_o, nocc, float(w.min()) - 0.05, float(w.max()) + 0.05, idem_tol=1e-5, trunc_tau=1e-5
+    )
+    assert abs(d.trace() - nocc) < 0.05
+    x2 = multiply(d, d)
+    assert np.abs(x2.to_dense() - d.to_dense()).max() < 1e-2  # idempotent
+
+
+def test_truncated_multiply_chain_error_accumulation():
+    """Chained multiply+truncate keeps controlled total error (library use)."""
+    a = banded_matrix(256, 8, 16, seed=9)
+    a = a.scale(1.0 / np.linalg.norm(a.to_dense(), 2))
+    exact = a.to_dense().astype(np.float64)
+    approx = a
+    tau = 1e-4
+    for _ in range(3):
+        exact = exact @ exact
+        approx = truncate(multiply(approx, approx), tau)
+    err = np.linalg.norm(approx.to_dense() - exact)
+    assert err < 50 * tau
+
+
+def test_quadtree_sparsity_survives_squaring():
+    a = banded_matrix(512, 4, 16)
+    c = multiply(a, a)
+    nb = a.nblocks[0]
+    assert c.nnzb < 0.2 * nb * nb  # banded^2 is still banded (width doubles)
