@@ -1,0 +1,73 @@
+"""Distributed density-matrix purification on a worker mesh, end to end.
+
+The full iterative SP2 loop on device-resident matrices (repro.dist): the
+Hamiltonian is scattered to the mesh once, every iterate (multiply, add,
+trace, Frobenius norm, truncate) stays sharded across the workers, and the
+structure-keyed PlanCache makes iterations on a stationary sparsity pattern
+pure device work — the CHT chunk-cache behaviour of the paper, on XLA.
+
+Run:  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python examples/distributed_purification.py
+"""
+
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import BSMatrix, multiply, sp2_purify  # noqa: E402
+from repro.core.distributed import make_worker_mesh  # noqa: E402
+from repro.dist import PlanCache, dist_sp2_purify  # noqa: E402
+
+P = 8
+N, BS, NOCC = 512, 32, 160
+
+assert jax.device_count() == P, f"need {P} devices, got {jax.device_count()}"
+
+# banded Hamiltonian with decaying off-diagonals + spectral gap
+rng = np.random.default_rng(7)
+h = np.zeros((N, N), dtype=np.float32)
+for i in range(N):
+    lo, hi = max(0, i - 6), min(N, i + 7)
+    h[i, lo:hi] = 0.2 * rng.standard_normal(hi - lo)
+h = (h + h.T) / 2 + np.diag(np.linspace(-2.0, 2.0, N))
+f = BSMatrix.from_dense(h, BS)
+w = np.linalg.eigvalsh(h.astype(np.float64))
+lmin, lmax = float(w.min()) - 0.05, float(w.max()) + 0.05
+print(f"F: n={N} bs={BS} nnzb={f.nnzb}  spec=[{lmin:.2f}, {lmax:.2f}]  mesh={P}")
+
+mesh = make_worker_mesh(P)
+cache = PlanCache()
+d, stats = dist_sp2_purify(
+    f, NOCC, lmin, lmax, mesh, idem_tol=1e-5, trunc_tau=1e-5, cache=cache
+)
+
+print(f"\nconverged in {stats.iterations} iterations")
+print(f"trace(D) = {d.trace():.3f}  (n_occ = {NOCC})")
+idem = np.abs(multiply(d, d).to_dense() - d.to_dense()).max()
+print(f"max |D^2 - D| = {idem:.2e}  (idempotency)")
+
+c = stats.cache
+print(f"\nplan cache: {c['hits']} hits / {c['misses']} misses over "
+      f"{stats.iterations} iterations")
+all_hit = sum(1 for pi in stats.per_iter if pi["cache_misses"] == 0)
+warm = [pi["wall_s"] for pi in stats.per_iter if pi["cache_misses"] == 0]
+cold = [pi["wall_s"] for pi in stats.per_iter if pi["cache_misses"] > 0]
+if warm and cold:
+    print(f"{all_hit} iterations ran with zero planning/compilation: "
+          f"{np.mean(warm)*1e3:.1f} ms vs {np.mean(cold)*1e3:.1f} ms "
+          f"({np.mean(cold)/np.mean(warm):.0f}x)")
+print("\nper-iteration (last 5):")
+for pi in stats.per_iter[-5:]:
+    print(f"  it={pi['iteration']:3d} nnzb={pi['nnzb']:4d} idem={pi['idem']:.2e} "
+          f"hits={pi['cache_hits']} misses={pi['cache_misses']} "
+          f"wall={pi['wall_s']*1e3:6.1f} ms")
+
+# cross-check against the single-host driver
+d_ref, _ = sp2_purify(f, NOCC, lmin, lmax, idem_tol=1e-5, trunc_tau=1e-5, impl="ref")
+err = np.abs(d.to_dense() - d_ref.to_dense()).max()
+print(f"\nmax |D_dist - D_host| = {err:.2e}")
+assert err < 1e-4

@@ -5,6 +5,12 @@ n_occ, compute the density matrix D = theta(mu*I - F) (projector onto the
 n_occ lowest eigenstates) using only the library's multiply / add / trace /
 truncate task types — the multiplication-heavy workload the library was built
 for (paper refs 15, 3).
+
+The SP2 *policy* (initial congruence coefficients, branch selection,
+convergence / divergence tests) is factored out so the single-host driver
+here and the device-resident distributed driver in
+:mod:`repro.dist.purify` run the identical iteration on different matrix
+backends.
 """
 
 from __future__ import annotations
@@ -16,7 +22,55 @@ from .matrix import BSMatrix
 from .spgemm import multiply
 from .truncate import truncate
 
-__all__ = ["sp2_purify", "PurifyStats"]
+__all__ = [
+    "sp2_purify",
+    "PurifyStats",
+    "sp2_init_coeffs",
+    "sp2_should_square",
+    "Sp2Monitor",
+]
+
+
+def sp2_init_coeffs(lmin: float, lmax: float) -> tuple[float, float]:
+    """(scale, shift) with X0 = scale*F + shift*I = (lmax*I - F)/(lmax - lmin),
+    mapping spec(F) in [lmin, lmax] onto [0, 1] reversed."""
+    span = lmax - lmin
+    return -1.0 / span, lmax / span
+
+
+def sp2_should_square(trace: float, n_occ: float) -> bool:
+    """Trace-correcting branch: X <- X^2 when trace(X) > n_occ, else 2X - X^2."""
+    return trace > n_occ
+
+
+@dataclasses.dataclass
+class Sp2Monitor:
+    """Convergence / divergence bookkeeping shared by both SP2 drivers.
+
+    Tracks the most idempotent iterate seen; ``done`` flags convergence
+    (idempotency below tolerance) or divergence (in finite precision
+    eigenvalues drift outside [0, 1] and repeated squaring blows up — stop
+    once idempotency regresses 4x past the best seen, and report the best
+    iterate instead of iterating past the noise floor).
+    """
+
+    idem_tol: float
+    best_idem: float = float("inf")
+    best_iter: int = -1
+    improved: bool = False  # whether the last update() set a new best
+
+    def update(self, it: int, idem: float) -> bool:
+        """Record iteration ``it``; return True when the loop should stop.
+
+        ``improved`` afterwards tells the caller whether this iterate is the
+        new most-idempotent one (so it can retain it as the result).
+        """
+        self.improved = idem < self.best_idem
+        if self.improved:
+            self.best_idem, self.best_iter = idem, it
+        if idem <= self.idem_tol:
+            return True
+        return idem > 4.0 * self.best_idem
 
 
 @dataclasses.dataclass
@@ -43,10 +97,11 @@ def sp2_purify(
     X0 = (lmax*I - F) / (lmax - lmin); then X <- X^2 when trace(X) > n_occ
     else X <- 2X - X^2, until idempotency ||X^2 - X|| is below tolerance.
     """
-    span = lmax - lmin
-    x = add_scaled_identity(f.scale(-1.0 / span), lmax / span)
+    scale, shift = sp2_init_coeffs(lmin, lmax)
+    x = add_scaled_identity(f.scale(scale), shift)
     traces, idems, nnzbs = [], [], []
-    best, best_idem = x, float("inf")
+    monitor = Sp2Monitor(idem_tol)
+    best = x
     for it in range(max_iter):
         x2 = multiply(x, x, impl=impl)
         idem = add(x2, x, 1.0, -1.0).frobenius_norm()
@@ -54,16 +109,12 @@ def sp2_purify(
         traces.append(tr)
         idems.append(idem)
         nnzbs.append(x.nnzb)
-        if idem < best_idem:
-            best, best_idem = x, idem
-        if idem <= idem_tol:
+        stop = monitor.update(it, idem)
+        if monitor.improved:
+            best = x
+        if stop:
             break
-        # divergence guard: in finite precision eigenvalues drift outside
-        # [0, 1] and repeated squaring then blows up — return the most
-        # idempotent iterate seen instead of iterating past the noise floor.
-        if idem > 4.0 * best_idem:
-            break
-        if tr > n_occ:
+        if sp2_should_square(tr, n_occ):
             x = x2
         else:
             x = add(x, x2, 2.0, -1.0)

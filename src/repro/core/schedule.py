@@ -25,6 +25,7 @@ the comparison (bytes moved per device) is the Fig 1c experiment.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 
 import numpy as np
 
@@ -37,7 +38,31 @@ __all__ = [
     "SpgemmPlan",
     "make_spgemm_plan",
     "plan_stats",
+    "structure_fingerprint",
+    "plan_fetch",
+    "local_fetch_index",
 ]
+
+
+def structure_fingerprint(*parts) -> str:
+    """Stable hex digest of a structure: arrays hashed by bytes, scalars by repr.
+
+    The chunk-cache key analogue: two matrices with identical Morton codes
+    (and two plans over identical structures) produce identical fingerprints
+    across processes — ``hash()`` randomization and object identity play no
+    role.  Used by :class:`repro.dist.PlanCache`.
+    """
+    h = hashlib.blake2b(digest_size=16)
+    for part in parts:
+        if isinstance(part, np.ndarray):
+            arr = np.ascontiguousarray(part)
+            h.update(str(arr.dtype).encode())
+            h.update(str(arr.shape).encode())
+            h.update(arr.tobytes())
+        else:
+            h.update(repr(part).encode())
+        h.update(b"|")
+    return h.hexdigest()
 
 
 def partition_morton(
@@ -136,6 +161,58 @@ class SpgemmPlan:
         )
 
 
+def plan_fetch(x_owner: np.ndarray, x_slot: np.ndarray, needs: list, nparts: int):
+    """Plan ppermute rounds delivering, to each device, the blocks it needs.
+
+    ``needs[dst]`` is a sorted-unique array of global block indices device
+    ``dst`` must end up holding (its own blocks are skipped — they are already
+    resident).  Remote blocks arrive via one ``ppermute`` per ring offset
+    ``d = (dst - src) mod nparts``; the receive layout on ``dst`` is blocks
+    sorted by global index, per offset.  Returns ``(offsets, send_pad,
+    send_cnt, recv_pos)`` where ``recv_pos[(dst, g)] = (offset, position)``.
+
+    This is the chunk-fetch planner shared by the multiply schedule and the
+    device-resident collectives in :mod:`repro.dist`.
+    """
+    send: dict[int, list] = {}
+    recv_pos = {}  # (dst, global block) -> (offset, position)
+    for dst in range(nparts):
+        need = np.asarray(needs[dst], dtype=np.int64)
+        remote = need[x_owner[need] != dst] if need.size else need
+        for src in np.unique(x_owner[remote]) if remote.size else []:
+            d = int((dst - src) % nparts)
+            blocks = remote[x_owner[remote] == src]  # sorted (np.unique)
+            send.setdefault(d, [np.zeros(0, np.int32)] * nparts)
+            send[d][src] = x_slot[blocks].astype(np.int32)
+            for pos, g in enumerate(blocks):
+                recv_pos[(dst, int(g))] = (d, pos)
+    offsets = tuple(sorted(send.keys()))
+    send_pad = {d: _pad_ragged(send[d], 0) for d in offsets}
+    send_cnt = {
+        d: np.array([len(x) for x in send[d]], dtype=np.int64) for d in offsets
+    }
+    return offsets, send_pad, send_cnt, recv_pos
+
+
+def local_fetch_index(
+    x_owner, x_slot, offsets, send_pad, recv_pos, cap: int, g: int, dev: int
+) -> int:
+    """Index of global block ``g`` in device ``dev``'s local p2p buffer.
+
+    Buffer layout during execution: ``[ own store (cap) | recv buffers per
+    offset, in offset order ]`` — matches :func:`plan_fetch`'s receive layout.
+    """
+    if x_owner[g] == dev:
+        return int(x_slot[g])
+    d, pos = recv_pos[(dev, int(g))]
+    base = cap
+    for dd in offsets:
+        if dd == d:
+            break
+        base += send_pad[dd].shape[1]
+    return base + pos
+
+
 def _owner_slots(owner: np.ndarray, nparts: int):
     """Local slot per block + per-part store index lists."""
     slot = np.zeros(owner.shape[0], dtype=np.int32)
@@ -157,8 +234,15 @@ def make_spgemm_plan(
     exchange: str = "p2p",  # p2p | allgather
     tasks: Tasks | None = None,
     seed: int = 0,
+    a_owner: np.ndarray | None = None,
+    b_owner: np.ndarray | None = None,
 ) -> SpgemmPlan:
-    """Plan a distributed multiply: placement, task schedule, exchange."""
+    """Plan a distributed multiply: placement, task schedule, exchange.
+
+    ``a_owner`` / ``b_owner`` pin the operand placements to externally-fixed
+    maps (device-resident operands — :class:`repro.dist.DistBSMatrix` — whose
+    stores must not be reshuffled); when omitted they are chosen here.
+    """
     tasks = tasks if tasks is not None else spgemm_symbolic(a_coords, b_coords)
     na, nb, nc = a_coords.shape[0], b_coords.shape[0], tasks.num_out
 
@@ -167,14 +251,21 @@ def make_spgemm_plan(
         # weight C blocks by task count (flops); A/B by uniform block weight
         cw = np.bincount(tasks.c_idx, minlength=nc).astype(np.float64)
         c_owner = partition_morton(nc, nparts, cw)
-        a_owner = partition_morton(na, nparts)
-        b_owner = partition_morton(nb, nparts)
+        if a_owner is None:
+            a_owner = partition_morton(na, nparts)
+        if b_owner is None:
+            b_owner = partition_morton(nb, nparts)
     elif placement == "random":
         c_owner = partition_random(nc, nparts, seed)
-        a_owner = partition_random(na, nparts, seed + 1)
-        b_owner = partition_random(nb, nparts, seed + 2)
+        if a_owner is None:
+            a_owner = partition_random(na, nparts, seed + 1)
+        if b_owner is None:
+            b_owner = partition_random(nb, nparts, seed + 2)
     else:
         raise ValueError(placement)
+    a_owner = np.asarray(a_owner, dtype=np.int32)
+    b_owner = np.asarray(b_owner, dtype=np.int32)
+    assert a_owner.shape == (na,) and b_owner.shape == (nb,)
 
     a_slot, a_stores = _owner_slots(a_owner, nparts)
     b_slot, b_stores = _owner_slots(b_owner, nparts)
@@ -200,31 +291,14 @@ def make_spgemm_plan(
 
     # -- exchange plan (chunk fetches) ---------------------------------------
     # For matrix X in {A, B}: device p needs the distinct X blocks referenced
-    # by its tasks; those owned elsewhere arrive via ppermute rounds keyed by
-    # ring offset d = (dst - src) mod P.  Receive layout on dst: blocks sorted
-    # by global index, per offset.
+    # by its tasks; those owned elsewhere arrive via the rounds planned by
+    # plan_fetch.
     def _exchange(x_owner, x_slot, ref_idx):
         needs = [
             np.unique(ref_idx[t_owner == p]) if np.any(t_owner == p) else np.zeros(0, np.int64)
             for p in range(nparts)
         ]
-        send: dict[int, list] = {}
-        recv_pos = {}  # (dst, global block) -> (offset, position)
-        for dst in range(nparts):
-            remote = needs[dst][x_owner[needs[dst]] != dst]
-            for src in np.unique(x_owner[remote]) if remote.size else []:
-                d = int((dst - src) % nparts)
-                blocks = remote[x_owner[remote] == src]  # sorted (np.unique)
-                send.setdefault(d, [np.zeros(0, np.int32)] * nparts)
-                send[d][src] = x_slot[blocks].astype(np.int32)
-                for pos, g in enumerate(blocks):
-                    recv_pos[(dst, int(g))] = (d, pos)
-        offsets = tuple(sorted(send.keys()))
-        send_pad = {d: _pad_ragged(send[d], 0) for d in offsets}
-        send_cnt = {
-            d: np.array([len(x) for x in send[d]], dtype=np.int64) for d in offsets
-        }
-        return offsets, send_pad, send_cnt, recv_pos
+        return plan_fetch(x_owner, x_slot, needs, nparts)
 
     if exchange == "p2p":
         a_offsets, a_send, a_send_cnt, a_recv_pos = _exchange(a_owner, a_slot, tasks.a_idx)
@@ -241,15 +315,9 @@ def make_spgemm_plan(
         if exchange == "allgather":
             # gathered layout: [owner0 store | owner1 store | ...]
             return int(x_owner[g]) * cap + int(x_slot[g])
-        if x_owner[g] == dev:
-            return int(x_slot[g])
-        d, pos = recv_pos[(dev, int(g))]
-        base = cap
-        for dd in offsets:
-            if dd == d:
-                break
-            base += send_pad[dd].shape[1]
-        return base + pos
+        return local_fetch_index(
+            x_owner, x_slot, offsets, send_pad, recv_pos, cap, g, dev
+        )
 
     task_a_l, task_b_l, task_c_l = [], [], []
     for p in range(nparts):

@@ -1,0 +1,49 @@
+"""Device-resident distributed matrix runtime — the CHT worker-storage layer.
+
+The paper's CHT-MPI runtime keeps chunks resident in worker storage and
+caches the chunks tasks touch, so iterative algorithms never re-ship
+operands between operations.  This package is that layer for the XLA mesh:
+
+* :class:`DistBSMatrix` (:mod:`repro.dist.matrix`) — a sharded block-sparse
+  matrix whose padded per-device stores live on the worker mesh *across*
+  operations; host-side structure (coords, owner, slot maps); enters via
+  :func:`scatter`, leaves via :meth:`DistBSMatrix.gather`.
+* :class:`PlanCache` (:mod:`repro.dist.cache`) — structure-keyed cache of
+  symbolic plans, device-resident plan arrays, and jitted shard_map
+  executables, with hit/miss metrics.
+* resident collectives (:mod:`repro.dist.collectives`) — ``dist_add``
+  (structure union, owner-aligned re-slotting), ``dist_scale``,
+  ``dist_trace`` / ``dist_frobenius_norm`` (psum reductions),
+  ``dist_truncate`` (host symbolic selection, device compaction).
+* :func:`dist_multiply` (:mod:`repro.dist.multiply`) — C = A @ B on resident
+  operands through the cached schedule.
+* :func:`dist_sp2_purify` (:mod:`repro.dist.purify`) — the full SP2 loop on
+  resident matrices with per-iteration cache/comm stats.
+"""
+
+from .cache import PlanCache
+from .collectives import (
+    dist_add,
+    dist_frobenius_norm,
+    dist_scale,
+    dist_trace,
+    dist_truncate,
+)
+from .matrix import DistBSMatrix, scatter
+from .multiply import dist_multiply, multiply_plan_key
+from .purify import DistPurifyStats, dist_sp2_purify
+
+__all__ = [
+    "DistBSMatrix",
+    "scatter",
+    "PlanCache",
+    "dist_add",
+    "dist_scale",
+    "dist_trace",
+    "dist_frobenius_norm",
+    "dist_truncate",
+    "dist_multiply",
+    "multiply_plan_key",
+    "dist_sp2_purify",
+    "DistPurifyStats",
+]

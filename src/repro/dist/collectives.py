@@ -1,0 +1,363 @@
+"""Distributed linear-algebra collectives over resident stores.
+
+Everything here follows the same shape as the multiply schedule: a host-side
+symbolic phase per *structure* (cached in :class:`~repro.dist.cache.PlanCache`)
+producing small index arrays and a jitted ``shard_map`` program, and a device
+phase that only ever touches the resident stores:
+
+* :func:`dist_add` — C = alpha*A + beta*B, structure union with owner-aligned
+  re-slotting: union blocks inherit A's owner where present, else B's, so
+  only B-copies of overlapping blocks ever cross a device boundary (planned
+  as ``ppermute`` rounds via :func:`repro.core.schedule.plan_fetch`).
+* :func:`dist_trace` / :func:`dist_frobenius_norm` — local masked reductions
+  followed by a ``psum`` over the worker axis.
+* :func:`dist_truncate` — device-computed block norms, host symbolic
+  selection (identical error control to :func:`repro.core.truncate.truncate`),
+  device-side compaction gather; blocks keep their owners so no data moves.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.distributed import AXIS, _exchange_bufs
+from repro.core.schedule import (
+    _owner_slots,
+    local_fetch_index,
+    plan_fetch,
+    structure_fingerprint,
+)
+from repro.jax_compat import shard_map
+
+from .cache import PlanCache
+from .matrix import DistBSMatrix, mesh_key
+
+__all__ = [
+    "dist_add",
+    "dist_scale",
+    "dist_trace",
+    "dist_frobenius_norm",
+    "dist_truncate",
+]
+
+
+def _put(mesh, x):
+    return jax.device_put(jnp.asarray(x), NamedSharding(mesh, P(AXIS)))
+
+
+def _structure_key(a: DistBSMatrix) -> tuple:
+    return (
+        structure_fingerprint(a.codes(), a.owner, a.nparts, a.bs),
+        mesh_key(a.mesh),
+    )
+
+
+# --------------------------------------------------------------------------
+# add
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _AddSpec:
+    nparts: int
+    a_offsets: tuple
+    b_offsets: tuple
+
+
+def _acc_dtype(*dtypes):
+    """Accumulate in at least float32, wider if the stores are wider."""
+    out = jnp.float32
+    for dt in dtypes:
+        out = jnp.promote_types(out, dt)
+    return out
+
+
+def _mapped_add(
+    a_store, b_store, idx_a, idx_b, val_a, val_b, alpha, beta, *sends, spec
+):
+    na = len(spec.a_offsets)
+    acc = _acc_dtype(a_store.dtype, b_store.dtype)
+    a_all = _exchange_bufs(a_store[0], spec.a_offsets, sends[:na], spec.nparts)
+    b_all = _exchange_bufs(b_store[0], spec.b_offsets, sends[na:], spec.nparts)
+    c = alpha.astype(acc) * a_all[idx_a[0]].astype(acc) * val_a[0][:, None, None].astype(acc)
+    c += beta.astype(acc) * b_all[idx_b[0]].astype(acc) * val_b[0][:, None, None].astype(acc)
+    return c[None]
+
+
+class AddExecutable:
+    """Planned structure-union add bound to a mesh; alpha/beta are runtime
+    scalars so one executable serves every coefficient pair."""
+
+    def __init__(self, a: DistBSMatrix, b: DistBSMatrix):
+        nparts, mesh = a.nparts, a.mesh
+        a_codes, b_codes = a.codes(), b.codes()
+        c_codes = np.union1d(a_codes, b_codes)  # sorted == Morton order
+        nc = int(c_codes.size)
+        pos_a = np.searchsorted(c_codes, a_codes)
+        pos_b = np.searchsorted(c_codes, b_codes)
+        # owner-aligned re-slotting: A's owner wins on overlap -> A blocks
+        # never move; B-only blocks inherit B's owner and never move either.
+        c_owner = np.zeros(nc, dtype=np.int32)
+        c_owner[pos_b] = b.owner
+        c_owner[pos_a] = a.owner
+        c_slot, c_stores = _owner_slots(c_owner, nparts)
+        c_cap = max(max((len(s) for s in c_stores), default=0), 1)
+
+        # which A/B blocks each device needs (ascending by construction)
+        def needs(x_pos, x_owner):
+            dst_of = c_owner[x_pos]
+            return [
+                np.nonzero(dst_of == p)[0].astype(np.int64) for p in range(nparts)
+            ]
+
+        a_offsets, a_send, _, a_recv = plan_fetch(
+            a.owner, a.slot, needs(pos_a, a.owner), nparts
+        )
+        b_offsets, b_send, _, b_recv = plan_fetch(
+            b.owner, b.slot, needs(pos_b, b.owner), nparts
+        )
+
+        # union position -> source block index (or -1)
+        from_a = -np.ones(nc, dtype=np.int64)
+        from_b = -np.ones(nc, dtype=np.int64)
+        from_a[pos_a] = np.arange(a.nnzb)
+        from_b[pos_b] = np.arange(b.nnzb)
+
+        idx_a = np.zeros((nparts, c_cap), dtype=np.int32)
+        idx_b = np.zeros((nparts, c_cap), dtype=np.int32)
+        val_a = np.zeros((nparts, c_cap), dtype=np.float32)
+        val_b = np.zeros((nparts, c_cap), dtype=np.float32)
+        for p, s in enumerate(c_stores):
+            for local, u in enumerate(s):
+                ga, gb = from_a[u], from_b[u]
+                if ga >= 0:
+                    idx_a[p, local] = local_fetch_index(
+                        a.owner, a.slot, a_offsets, a_send, a_recv, a.cap, ga, p
+                    )
+                    val_a[p, local] = 1.0
+                if gb >= 0:
+                    idx_b[p, local] = local_fetch_index(
+                        b.owner, b.slot, b_offsets, b_send, b_recv, b.cap, gb, p
+                    )
+                    val_b[p, local] = 1.0
+
+        from repro.core.quadtree import morton_decode
+
+        r, c = morton_decode(c_codes)
+        self.c_coords = np.stack([r, c], axis=1)
+        self.c_owner = c_owner
+        self.c_slot = c_slot
+        self.c_cap = c_cap
+        self.mesh = mesh
+        spec = _AddSpec(nparts, a_offsets, b_offsets)
+        self._plan_args = [
+            _put(mesh, idx_a),
+            _put(mesh, idx_b),
+            _put(mesh, val_a),
+            _put(mesh, val_b),
+        ]
+        self._sends = [_put(mesh, a_send[d]) for d in a_offsets] + [
+            _put(mesh, b_send[d]) for d in b_offsets
+        ]
+        nargs = 2 + len(self._plan_args)
+        self._mapped = jax.jit(
+            shard_map(
+                functools.partial(_mapped_add, spec=spec),
+                mesh=mesh,
+                in_specs=tuple(P(AXIS) for _ in range(nargs))
+                + (P(), P())
+                + tuple(P(AXIS) for _ in self._sends),
+                out_specs=P(AXIS),
+                check_vma=False,
+            )
+        )
+
+    def __call__(self, a_store, b_store, alpha, beta):
+        return self._mapped(
+            a_store,
+            b_store,
+            *self._plan_args,
+            jnp.float32(alpha),
+            jnp.float32(beta),
+            *self._sends,
+        )
+
+
+def dist_add(
+    a: DistBSMatrix,
+    b: DistBSMatrix,
+    alpha=1.0,
+    beta=1.0,
+    cache: PlanCache | None = None,
+) -> DistBSMatrix:
+    """C = alpha*A + beta*B on resident stores; structure-union plan cached."""
+    assert a.shape == b.shape and a.bs == b.bs, (a.shape, b.shape, a.bs, b.bs)
+    key = ("add", _structure_key(a), _structure_key(b))
+    build = lambda: AddExecutable(a, b)
+    exe = cache.get_or_build(key, build) if cache is not None else build()
+    store = exe(a.store, b.store, alpha, beta).astype(
+        jnp.result_type(a.dtype, b.dtype)
+    )
+    return DistBSMatrix(
+        shape=tuple(a.shape),
+        bs=a.bs,
+        coords=exe.c_coords,
+        owner=exe.c_owner,
+        slot=exe.c_slot,
+        cap=exe.c_cap,
+        store=store,
+        mesh=a.mesh,
+    )
+
+
+def dist_scale(a: DistBSMatrix, alpha) -> DistBSMatrix:
+    """alpha * A; purely local, no plan needed."""
+    return a.scale(alpha)
+
+
+# --------------------------------------------------------------------------
+# reductions
+# --------------------------------------------------------------------------
+
+
+def _mapped_masked_trace(store, mask):
+    acc = _acc_dtype(store.dtype)
+    tr = jnp.einsum("cii->c", store[0].astype(acc))
+    return jax.lax.psum(jnp.sum(tr * mask[0].astype(acc)), AXIS)
+
+
+def _mapped_masked_sumsq(store, mask):
+    acc = _acc_dtype(store.dtype)
+    sq = jnp.sum(store[0].astype(acc) ** 2, axis=(1, 2))
+    return jax.lax.psum(jnp.sum(sq * mask[0].astype(acc)), AXIS)
+
+
+class _ReduceExecutable:
+    def __init__(self, a: DistBSMatrix, body, mask: np.ndarray):
+        self._mask = _put(a.mesh, mask)
+        self._mapped = jax.jit(
+            shard_map(
+                body,
+                mesh=a.mesh,
+                in_specs=(P(AXIS), P(AXIS)),
+                out_specs=P(),
+                check_vma=False,
+            )
+        )
+
+    def __call__(self, store):
+        return self._mapped(store, self._mask)
+
+
+def _valid_mask(a: DistBSMatrix) -> np.ndarray:
+    _, valid = a.store_maps()
+    return valid.astype(np.float32)
+
+
+def dist_trace(a: DistBSMatrix, cache: PlanCache | None = None) -> float:
+    """trace(A): psum of masked per-device diagonal-block traces."""
+    def build():
+        mask = np.zeros((a.nparts, a.cap), dtype=np.float32)
+        diag = a.coords[:, 0] == a.coords[:, 1]
+        mask[a.owner[diag], a.slot[diag]] = 1.0
+        return _ReduceExecutable(a, _mapped_masked_trace, mask)
+
+    key = ("trace", _structure_key(a))
+    exe = cache.get_or_build(key, build) if cache is not None else build()
+    return float(exe(a.store))
+
+
+def dist_frobenius_norm(a: DistBSMatrix, cache: PlanCache | None = None) -> float:
+    """||A||_F: psum of per-device masked block sum-of-squares."""
+    def build():
+        return _ReduceExecutable(a, _mapped_masked_sumsq, _valid_mask(a))
+
+    key = ("fro", _structure_key(a))
+    exe = cache.get_or_build(key, build) if cache is not None else build()
+    return float(np.sqrt(exe(a.store)))
+
+
+# --------------------------------------------------------------------------
+# truncation
+# --------------------------------------------------------------------------
+
+
+@jax.jit
+def _block_norms_sq(store):
+    return jnp.sum(store.astype(_acc_dtype(store.dtype)) ** 2, axis=(2, 3))
+
+
+def _mapped_compact(store, gidx, gval):
+    return (store[0][gidx[0]] * gval[0][:, None, None].astype(store.dtype))[None]
+
+
+class _CompactExecutable:
+    def __init__(self, a: DistBSMatrix, gidx: np.ndarray, gval: np.ndarray):
+        self._args = [_put(a.mesh, gidx), _put(a.mesh, gval)]
+        self._mapped = jax.jit(
+            shard_map(
+                _mapped_compact,
+                mesh=a.mesh,
+                in_specs=(P(AXIS), P(AXIS), P(AXIS)),
+                out_specs=P(AXIS),
+                check_vma=False,
+            )
+        )
+
+    def __call__(self, store):
+        return self._mapped(store, *self._args)
+
+
+def dist_truncate(
+    a: DistBSMatrix, tau: float, cache: PlanCache | None = None
+) -> DistBSMatrix:
+    """Drop smallest-norm blocks with sqrt(sum of dropped norms^2) <= tau.
+
+    Block norms are computed on device (only the tiny [P, cap] norm table
+    crosses to the host); the greedy global selection is the same error
+    control as :func:`repro.core.truncate.truncate`; surviving blocks are
+    compacted device-side and keep their owners, so truncation moves no
+    block data between devices.
+    """
+    if a.nnzb == 0 or tau <= 0:
+        return a
+    norms_sq = np.asarray(_block_norms_sq(a.store))  # [P, cap] -> host (small)
+    n_sq = norms_sq[a.owner, a.slot].astype(np.float64)
+    order = np.argsort(n_sq)
+    csum = np.sqrt(np.cumsum(n_sq[order]))
+    ndrop = int(np.searchsorted(csum, tau, side="right"))
+    if ndrop == 0:
+        return a
+    keep = np.ones(a.nnzb, dtype=bool)
+    keep[order[:ndrop]] = False
+    kept = np.nonzero(keep)[0]
+
+    new_owner = a.owner[kept]
+    new_slot, new_stores = _owner_slots(new_owner, a.nparts)
+    new_cap = max(max((len(s) for s in new_stores), default=0), 1)
+    gidx = np.zeros((a.nparts, new_cap), dtype=np.int32)
+    gval = np.zeros((a.nparts, new_cap), dtype=np.float32)
+    for p, s in enumerate(new_stores):
+        old = a.slot[kept[s]]
+        gidx[p, : len(s)] = old
+        gval[p, : len(s)] = 1.0
+
+    key = ("truncate", _structure_key(a), structure_fingerprint(kept))
+    build = lambda: _CompactExecutable(a, gidx, gval)
+    exe = cache.get_or_build(key, build) if cache is not None else build()
+    return DistBSMatrix(
+        shape=tuple(a.shape),
+        bs=a.bs,
+        coords=a.coords[kept],
+        owner=new_owner,
+        slot=new_slot,
+        cap=new_cap,
+        store=exe(a.store),
+        mesh=a.mesh,
+    )

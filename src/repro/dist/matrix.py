@@ -1,0 +1,165 @@
+"""Device-resident distributed block-sparse matrix.
+
+:class:`DistBSMatrix` is the persistent distributed object the CHT runtime
+keeps in worker chunk storage: the *values* live sharded across a 1-D worker
+mesh as one padded per-device store ``[P, cap, bs, bs]`` and STAY there
+across operations; the *structure* (Morton-sorted block coords plus the
+owner / slot placement maps) lives on the host where all symbolic decisions
+are made.  A matrix enters the mesh once via :func:`scatter` and leaves only
+at the algorithm boundary via :meth:`DistBSMatrix.gather` — iterative
+algorithms (``repro.dist.purify``) never ship operand blocks from the host
+between operations.
+
+Layout invariants (relied on by every planner in this package):
+
+* ``owner[g]`` is the device holding global block ``g``; ``slot[g]`` is its
+  row in that device's store, and slots are assigned in ascending global
+  (Morton) order within each owner — exactly
+  :func:`repro.core.schedule._owner_slots`.
+* ``cap == max(blocks per device, 1)``; store rows past a device's last
+  valid slot are padding with UNSPECIFIED content (kernel trash rows) — every
+  consumer masks by validity rather than assuming zeros.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.distributed import AXIS, make_worker_mesh
+from repro.core.matrix import BSMatrix
+from repro.core.quadtree import morton_encode
+from repro.core.schedule import _owner_slots, partition_morton
+
+__all__ = ["DistBSMatrix", "scatter", "mesh_key"]
+
+
+def mesh_key(mesh: Mesh) -> tuple:
+    """Device identity of a mesh — part of every plan-cache key, so a shared
+    PlanCache never replays an executable jitted for a different mesh."""
+    return tuple(int(d.id) for d in mesh.devices.flat)
+
+
+def _store_sharding(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P(AXIS))
+
+
+@dataclasses.dataclass(frozen=True)
+class DistBSMatrix:
+    """Sharded block-sparse matrix resident on a worker mesh.
+
+    Attributes:
+      shape:  logical (rows, cols).
+      bs:     leaf block size.
+      coords: host [nnzb, 2] block (row, col), Morton sorted.
+      owner:  host [nnzb] int32 — device holding each block.
+      slot:   host [nnzb] int32 — row within the owner's store.
+      cap:    store rows per device (max blocks on any device, >= 1).
+      store:  device [P, cap, bs, bs], sharded over the mesh's worker axis;
+              rows past a device's valid count are unspecified padding.
+      mesh:   the worker mesh the store lives on.
+    """
+
+    shape: tuple[int, int]
+    bs: int
+    coords: np.ndarray
+    owner: np.ndarray
+    slot: np.ndarray
+    cap: int
+    store: jax.Array
+    mesh: Mesh
+
+    def __post_init__(self):
+        assert self.coords.ndim == 2 and self.coords.shape[1] == 2
+        assert self.owner.shape == self.slot.shape == (self.coords.shape[0],)
+        assert self.store.shape == (
+            self.nparts,
+            self.cap,
+            self.bs,
+            self.bs,
+        ), (self.store.shape, self.nparts, self.cap, self.bs)
+
+    @property
+    def nnzb(self) -> int:
+        return int(self.coords.shape[0])
+
+    @property
+    def nparts(self) -> int:
+        return int(self.mesh.devices.size)
+
+    @property
+    def dtype(self):
+        return self.store.dtype
+
+    def codes(self) -> np.ndarray:
+        return morton_encode(self.coords[:, 0], self.coords[:, 1])
+
+    def store_maps(self) -> tuple[np.ndarray, np.ndarray]:
+        """(store_idx [P, cap] global block per slot, store_valid [P, cap])."""
+        idx = np.zeros((self.nparts, self.cap), dtype=np.int32)
+        valid = np.zeros((self.nparts, self.cap), dtype=bool)
+        idx[self.owner, self.slot] = np.arange(self.nnzb, dtype=np.int32)
+        valid[self.owner, self.slot] = True
+        return idx, valid
+
+    # -- boundary conversions ----------------------------------------------
+    def gather(self) -> BSMatrix:
+        """Pull the matrix back to a host-structured BSMatrix (boundary op)."""
+        host = np.asarray(self.store)
+        data = host[self.owner, self.slot] if self.nnzb else host[:0, 0]
+        return BSMatrix(
+            shape=tuple(self.shape),
+            bs=self.bs,
+            coords=self.coords,
+            data=jnp.asarray(data),
+        )
+
+    # -- device-local ops ---------------------------------------------------
+    def scale(self, alpha) -> "DistBSMatrix":
+        """alpha * A; elementwise on the resident store, stays sharded."""
+        return dataclasses.replace(
+            self, store=self.store * jnp.asarray(alpha, self.dtype)
+        )
+
+    def astype(self, dtype) -> "DistBSMatrix":
+        return dataclasses.replace(self, store=self.store.astype(dtype))
+
+
+def scatter(
+    a: BSMatrix,
+    mesh: Mesh | None = None,
+    *,
+    owner: np.ndarray | None = None,
+) -> DistBSMatrix:
+    """Ship a host BSMatrix onto the mesh once; default Morton placement.
+
+    The inverse of :meth:`DistBSMatrix.gather`.  ``owner`` pins an explicit
+    placement (must assign every block a device id < mesh size).
+    """
+    mesh = mesh or make_worker_mesh()
+    nparts = int(mesh.devices.size)
+    if owner is None:
+        owner = partition_morton(a.nnzb, nparts)
+    owner = np.asarray(owner, dtype=np.int32)
+    assert owner.shape == (a.nnzb,)
+    slot, stores = _owner_slots(owner, nparts)
+    cap = max(max((len(s) for s in stores), default=0), 1)
+    host = np.zeros((nparts, cap, a.bs, a.bs), dtype=np.asarray(a.data).dtype)
+    data = np.asarray(a.data)
+    for p, s in enumerate(stores):
+        host[p, : len(s)] = data[s]
+    store = jax.device_put(jnp.asarray(host), _store_sharding(mesh))
+    return DistBSMatrix(
+        shape=tuple(a.shape),
+        bs=a.bs,
+        coords=a.coords,
+        owner=owner,
+        slot=slot,
+        cap=cap,
+        store=store,
+        mesh=mesh,
+    )

@@ -1,0 +1,91 @@
+"""Distributed multiply on resident operands, planned through the cache.
+
+``dist_multiply`` is the hot-path operation the subsystem exists for: both
+operands are :class:`~repro.dist.matrix.DistBSMatrix` stores already living
+on the mesh, the schedule comes from the structure-keyed
+:class:`~repro.dist.cache.PlanCache` (symbolic phase + shard_map executable
++ device-resident plan arrays, built once per distinct structure), and the
+result store is produced sharded — it never visits the host.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.distributed import make_spgemm_executable
+from repro.core.schedule import make_spgemm_plan, structure_fingerprint
+
+from .cache import PlanCache
+from .matrix import DistBSMatrix, mesh_key
+
+__all__ = ["dist_multiply", "multiply_plan_key"]
+
+
+def multiply_plan_key(
+    a: DistBSMatrix, b: DistBSMatrix, *, exchange: str, impl: str
+) -> tuple:
+    """Cache key: A/B Morton codes + owner maps + mesh + mode knobs."""
+    return (
+        "spgemm",
+        structure_fingerprint(
+            a.codes(), b.codes(), a.owner, b.owner, a.nparts, a.bs
+        ),
+        mesh_key(a.mesh),
+        exchange,
+        impl,
+    )
+
+
+def dist_multiply(
+    a: DistBSMatrix,
+    b: DistBSMatrix,
+    cache: PlanCache | None = None,
+    *,
+    exchange: str = "p2p",
+    impl: str = "ref",
+) -> DistBSMatrix:
+    """C = A @ B with A, B, C device-resident.  Plan + executable cached."""
+    assert a.mesh is b.mesh or list(a.mesh.devices.flat) == list(
+        b.mesh.devices.flat
+    ), "operands must live on the same worker mesh"
+    assert a.shape[1] == b.shape[0] and a.bs == b.bs, (a.shape, b.shape)
+
+    def build():
+        plan = make_spgemm_plan(
+            a.coords,
+            b.coords,
+            a.nparts,
+            a.bs,
+            exchange=exchange,
+            a_owner=a.owner,
+            b_owner=b.owner,
+        )
+        # the pinned placements must reproduce the operands' resident layout
+        assert plan.a_cap == a.cap and plan.b_cap == b.cap, (
+            plan.a_cap,
+            a.cap,
+            plan.b_cap,
+            b.cap,
+        )
+        exe = make_spgemm_executable(plan, a.mesh, impl=impl)
+        return plan, exe
+
+    if cache is None:
+        plan, exe = build()
+    else:
+        plan, exe = cache.get_or_build(
+            multiply_plan_key(a, b, exchange=exchange, impl=impl), build
+        )
+    c_store = exe(a.store, b.store)
+    return DistBSMatrix(
+        shape=(a.shape[0], b.shape[1]),
+        bs=a.bs,
+        coords=plan.c_coords,
+        owner=np.asarray(plan.c_owner, dtype=np.int32),
+        slot=np.asarray(plan.c_slot, dtype=np.int32),
+        cap=plan.c_cap,
+        store=c_store,
+        mesh=a.mesh,
+    )

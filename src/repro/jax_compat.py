@@ -1,0 +1,25 @@
+"""Version-tolerant jax API lookups shared across the library.
+
+``shard_map`` moved from :mod:`jax.experimental.shard_map` (jax 0.4.x, where
+the replication-check kwarg is ``check_rep``) to the top-level :mod:`jax`
+namespace (newer releases, kwarg ``check_vma``).  All call sites go through
+:func:`shard_map` here so the same code runs on both.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map"]
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=check_vma
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_vma
+    )

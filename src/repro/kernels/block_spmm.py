@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import tpu_compiler_params
+
 __all__ = ["block_spmm_kernel_call"]
 
 
@@ -117,7 +119,7 @@ def block_spmm_kernel_call(
             out_specs=pl.BlockSpec((1, tm, tn), o_map),
         ),
         out_shape=jax.ShapeDtypeStruct((num_out, bm, bn), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary", "arbitrary"),
         ),
         cost_estimate=pl.CostEstimate(

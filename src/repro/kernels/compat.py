@@ -1,0 +1,24 @@
+"""Version-tolerant lookups for :mod:`jax.experimental.pallas.tpu` API drift.
+
+The TPU compiler-params dataclass was renamed across jax releases
+(``TPUCompilerParams`` on 0.4.x, ``CompilerParams`` on newer versions).
+Kernels go through :func:`tpu_compiler_params` so they work on both.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["tpu_compiler_params"]
+
+
+def tpu_compiler_params(**kwargs):
+    cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams", None
+    )
+    if cls is None:  # pragma: no cover - unknown future rename
+        raise AttributeError(
+            "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+            "TPUCompilerParams"
+        )
+    return cls(**kwargs)

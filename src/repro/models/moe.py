@@ -30,6 +30,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.jax_compat import shard_map
+
 from .layers import _normal
 
 __all__ = ["moe_init", "moe_apply"]
@@ -228,7 +230,7 @@ def moe_apply(
                 idx = idx * ctx.axis_sizes[a] + jax.lax.axis_index(a)
             return jax.lax.dynamic_slice_in_dim(out, idx * B_l, B_l, axis=0)
 
-        return jax.shard_map(
+        return shard_map(
             body_dispatch,
             mesh=ctx.mesh,
             in_specs=(
@@ -262,7 +264,7 @@ def moe_apply(
         )
         return jax.lax.psum(out, tp)
 
-    return jax.shard_map(
+    return shard_map(
         body,
         mesh=ctx.mesh,
         in_specs=(

@@ -1,0 +1,143 @@
+"""Minimal stand-in for the `hypothesis` API used by this test suite.
+
+Installed into ``sys.modules`` by ``conftest.py`` ONLY when the real
+`hypothesis` package is unavailable (it is an optional dev dependency; see
+``pyproject.toml``'s ``dev`` extra).  It implements the narrow surface the
+tests use — ``given``, ``settings`` and the ``integers`` / ``floats`` /
+``sampled_from`` / ``tuples`` / ``lists`` strategies — as deterministic
+seeded random sampling with one extra lower-boundary probe per test.  It
+does no shrinking; with real hypothesis installed it is never imported.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+import zlib
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, sample, boundary):
+        self._sample = sample  # rng -> value
+        self._boundary = boundary  # () -> lower-edge value
+
+    def sample(self, rng):
+        return self._sample(rng)
+
+    def boundary(self):
+        return self._boundary()
+
+
+def integers(min_value, max_value):
+    return _Strategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1)),
+        lambda: int(min_value),
+    )
+
+
+def floats(min_value, max_value, **_kw):
+    return _Strategy(
+        lambda rng: float(rng.uniform(min_value, max_value)),
+        lambda: float(min_value),
+    )
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(
+        lambda rng: elements[int(rng.integers(len(elements)))],
+        lambda: elements[0],
+    )
+
+
+def tuples(*strategies):
+    return _Strategy(
+        lambda rng: tuple(s.sample(rng) for s in strategies),
+        lambda: tuple(s.boundary() for s in strategies),
+    )
+
+
+def lists(elements, min_size=0, max_size=10, **_kw):
+    return _Strategy(
+        lambda rng: [
+            elements.sample(rng)
+            for _ in range(int(rng.integers(min_size, max_size + 1)))
+        ],
+        lambda: [elements.boundary() for _ in range(min_size)],
+    )
+
+
+class settings:
+    """Decorator recording max_examples; other kwargs are accepted, ignored."""
+
+    def __init__(self, max_examples=_DEFAULT_MAX_EXAMPLES, **_kw):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._fallback_max_examples = self.max_examples
+        return fn
+
+
+def given(*arg_strats, **kw_strats):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            nex = getattr(
+                wrapper,
+                "_fallback_max_examples",
+                getattr(fn, "_fallback_max_examples", _DEFAULT_MAX_EXAMPLES),
+            )
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = np.random.default_rng(seed)
+            for ex in range(nex):
+                if ex == 0:  # probe the lower boundary once
+                    pos = [s.boundary() for s in arg_strats]
+                    kws = {k: s.boundary() for k, s in kw_strats.items()}
+                else:
+                    pos = [s.sample(rng) for s in arg_strats]
+                    kws = {k: s.sample(rng) for k, s in kw_strats.items()}
+                try:
+                    fn(*args, *pos, **{**kwargs, **kws})
+                except Exception:
+                    print(
+                        f"Falsifying example (fallback hypothesis shim): "
+                        f"args={pos} kwargs={kws}",
+                        file=sys.stderr,
+                    )
+                    raise
+
+        # propagate settings applied outside @given onto the wrapper
+        if hasattr(fn, "_fallback_max_examples"):
+            wrapper._fallback_max_examples = fn._fallback_max_examples
+        # hide the strategy-supplied parameters from pytest's fixture
+        # resolution (it follows __wrapped__ to the original signature)
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return decorate
+
+
+def install() -> None:
+    """Register this module as `hypothesis` if the real one is missing."""
+    try:
+        import hypothesis  # noqa: F401
+
+        return
+    except ImportError:
+        pass
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    strategies = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "sampled_from", "tuples", "lists"):
+        setattr(strategies, name, globals()[name])
+    mod.strategies = strategies
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies

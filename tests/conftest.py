@@ -4,5 +4,12 @@ import sys
 # src layout import path (tests run with PYTHONPATH=src, but be robust)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# Property tests use hypothesis (dev extra); fall back to a seeded random
+# sampler when it is not installed so the suite still collects and runs.
+sys.path.insert(0, os.path.dirname(__file__))
+import _hypothesis_fallback  # noqa: E402
+
+_hypothesis_fallback.install()
+
 # NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
 # and benches must see 1 device (dry-run sets 512 itself, in subprocesses).

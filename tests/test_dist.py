@@ -1,0 +1,198 @@
+"""Device-resident distributed runtime tests (repro.dist).
+
+SPMD behaviour runs in a subprocess with 4 fake CPU devices (the main test
+process must keep seeing 1 device); PlanCache semantics and structure
+fingerprints are cheap enough to test in-process on a 1-device mesh.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+_SCRIPT = r"""
+import numpy as np, jax, json, sys
+from repro.core import BSMatrix, multiply, add, truncate, sp2_purify
+from repro.core.distributed import make_worker_mesh
+from repro.dist import (scatter, PlanCache, dist_multiply, dist_add,
+                        dist_trace, dist_frobenius_norm, dist_truncate,
+                        dist_sp2_purify)
+
+assert jax.device_count() == 4, jax.device_count()
+rng = np.random.default_rng(0)
+
+def banded(n, h, bs, seed=0):
+    r = np.random.default_rng(seed)
+    a = np.zeros((n, n), dtype=np.float32)
+    for i in range(n):
+        lo, hi = max(0, i-h), min(n, i+h+1)
+        a[i, lo:hi] = r.standard_normal(hi-lo)
+    return BSMatrix.from_dense(a, bs)
+
+mesh = make_worker_mesh(4)
+out = {}
+
+A = banded(192, 12, 16, seed=1)
+B = banded(192, 5, 16, seed=2)
+dA, dB = scatter(A, mesh), scatter(B, mesh)
+out["roundtrip_err"] = float(np.abs(dA.gather().to_dense() - A.to_dense()).max())
+
+cache = PlanCache()
+C = dist_multiply(dA, dA, cache)
+out["mult_err"] = float(np.abs(C.gather().to_dense() - multiply(A, A).to_dense()).max())
+dist_multiply(dA, dA, cache)  # same structure again
+out["mult_cache"] = cache.stats()
+
+S = dist_add(dA, dB, 2.0, -0.5, cache)
+out["add_err"] = float(np.abs(S.gather().to_dense() - add(A, B, 2.0, -0.5).to_dense()).max())
+# second call with different coefficients reuses the cached executable
+S2 = dist_add(dA, dB, -1.0, 3.0, cache)
+out["add_err2"] = float(np.abs(S2.gather().to_dense() - add(A, B, -1.0, 3.0).to_dense()).max())
+
+out["trace_err"] = abs(dist_trace(dA, cache) - A.trace())
+out["fro_err"] = abs(dist_frobenius_norm(dA, cache) - A.frobenius_norm())
+
+tau = float(np.median(A.block_norms()) * 2)
+T = dist_truncate(dA, tau, cache)
+refT = truncate(A, tau)
+out["trunc_nnzb"] = [T.nnzb, refT.nnzb, A.nnzb]
+out["trunc_err"] = float(np.abs(T.gather().to_dense() - refT.to_dense()).max())
+
+# SP2 purification on an SPD-shifted banded Hamiltonian
+n, bs, nocc = 128, 16, 40
+r = np.random.default_rng(3)
+h = np.zeros((n, n), dtype=np.float32)
+for i in range(n):
+    lo, hi = max(0, i - 3), min(n, i + 4)
+    h[i, lo:hi] = 0.2 * r.standard_normal(hi - lo)
+h = (h + h.T) / 2 + np.diag(np.linspace(-1, 1, n))
+f = BSMatrix.from_dense(h, bs)
+w = np.linalg.eigvalsh(h.astype(np.float64))
+lmin, lmax = float(w.min()) - 0.05, float(w.max()) + 0.05
+d_ref, st_ref = sp2_purify(f, nocc, lmin, lmax, idem_tol=1e-5, trunc_tau=1e-5, impl="ref")
+pc = PlanCache()
+d_dist, st = dist_sp2_purify(f, nocc, lmin, lmax, mesh,
+                             idem_tol=1e-5, trunc_tau=1e-5, cache=pc)
+out["purify_err"] = float(np.abs(d_dist.to_dense() - d_ref.to_dense()).max())
+# resident-input branch: already-scattered F, X0 built on the mesh
+d_res, _ = dist_sp2_purify(scatter(f, mesh), nocc, lmin, lmax,
+                           idem_tol=1e-5, trunc_tau=1e-5)
+out["purify_resident_err"] = float(np.abs(d_res.to_dense() - d_ref.to_dense()).max())
+out["purify_trace"] = float(d_dist.trace())
+out["nocc"] = nocc
+out["iters"] = [st.iterations, st_ref.iterations]
+out["cache"] = st.cache
+out["tail_hits"] = [pi["cache_hits"] for pi in st.per_iter[-3:]]
+out["tail_misses"] = [pi["cache_misses"] for pi in st.per_iter[-3:]]
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def dist_results():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _SCRIPT],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][0]
+    return json.loads(line[len("RESULT ") :])
+
+
+def test_scatter_gather_roundtrip(dist_results):
+    assert dist_results["roundtrip_err"] == 0.0
+
+
+def test_dist_multiply_matches_host(dist_results):
+    assert dist_results["mult_err"] < 1e-4
+    st = dist_results["mult_cache"]
+    assert st["hits"] >= 1 and st["misses"] >= 1
+
+
+def test_dist_add_matches_host(dist_results):
+    assert dist_results["add_err"] < 1e-4
+    assert dist_results["add_err2"] < 1e-4
+
+
+def test_dist_reductions_match_host(dist_results):
+    assert dist_results["trace_err"] < 1e-3
+    assert dist_results["fro_err"] < 1e-3
+
+
+def test_dist_truncate_matches_host(dist_results):
+    t, ref, orig = dist_results["trunc_nnzb"]
+    assert t == ref < orig  # actually dropped blocks, same selection
+    assert dist_results["trunc_err"] == 0.0
+
+
+def test_dist_purify_matches_single_host(dist_results):
+    assert dist_results["purify_err"] < 1e-4
+    assert dist_results["purify_resident_err"] < 1e-4
+    assert abs(dist_results["purify_trace"] - dist_results["nocc"]) < 0.05
+    it_dist, it_ref = dist_results["iters"]
+    assert it_dist == it_ref
+
+
+def test_dist_purify_plan_cache_hits(dist_results):
+    # once truncation stabilizes the sparsity pattern, iterations are pure
+    # cache hits: no symbolic planning, no recompilation
+    assert dist_results["cache"]["hits"] > 0
+    assert all(h > 0 for h in dist_results["tail_hits"])
+    assert all(m == 0 for m in dist_results["tail_misses"])
+
+
+# -- in-process (1-device mesh): cache key semantics and fingerprints --------
+
+
+def test_plan_cache_hit_miss_semantics():
+    import jax
+
+    from repro.core.distributed import make_worker_mesh
+    from repro.dist import PlanCache, dist_multiply, scatter
+
+    sys.path.insert(0, os.path.dirname(__file__))
+    from helpers import banded_matrix
+
+    assert jax.device_count() == 1
+    mesh = make_worker_mesh(1)
+    a = banded_matrix(64, 6, 16, seed=0)
+    da = scatter(a, mesh)
+    cache = PlanCache()
+    dist_multiply(da, da, cache)
+    assert (cache.hits, cache.misses) == (0, 1)
+    dist_multiply(da, da, cache)  # identical structure -> hit
+    assert (cache.hits, cache.misses) == (1, 1)
+
+    # perturb the structure: one extra block -> different key -> miss
+    import jax.numpy as jnp
+    from repro.core import BSMatrix
+
+    coords = np.concatenate([a.coords, [[3, 0]]])
+    data = jnp.concatenate([a.data, jnp.ones((1, 16, 16), a.dtype)])
+    b = BSMatrix.from_blocks(a.shape, a.bs, coords, data)
+    assert b.nnzb == a.nnzb + 1
+    db = scatter(b, mesh)
+    dist_multiply(db, db, cache)
+    assert (cache.hits, cache.misses) == (1, 2)
+
+
+def test_structure_fingerprint_stability():
+    from repro.core.schedule import structure_fingerprint
+
+    x = np.arange(10, dtype=np.int64)
+    assert structure_fingerprint(x, 4) == structure_fingerprint(x.copy(), 4)
+    assert structure_fingerprint(x, 4) != structure_fingerprint(x, 8)
+    y = x.copy()
+    y[3] += 1
+    assert structure_fingerprint(x, 4) != structure_fingerprint(y, 4)
+    # dtype matters (same bytes, different meaning)
+    assert structure_fingerprint(x) != structure_fingerprint(x.view(np.uint64))
