@@ -1,0 +1,160 @@
+"""SpAMM on the paper's matrix sequences: leaf-level vs hierarchical pruning.
+
+Generates three structure families (the sequences the paper's experiments
+sweep) and, for a range of tolerances tau, compares the two SpAMM symbolic
+phases:
+
+* ``leaf``          — enumerate every leaf task, then greedily prune
+                      (symbolic cost scales with the *full* task list);
+* ``hierarchical``  — apply the ||A_node||*||B_node|| bound during the
+                      quadtree descent, so pruned subtrees are never
+                      enumerated (symbolic cost shrinks with the kept work).
+
+Reported per (sequence, tau): symbolic wall time, node pairs visited, tasks
+kept/pruned, the returned error bound, and the true ||AB - C||_F.
+
+Run:  PYTHONPATH=src python benchmarks/spamm_sequences.py
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import BSMatrix, spamm_symbolic, spgemm_symbolic
+from repro.core.matrix import block_frobenius_norms
+from repro.core.spgemm import _common_depth
+
+N, BS = 1024, 16
+TAUS = (1e-2, 1e-1, 1e0, 1e1)
+
+
+def banded(n: int, halfwidth: int, seed: int = 0) -> BSMatrix:
+    rng = np.random.default_rng(seed)
+    a = np.zeros((n, n), dtype=np.float32)
+    for i in range(n):
+        lo, hi = max(0, i - halfwidth), min(n, i + halfwidth + 1)
+        a[i, lo:hi] = rng.standard_normal(hi - lo)
+    return BSMatrix.from_dense(a, BS)
+
+
+def exp_decay(n: int, rate: float, seed: int = 1) -> BSMatrix:
+    """Exponential off-diagonal decay — the electronic-structure regime."""
+    rng = np.random.default_rng(seed)
+    i, j = np.meshgrid(np.arange(n), np.arange(n), indexing="ij")
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    a *= np.exp(-rate * np.abs(i - j)).astype(np.float32)
+    return BSMatrix.from_dense(a, BS, prune_tol=1e-6)
+
+
+def random_offdiag(n: int, density: float, seed: int = 2) -> BSMatrix:
+    """Strong diagonal + sparse random off-diagonal blocks of decaying size."""
+    rng = np.random.default_rng(seed)
+    nb = n // BS
+    a = np.zeros((n, n), dtype=np.float32)
+    for b in range(nb):
+        a[b * BS : (b + 1) * BS, b * BS : (b + 1) * BS] = rng.standard_normal(
+            (BS, BS)
+        )
+    mask = rng.random((nb, nb)) < density
+    np.fill_diagonal(mask, False)
+    for i, j in zip(*np.nonzero(mask)):
+        scale = 10.0 ** rng.uniform(-4, 0)  # widely varying block magnitudes
+        a[i * BS : (i + 1) * BS, j * BS : (j + 1) * BS] = scale * rng.standard_normal(
+            (BS, BS)
+        )
+    return BSMatrix.from_dense(a, BS)
+
+
+def leaf_spamm_symbolic(a: BSMatrix, b: BSMatrix, tau: float):
+    """Flat reference: full enumeration, then greedy leaf pruning."""
+    t0 = time.perf_counter()
+    tasks = spgemm_symbolic(a.coords, b.coords)
+    na = np.asarray(block_frobenius_norms(a.data), dtype=np.float64)
+    nb = np.asarray(block_frobenius_norms(b.data), dtype=np.float64)
+    bound = na[tasks.a_idx] * nb[tasks.b_idx]
+    order = np.argsort(bound)
+    csum = np.cumsum(bound[order])
+    ndrop = int(np.searchsorted(csum, tau, side="right"))
+    err = float(csum[ndrop - 1]) if ndrop else 0.0
+    dt = time.perf_counter() - t0
+    # every leaf task was visited (that is the point of the comparison)
+    return dict(
+        time_s=dt,
+        visited=tasks.num_tasks,
+        kept=tasks.num_tasks - ndrop,
+        pruned=ndrop,
+        err_bound=err,
+    )
+
+
+def hier_spamm_symbolic(a: BSMatrix, b: BSMatrix, tau: float):
+    depth = _common_depth(a, b)
+    ia, ib = a.quadtree_index(depth), b.quadtree_index(depth)  # cached across taus
+    t0 = time.perf_counter()
+    tasks, err, visited = spamm_symbolic(ia, ib, tau)
+    dt = time.perf_counter() - t0
+    full = spgemm_symbolic(a.coords, b.coords).num_tasks
+    return dict(
+        time_s=dt,
+        visited=visited,
+        kept=tasks.num_tasks,
+        pruned=full - tasks.num_tasks,
+        err_bound=err,
+        tasks=tasks,
+    )
+
+
+def true_error(a: BSMatrix, b: BSMatrix, tasks) -> float:
+    from repro.core import spgemm_numeric
+
+    data = spgemm_numeric(a.data, b.data, tasks, impl="ref")
+    c = BSMatrix(
+        shape=(a.shape[0], b.shape[1]), bs=a.bs, coords=tasks.c_coords, data=data
+    )
+    return float(np.linalg.norm(c.to_dense() - a.to_dense() @ b.to_dense()))
+
+
+def main():
+    sequences = {
+        "banded": banded(N, 24),
+        "exp-decay": exp_decay(N, rate=0.08),
+        "random-offdiag": random_offdiag(N, density=0.08),
+    }
+    for name, a in sequences.items():
+        full = spgemm_symbolic(a.coords, a.coords).num_tasks
+        depth = _common_depth(a, a)
+        ia = a.quadtree_index(depth)
+        _, _, full_visits = spamm_symbolic(ia, ia, 0.0)
+        print(
+            f"\n== {name}: n={N} bs={BS} nnzb={a.nnzb} full tasks={full} "
+            f"(descent visits {full_visits} node pairs at tau=0) =="
+        )
+        print(
+            f"{'tau':>8} | {'leaf t(ms)':>10} {'visited':>9} | "
+            f"{'hier t(ms)':>10} {'visited':>9} {'pruned':>8} | "
+            f"{'bound':>9} {'true err':>9}"
+        )
+        a.quadtree_index(_common_depth(a, a))  # build once outside the timing
+        for tau in TAUS:
+            leaf = leaf_spamm_symbolic(a, a, tau)
+            hier = hier_spamm_symbolic(a, a, tau)
+            err = true_error(a, a, hier["tasks"])
+            assert hier["err_bound"] <= tau + 1e-9
+            assert err <= hier["err_bound"] + 1e-2
+            print(
+                f"{tau:8.0e} | {leaf['time_s']*1e3:10.2f} {leaf['visited']:9d} | "
+                f"{hier['time_s']*1e3:10.2f} {hier['visited']:9d} "
+                f"{hier['pruned']:8d} | {hier['err_bound']:9.2e} {err:9.2e}"
+            )
+        print(
+            "hier 'visited' counts internal + leaf node pairs; pruning during "
+            "the descent shrinks it below the tau=0 descent (and, once whole "
+            "subtrees go, below the flat leaf enumeration), while the leaf "
+            "reference always pays for the full task list"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,7 @@ schedules in :mod:`repro.core.schedule` / :mod:`repro.core.distributed`.
 """
 
 from .add import add, add_scaled_identity, identity
+from .cache import SymbolicCache
 from .inverse import (
     factorization_residual,
     inv_chol,
@@ -16,23 +17,30 @@ from .inverse import (
 from .leaf import LeafSpec, exact_spgemm_flops, inner_masks, nnz_elements
 from .matrix import BSMatrix
 from .purify import sp2_purify
+from .quadtree import QuadtreeIndex, build_quadtree_index, structure_fingerprint
 from .spgemm import (
     Tasks,
     multiply,
     spamm,
+    spamm_symbolic,
     spgemm_numeric,
     spgemm_symbolic,
     spgemm_symbolic_recursive,
+    spgemm_symbolic_tree,
     symm_square,
     syrk,
     task_flops,
 )
-from .truncate import truncate, truncate_elementwise
+from .truncate import truncate, truncate_elementwise, truncate_hierarchical
 
 __all__ = [
     "BSMatrix",
     "Tasks",
     "LeafSpec",
+    "QuadtreeIndex",
+    "build_quadtree_index",
+    "structure_fingerprint",
+    "SymbolicCache",
     "add",
     "add_scaled_identity",
     "identity",
@@ -40,7 +48,9 @@ __all__ = [
     "syrk",
     "symm_square",
     "spamm",
+    "spamm_symbolic",
     "spgemm_symbolic",
+    "spgemm_symbolic_tree",
     "spgemm_symbolic_recursive",
     "spgemm_numeric",
     "task_flops",
@@ -48,6 +58,7 @@ __all__ = [
     "inner_masks",
     "nnz_elements",
     "truncate",
+    "truncate_hierarchical",
     "truncate_elementwise",
     "inv_chol",
     "localized_inverse_factorization",

@@ -1,0 +1,78 @@
+"""Structure-keyed host-side caches — the chunk-cache analogue on the host.
+
+CHT workers cache the chunks tasks touch so iterative algorithms stop paying
+for re-fetches once their access pattern stabilizes.  On the host side the
+analogous repeated cost is the *symbolic phase*: quadtree descent, task-list
+construction, truncation selection.  :class:`SymbolicCache` memoizes those
+behind keys derived from :func:`repro.core.quadtree.structure_fingerprint`
+of the operand structures — every `sp2_purify` iteration after the sparsity
+pattern stabilizes under truncation skips the symbolic phase entirely,
+mirroring what :class:`repro.dist.PlanCache` (a subclass) does for the
+distributed plans, device plan arrays and jitted shard_map executables.
+
+Hit/miss counters are surfaced via :meth:`SymbolicCache.stats`.
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Any, Callable, Hashable
+
+__all__ = ["SymbolicCache"]
+
+
+class SymbolicCache:
+    """LRU cache from structure keys to built symbolic results.
+
+    Keys are hashable tuples (callers prefix them with a kind tag such as
+    ``"spgemm"`` / ``"add"`` / ``"trace"``).  Values are whatever the builder
+    returns — a :class:`~repro.core.spgemm.Tasks` list on the single-host
+    path, a (plan, executable) pair on the distributed path.
+    """
+
+    def __init__(self, max_entries: int = 128):
+        self.max_entries = max_entries
+        self._entries: collections.OrderedDict[Hashable, Any] = (
+            collections.OrderedDict()
+        )
+        self.hits = 0
+        self.misses = 0
+        self._by_kind: collections.Counter = collections.Counter()
+
+    def get_or_build(self, key: Hashable, builder: Callable[[], Any]) -> Any:
+        if key in self._entries:
+            self.hits += 1
+            self._by_kind[(key[0] if isinstance(key, tuple) else "?", "hit")] += 1
+            self._entries.move_to_end(key)
+            return self._entries[key]
+        self.misses += 1
+        self._by_kind[(key[0] if isinstance(key, tuple) else "?", "miss")] += 1
+        value = builder()
+        self._entries[key] = value
+        while len(self._entries) > self.max_entries:
+            self._entries.popitem(last=False)
+        return value
+
+    def peek(self, key: Hashable, default: Any = None) -> Any:
+        """Read an entry without touching counters or LRU order."""
+        return self._entries.get(key, default)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._entries
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+    def stats(self) -> dict:
+        """plan_stats-style cache metrics."""
+        total = self.hits + self.misses
+        return dict(
+            entries=len(self._entries),
+            hits=self.hits,
+            misses=self.misses,
+            hit_rate=self.hits / total if total else 0.0,
+            by_kind={f"{k}/{o}": v for (k, o), v in sorted(self._by_kind.items())},
+        )

@@ -19,7 +19,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .quadtree import morton_encode, morton_sort
+from .quadtree import (
+    QuadtreeIndex,
+    build_quadtree_index,
+    morton_encode,
+    morton_sort,
+    quadtree_depth,
+    structure_fingerprint,
+)
 
 __all__ = ["BSMatrix", "block_frobenius_norms"]
 
@@ -64,6 +71,51 @@ class BSMatrix:
 
     def codes(self) -> np.ndarray:
         return morton_encode(self.coords[:, 0], self.coords[:, 1])
+
+    @property
+    def structure_key(self) -> str:
+        """Fingerprint of the sparsity structure (codes + grid + block size).
+
+        The :class:`~repro.core.cache.SymbolicCache` key: value-independent,
+        stable across processes.  Cached — the object is frozen, so the
+        structure can never change under it.
+        """
+        key = self.__dict__.get("_structure_key")
+        if key is None:
+            key = structure_fingerprint(self.codes(), self.nblocks, self.bs)
+            object.__setattr__(self, "_structure_key", key)
+        return key
+
+    def quadtree_index(
+        self, depth: int | None = None, *, with_norms: bool = True
+    ) -> QuadtreeIndex:
+        """The hierarchical quadtree over this structure.
+
+        ``with_norms=True`` includes subtree Frobenius norms (needed by SpAMM
+        and hierarchical truncation; costs one device reduction + sync via
+        :func:`block_frobenius_norms`); structure-only consumers (the plain
+        multiply descent) pass ``with_norms=False`` and pay nothing.  Cached
+        on the matrix per (depth, norms) — a norm-carrying index satisfies
+        structure-only requests.  The object is frozen, so structure and
+        values are immutable and the cache can never go stale
+        (``dataclasses.replace`` produces a fresh object with an empty cache).
+        """
+        if depth is None:
+            depth = quadtree_depth(*self.nblocks)
+        cache = self.__dict__.get("_qt_cache")
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, "_qt_cache", cache)
+        if (depth, True) in cache:
+            return cache[(depth, True)]
+        key = (depth, with_norms)
+        if key not in cache:
+            cache[key] = build_quadtree_index(
+                self.coords,
+                self.block_norms() if with_norms else None,
+                depth=depth,
+            )
+        return cache[key]
 
     # -- constructors -------------------------------------------------------
     @staticmethod
@@ -151,11 +203,12 @@ class BSMatrix:
     def to_dense(self) -> np.ndarray:
         m, n = self.shape
         nbr, nbc = self.nblocks
-        out = np.zeros((nbr * self.bs, nbc * self.bs), dtype=np.asarray(self.data).dtype)
         data = np.asarray(self.data)
-        for t in range(self.nnzb):
-            i, j = self.coords[t]
-            out[i * self.bs : (i + 1) * self.bs, j * self.bs : (j + 1) * self.bs] = data[t]
+        # vectorized scatter: stack -> (nbr, nbc, bs, bs) grid -> 2-D layout
+        grid = np.zeros((nbr, nbc, self.bs, self.bs), dtype=data.dtype)
+        if self.nnzb:
+            grid[self.coords[:, 0], self.coords[:, 1]] = data
+        out = grid.transpose(0, 2, 1, 3).reshape(nbr * self.bs, nbc * self.bs)
         return out[:m, :n]
 
     def get_elements(self, rows: Sequence[int], cols: Sequence[int]) -> np.ndarray:
@@ -164,8 +217,10 @@ class BSMatrix:
         cols = np.asarray(cols, dtype=np.int64)
         codes = morton_encode(rows // self.bs, cols // self.bs)
         my = self.codes()
-        pos = np.searchsorted(my, codes)
         out = np.zeros(rows.shape, dtype=np.asarray(self.data).dtype)
+        if my.size == 0:
+            return out
+        pos = np.searchsorted(my, codes)
         hit = (pos < my.size) & (my[np.minimum(pos, my.size - 1)] == codes)
         if hit.any():
             data = np.asarray(self.data)

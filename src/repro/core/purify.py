@@ -18,6 +18,7 @@ from __future__ import annotations
 import dataclasses
 
 from .add import add, add_scaled_identity, identity
+from .cache import SymbolicCache
 from .matrix import BSMatrix
 from .spgemm import multiply
 from .truncate import truncate
@@ -79,6 +80,11 @@ class PurifyStats:
     trace_history: list
     idempotency_history: list
     nnzb_history: list
+    # symbolic-phase cache metrics: SymbolicCache.stats() at exit, plus the
+    # per-iteration hit counts (an iteration on a stable sparsity pattern is
+    # all hits — the symbolic phase is skipped entirely)
+    symbolic_cache: dict | None = None
+    cache_hits_history: list | None = None
 
 
 def sp2_purify(
@@ -91,24 +97,34 @@ def sp2_purify(
     idem_tol: float = 1e-8,
     trunc_tau: float = 0.0,
     impl: str = "auto",
+    cache: SymbolicCache | None = None,
 ) -> tuple[BSMatrix, PurifyStats]:
     """SP2 (trace-correcting) purification.
 
     X0 = (lmax*I - F) / (lmax - lmin); then X <- X^2 when trace(X) > n_occ
     else X <- 2X - X^2, until idempotency ||X^2 - X|| is below tolerance.
+
+    The multiply symbolic phase goes through a structure-keyed
+    :class:`~repro.core.cache.SymbolicCache` (pass one to share across
+    calls): iterations whose sparsity pattern is stable skip the symbolic
+    phase entirely — the host-side mirror of
+    :class:`repro.dist.PlanCache` on the distributed path.
     """
+    cache = cache if cache is not None else SymbolicCache()
     scale, shift = sp2_init_coeffs(lmin, lmax)
     x = add_scaled_identity(f.scale(scale), shift)
-    traces, idems, nnzbs = [], [], []
+    traces, idems, nnzbs, cache_hits = [], [], [], []
     monitor = Sp2Monitor(idem_tol)
     best = x
     for it in range(max_iter):
-        x2 = multiply(x, x, impl=impl)
+        h0 = cache.hits
+        x2 = multiply(x, x, impl=impl, cache=cache)
         idem = add(x2, x, 1.0, -1.0).frobenius_norm()
         tr = x.trace()
         traces.append(tr)
         idems.append(idem)
         nnzbs.append(x.nnzb)
+        cache_hits.append(cache.hits - h0)
         stop = monitor.update(it, idem)
         if monitor.improved:
             best = x
@@ -120,4 +136,6 @@ def sp2_purify(
             x = add(x, x2, 2.0, -1.0)
         if trunc_tau > 0:
             x = truncate(x, trunc_tau)
-    return best, PurifyStats(len(traces), traces, idems, nnzbs)
+    return best, PurifyStats(
+        len(traces), traces, idems, nnzbs, cache.stats(), cache_hits
+    )

@@ -3,16 +3,28 @@
 The paper represents a matrix as a sparse quaternary tree: a node is either
 identically zero, a leaf matrix, or four recursively represented quadrants.
 On TPU we keep the *data* in a flat device array of fixed-size leaf blocks and
-the *structure* as host-side block coordinates.  The quadtree is implicit in
+the *structure* as host-side block coordinates.  The quadtree lives in
 the Morton (Z-order) codes of the block coordinates: every quadtree node at
 level L corresponds to a 2L-bit Morton prefix, and zero branches are exactly
 the absent prefixes.  Morton order is the canonical block ordering throughout
 the library — it is what gives the scheduler its locality (children of a
 quadtree node are contiguous in Morton order, mirroring the paper's
 "tasks operating on the same chunk execute on the same worker").
+
+:class:`QuadtreeIndex` makes the hierarchy first-class: per-level sorted
+prefix arrays with CSR parent->child and node->leaf spans plus per-node
+subtree Frobenius norms, built once per structure and cached on
+:class:`~repro.core.matrix.BSMatrix`.  The symbolic phases in
+:mod:`repro.core.spgemm` descend it level-by-level (vectorized), SpAMM and
+:func:`repro.core.truncate.truncate_hierarchical` prune whole subtrees
+against the norms, and :mod:`repro.core.schedule` snaps partition cuts to
+its node boundaries.
 """
 
 from __future__ import annotations
+
+import dataclasses
+import hashlib
 
 import numpy as np
 
@@ -23,6 +35,9 @@ __all__ = [
     "quadtree_node_counts",
     "quadtree_depth",
     "expand_prefix",
+    "structure_fingerprint",
+    "QuadtreeIndex",
+    "build_quadtree_index",
 ]
 
 _B = [
@@ -109,3 +124,147 @@ def expand_prefix(prefix: int, level: int, depth: int) -> tuple[int, int, int, i
     side = 1 << (depth - level)
     r, c = morton_decode(np.asarray([prefix << (2 * (depth - level))], dtype=np.uint64))
     return int(r[0]), int(r[0]) + side, int(c[0]), int(c[0]) + side
+
+
+def structure_fingerprint(*parts) -> str:
+    """Stable hex digest of a structure: arrays hashed by bytes, scalars by repr.
+
+    The chunk-cache key analogue: two matrices with identical Morton codes
+    (and two plans over identical structures) produce identical fingerprints
+    across processes — ``hash()`` randomization and object identity play no
+    role.  Used by :class:`repro.dist.PlanCache` and
+    :class:`repro.core.cache.SymbolicCache`.
+    """
+    h = hashlib.blake2b(digest_size=16)
+    for part in parts:
+        if isinstance(part, np.ndarray):
+            arr = np.ascontiguousarray(part)
+            h.update(str(arr.dtype).encode())
+            h.update(str(arr.shape).encode())
+            h.update(arr.tobytes())
+        else:
+            h.update(repr(part).encode())
+        h.update(b"|")
+    return h.hexdigest()
+
+
+@dataclasses.dataclass(frozen=True)
+class QuadtreeIndex:
+    """First-class hierarchical quadtree over a Morton-sorted block structure.
+
+    The paper's sparse quaternary tree, materialized: level ``k`` holds the
+    sorted ``2k``-bit Morton prefixes of the nonzero nodes, with CSR-style
+    parent->child spans into level ``k+1`` (children of a node are contiguous
+    because prefixes are sorted), leaf spans into the block stack, and —
+    when built with leaf norms — per-node *subtree* Frobenius norms.  These
+    are exactly the internal-node norms the paper's multiplication, SpAMM and
+    truncation tasks use to prune whole subtrees without visiting them.
+
+    Attributes:
+      depth:        levels above the leaves (level 0 = root, level depth = leaves).
+      prefixes:     per level, sorted uint64 Morton prefixes of nonzero nodes.
+      child_start:  per level k < depth, int64 [n_k + 1] CSR spans: children of
+                    node j at level k are prefixes[k+1][child_start[k][j] :
+                    child_start[k][j+1]].
+      leaf_start:   per level, int64 [n_k + 1] spans into the Morton-sorted
+                    block stack covered by each node's subtree.
+      norms:        per level, float64 [n_k] subtree Frobenius norms, or None
+                    for a structure-only index.
+      fingerprint:  structure fingerprint of (leaf codes, depth) — the cache
+                    key shared with :class:`repro.core.cache.SymbolicCache`.
+    """
+
+    depth: int
+    prefixes: tuple[np.ndarray, ...]
+    child_start: tuple[np.ndarray, ...]
+    leaf_start: tuple[np.ndarray, ...]
+    norms: tuple[np.ndarray, ...] | None
+    fingerprint: str
+
+    @property
+    def nnzb(self) -> int:
+        return int(self.prefixes[-1].size)
+
+    def num_nodes(self) -> int:
+        """Total nonzero nodes across all levels."""
+        return int(sum(p.size for p in self.prefixes))
+
+    def node_counts(self) -> list[int]:
+        return [int(p.size) for p in self.prefixes]
+
+    def boundaries(self, level: int | None = None) -> np.ndarray:
+        """Sorted unique leaf positions that start a quadtree node.
+
+        ``level`` restricts to one level; default merges every level —
+        the candidate cut positions for subtree-aligned Morton partitioning
+        (:func:`repro.core.schedule.partition_morton` with ``align=``).
+        """
+        if level is not None:
+            return np.unique(self.leaf_start[level])
+        return np.unique(np.concatenate([ls for ls in self.leaf_start]))
+
+
+def build_quadtree_index(
+    coords: np.ndarray,
+    leaf_norms: np.ndarray | None = None,
+    depth: int | None = None,
+) -> QuadtreeIndex:
+    """Build a :class:`QuadtreeIndex` from Morton-sorted block coords.
+
+    ``leaf_norms`` (per-block Frobenius norms, stack order) enables the
+    subtree-norm levels; omit for a structure-only index.  ``depth`` may be
+    raised above the natural grid depth so two operands of a multiply share a
+    common root (extra top levels are chains of single nodes).
+    """
+    coords = np.asarray(coords)
+    n = coords.shape[0]
+    if depth is None:
+        top = int(max(coords.max(initial=0), 1))
+        depth = 0
+        while (1 << depth) <= top:
+            depth += 1
+    if n == 0:
+        z = np.zeros((0,), dtype=np.uint64)
+        s = np.zeros((1,), dtype=np.int64)
+        return QuadtreeIndex(
+            depth=depth,
+            prefixes=tuple(z for _ in range(depth + 1)),
+            child_start=tuple(s for _ in range(depth)),
+            leaf_start=tuple(s for _ in range(depth + 1)),
+            norms=None if leaf_norms is None else tuple(
+                np.zeros((0,), dtype=np.float64) for _ in range(depth + 1)
+            ),
+            fingerprint=structure_fingerprint(z, depth),
+        )
+    codes = morton_encode(coords[:, 0], coords[:, 1])
+    assert np.all(np.diff(codes.astype(np.int64)) > 0), "coords must be Morton-sorted, unique"
+    prefixes = [codes >> np.uint64(2 * (depth - k)) for k in range(depth + 1)]
+    prefixes = [np.unique(p) for p in prefixes[:-1]] + [prefixes[-1]]
+    child_start = []
+    for k in range(depth):
+        parent = prefixes[k + 1] >> np.uint64(2)
+        starts = np.searchsorted(parent, prefixes[k], side="left")
+        child_start.append(
+            np.concatenate([starts, [prefixes[k + 1].size]]).astype(np.int64)
+        )
+    leaf_start = [None] * (depth + 1)
+    leaf_start[depth] = np.arange(n + 1, dtype=np.int64)
+    for k in range(depth - 1, -1, -1):
+        leaf_start[k] = leaf_start[k + 1][child_start[k]]
+    norms = None
+    if leaf_norms is not None:
+        leaf_norms = np.asarray(leaf_norms, dtype=np.float64)
+        assert leaf_norms.shape == (n,)
+        sq = [None] * (depth + 1)
+        sq[depth] = leaf_norms**2
+        for k in range(depth - 1, -1, -1):
+            sq[k] = np.add.reduceat(sq[k + 1], child_start[k][:-1])
+        norms = tuple(np.sqrt(s) for s in sq)
+    return QuadtreeIndex(
+        depth=depth,
+        prefixes=tuple(prefixes),
+        child_start=tuple(child_start),
+        leaf_start=tuple(leaf_start),
+        norms=norms,
+        fingerprint=structure_fingerprint(codes, depth),
+    )

@@ -25,11 +25,10 @@ the comparison (bytes moved per device) is the Fig 1c experiment.
 from __future__ import annotations
 
 import dataclasses
-import hashlib
 
 import numpy as np
 
-from .quadtree import morton_encode
+from .quadtree import build_quadtree_index, morton_encode, structure_fingerprint
 from .spgemm import Tasks, spgemm_symbolic
 
 __all__ = [
@@ -41,38 +40,44 @@ __all__ = [
     "structure_fingerprint",
     "plan_fetch",
     "local_fetch_index",
+    "subtree_boundaries",
 ]
 
 
-def structure_fingerprint(*parts) -> str:
-    """Stable hex digest of a structure: arrays hashed by bytes, scalars by repr.
+def subtree_boundaries(coords: np.ndarray) -> np.ndarray | None:
+    """Candidate partition cuts: leaf positions starting a quadtree node.
 
-    The chunk-cache key analogue: two matrices with identical Morton codes
-    (and two plans over identical structures) produce identical fingerprints
-    across processes — ``hash()`` randomization and object identity play no
-    role.  Used by :class:`repro.dist.PlanCache`.
+    Returns None when ``coords`` is not Morton-sorted-unique (callers of the
+    public planner may pass arbitrary coords; alignment is best-effort).
     """
-    h = hashlib.blake2b(digest_size=16)
-    for part in parts:
-        if isinstance(part, np.ndarray):
-            arr = np.ascontiguousarray(part)
-            h.update(str(arr.dtype).encode())
-            h.update(str(arr.shape).encode())
-            h.update(arr.tobytes())
-        else:
-            h.update(repr(part).encode())
-        h.update(b"|")
-    return h.hexdigest()
+    coords = np.asarray(coords)
+    if coords.shape[0] == 0:
+        return None
+    codes = morton_encode(coords[:, 0], coords[:, 1]).astype(np.int64)
+    if np.any(np.diff(codes) <= 0):
+        return None
+    return build_quadtree_index(coords).boundaries()
 
 
 def partition_morton(
-    nblocks: int, nparts: int, weights: np.ndarray | None = None
+    nblocks: int,
+    nparts: int,
+    weights: np.ndarray | None = None,
+    *,
+    align: np.ndarray | None = None,
+    slack: float = 0.15,
 ) -> np.ndarray:
     """Owner id per block: contiguous Morton ranges with ~equal total weight.
 
     Blocks are assumed Morton-sorted (BSMatrix canonical order).  Boundary
     placement is greedy on the weight prefix sum; this bounds the per-part
     overshoot by one block's weight, the static analogue of CHT's balance.
+
+    ``align`` (sorted candidate cut positions, e.g. quadtree node boundaries
+    from :func:`subtree_boundaries`) snaps each cut to the nearest candidate
+    whose weight displacement stays within ``slack`` of a part's target
+    weight — so partitions own whole subtrees where the balance budget
+    allows, the locality CHT gets from hierarchical chunk identifiers.
     """
     if nblocks == 0:
         return np.zeros((0,), dtype=np.int32)
@@ -83,6 +88,21 @@ def partition_morton(
     # targets at equal weight quantiles
     targets = total * (np.arange(1, nparts) / nparts)
     bounds = np.searchsorted(csum, targets, side="left")
+    if align is not None and len(align):
+        align = np.unique(np.clip(np.asarray(align, dtype=np.int64), 0, nblocks))
+        tol = slack * total / nparts
+        w_before = np.concatenate([[0.0], csum])  # weight left of a cut position
+        snapped = np.empty_like(bounds)
+        for i, (t, b) in enumerate(zip(targets, bounds)):
+            pos = np.searchsorted(align, b)
+            cand = align[max(pos - 1, 0) : pos + 1]
+            if cand.size:
+                dist = np.abs(w_before[cand] - t)
+                j = int(np.argmin(dist))
+                if dist[j] <= tol:
+                    b = int(cand[j])
+            snapped[i] = b
+        bounds = np.maximum.accumulate(snapped)
     owner = np.zeros(nblocks, dtype=np.int32)
     prev = 0
     for p, b in enumerate(np.concatenate([bounds, [nblocks]])):
@@ -236,12 +256,16 @@ def make_spgemm_plan(
     seed: int = 0,
     a_owner: np.ndarray | None = None,
     b_owner: np.ndarray | None = None,
+    align_subtrees: bool = True,
 ) -> SpgemmPlan:
     """Plan a distributed multiply: placement, task schedule, exchange.
 
     ``a_owner`` / ``b_owner`` pin the operand placements to externally-fixed
     maps (device-resident operands — :class:`repro.dist.DistBSMatrix` — whose
     stores must not be reshuffled); when omitted they are chosen here.
+    ``tasks`` pins a precomputed (possibly SpAMM-pruned) task list so the
+    symbolic phase is not redone.  ``align_subtrees`` snaps Morton partition
+    cuts to quadtree node boundaries within the balance slack.
     """
     tasks = tasks if tasks is not None else spgemm_symbolic(a_coords, b_coords)
     na, nb, nc = a_coords.shape[0], b_coords.shape[0], tasks.num_out
@@ -250,11 +274,24 @@ def make_spgemm_plan(
     if placement == "morton":
         # weight C blocks by task count (flops); A/B by uniform block weight
         cw = np.bincount(tasks.c_idx, minlength=nc).astype(np.float64)
-        c_owner = partition_morton(nc, nparts, cw)
+        c_owner = partition_morton(
+            nc,
+            nparts,
+            cw,
+            align=subtree_boundaries(tasks.c_coords) if align_subtrees else None,
+        )
         if a_owner is None:
-            a_owner = partition_morton(na, nparts)
+            a_owner = partition_morton(
+                na,
+                nparts,
+                align=subtree_boundaries(a_coords) if align_subtrees else None,
+            )
         if b_owner is None:
-            b_owner = partition_morton(nb, nparts)
+            b_owner = partition_morton(
+                nb,
+                nparts,
+                align=subtree_boundaries(b_coords) if align_subtrees else None,
+            )
     elif placement == "random":
         c_owner = partition_random(nc, nparts, seed)
         if a_owner is None:

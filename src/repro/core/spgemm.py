@@ -3,16 +3,22 @@
 Mirrors the paper's multiplication task templates in two phases:
 
 * **Symbolic** (host, structure only): enumerate the leaf-level block products
-  ``C[c] += A[a] @ B[b]``.  Two implementations: a vectorized hash/merge join
-  (production path) and a literal recursive quadtree descent
-  (:func:`spgemm_symbolic_recursive`) that matches the paper's task-template
-  recursion; both must produce identical task sets (tested).
+  ``C[c] += A[a] @ B[b]``.  Three implementations, all producing identical
+  task sets (tested): the *production path* :func:`spgemm_symbolic_tree`, a
+  vectorized level-by-level descent over cached
+  :class:`~repro.core.quadtree.QuadtreeIndex` structures; a flat hash/merge
+  join (:func:`spgemm_symbolic`, used where only raw coords are available);
+  and a literal Python-recursive quadtree descent
+  (:func:`spgemm_symbolic_recursive`) kept as the paper-faithful reference.
 * **Numeric** (device): grouped block matmul over the stacked leaf data —
   either the pure-jnp reference (segment_sum) or the Pallas TPU kernel in
   :mod:`repro.kernels.block_spmm`.
 
 Also provides symmetric multiply (syrk), and SpAMM — the paper's sparse
-approximate multiply with norm-based task pruning and an error bound.
+approximate multiply with norm-based pruning applied *during* the descent
+(:func:`spamm_symbolic`): subtree pairs whose ``||A||_F * ||B||_F`` bound
+fits the greedy budget are dropped before their leaves are ever enumerated,
+with a returned error bound <= tau.
 """
 
 from __future__ import annotations
@@ -23,17 +29,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .cache import SymbolicCache
 from .matrix import BSMatrix, block_frobenius_norms
-from .quadtree import morton_encode, morton_decode
+from .quadtree import QuadtreeIndex, morton_encode, morton_decode, quadtree_depth
 
 __all__ = [
     "Tasks",
     "spgemm_symbolic",
+    "spgemm_symbolic_tree",
     "spgemm_symbolic_recursive",
     "spgemm_numeric",
     "multiply",
     "syrk",
     "spamm",
+    "spamm_symbolic",
     "task_flops",
 ]
 
@@ -63,6 +72,26 @@ class Tasks:
 def _empty_tasks() -> Tasks:
     z = np.zeros((0,), dtype=np.int64)
     return Tasks(z, z, z, np.zeros((0, 2), dtype=np.int64))
+
+
+def _finalize_tasks(a_idx: np.ndarray, b_idx: np.ndarray, ci: np.ndarray, cj: np.ndarray) -> Tasks:
+    """Canonical Tasks from raw (a, b, out-row, out-col) pair lists.
+
+    Shared tail of every symbolic phase, so all of them are bit-identical:
+    dedupe output codes into Morton-sorted c_coords, lexsort by (c_idx, a_idx)
+    — which uniquely orders tasks since b is determined by (a, c).
+    """
+    codes = morton_encode(ci, cj)
+    uniq, c_idx = np.unique(codes, return_inverse=True)
+    r, c = morton_decode(uniq)
+    c_coords = np.stack([r, c], axis=1)
+    order = np.lexsort((a_idx, c_idx))
+    return Tasks(
+        a_idx=a_idx[order].astype(np.int64),
+        b_idx=b_idx[order].astype(np.int64),
+        c_idx=c_idx[order].astype(np.int64),
+        c_coords=c_coords,
+    )
 
 
 def spgemm_symbolic(a_coords: np.ndarray, b_coords: np.ndarray) -> Tasks:
@@ -97,17 +126,106 @@ def spgemm_symbolic(a_coords: np.ndarray, b_coords: np.ndarray) -> Tasks:
 
     ci = a_coords[a_idx, 0]
     cj = b_coords[b_idx, 1]
-    codes = morton_encode(ci, cj)
-    uniq, c_idx = np.unique(codes, return_inverse=True)
-    r, c = morton_decode(uniq)
-    c_coords = np.stack([r, c], axis=1)
-    order = np.lexsort((a_idx, c_idx))
-    return Tasks(
-        a_idx=a_idx[order].astype(np.int64),
-        b_idx=b_idx[order].astype(np.int64),
-        c_idx=c_idx[order].astype(np.int64),
-        c_coords=c_coords,
-    )
+    return _finalize_tasks(a_idx, b_idx, ci, cj)
+
+
+def _tree_descend(
+    ia: QuadtreeIndex, ib: QuadtreeIndex, tau: float | None
+) -> tuple[np.ndarray, np.ndarray, float, int]:
+    """Vectorized level-synchronous quadtree descent for C = A @ B.
+
+    Expands the frontier of matching (A node, B node) pairs one level at a
+    time (the paper's multiplication task recursion, whole levels at once):
+    children pairs must agree on the inner quadrant bit, nil children are
+    pruned for free by the CSR child spans.  With ``tau`` set, additionally
+    applies the SpAMM bound during descent — at each level the smallest
+    ``||A_node|| * ||B_node||`` products are greedily dropped while their sum
+    fits the remaining budget, so pruned subtrees are *never enumerated*.
+
+    Returns ``(leaf_a, leaf_b, err_bound, pairs_visited)``: leaf pairs as
+    block-stack indices, the accumulated pruned-bound sum (<= tau), and the
+    number of candidate node pairs visited across all levels.
+    """
+    assert ia.depth == ib.depth, (ia.depth, ib.depth)
+    if ia.nnzb == 0 or ib.nnzb == 0:
+        z = np.zeros((0,), dtype=np.int64)
+        return z, z, 0.0, 0
+    if tau is not None and tau > 0:
+        assert ia.norms is not None and ib.norms is not None, "SpAMM needs subtree norms"
+    ai = np.zeros(1, dtype=np.int64)  # root pair
+    bi = np.zeros(1, dtype=np.int64)
+    visited = 1
+    err = 0.0
+    budget = float(tau) if tau is not None else 0.0
+    one = np.uint64(1)
+    for level in range(ia.depth):
+        sa = ia.child_start[level]
+        sb = ib.child_start[level]
+        sa0, ca = sa[ai], sa[ai + 1] - sa[ai]
+        sb0, cb = sb[bi], sb[bi + 1] - sb[bi]
+        pairs = ca * cb
+        total = int(pairs.sum())
+        goff = np.concatenate([[0], np.cumsum(pairs)])[:-1]
+        gid = np.repeat(np.arange(pairs.size), pairs)
+        local = np.arange(total) - goff[gid]
+        ach = sa0[gid] + local // cb[gid]
+        bch = sb0[gid] + local % cb[gid]
+        # inner-index match: A child quadrant (qi, qk), B child (qk, qj)
+        pa = ia.prefixes[level + 1][ach]
+        pb = ib.prefixes[level + 1][bch]
+        match = (pa & one) == ((pb >> one) & one)
+        ai, bi = ach[match], bch[match]
+        visited += int(ai.size)
+        if budget > 0.0 and ai.size:
+            bound = ia.norms[level + 1][ai] * ib.norms[level + 1][bi]
+            order = np.argsort(bound)
+            csum = np.cumsum(bound[order])
+            ndrop = int(np.searchsorted(csum, budget, side="right"))
+            if ndrop:
+                pruned = float(csum[ndrop - 1])
+                err += pruned
+                budget -= pruned
+                keep = np.ones(ai.size, dtype=bool)
+                keep[order[:ndrop]] = False
+                ai, bi = ai[keep], bi[keep]
+        if ai.size == 0:
+            break
+    return ai, bi, err, visited
+
+
+def _tasks_from_leaf_pairs(ia: QuadtreeIndex, ib: QuadtreeIndex, ai, bi) -> Tasks:
+    if ai.size == 0:
+        return _empty_tasks()
+    ar, _ = morton_decode(ia.prefixes[-1][ai])
+    _, bc = morton_decode(ib.prefixes[-1][bi])
+    return _finalize_tasks(ai, bi, ar, bc)
+
+
+def spgemm_symbolic_tree(ia: QuadtreeIndex, ib: QuadtreeIndex) -> Tasks:
+    """Symbolic phase via vectorized quadtree descent — the production path.
+
+    Identical output to :func:`spgemm_symbolic` (tested bit-for-bit), but
+    structured as the paper's hierarchy walk over cached
+    :class:`~repro.core.quadtree.QuadtreeIndex` structures, which is what
+    lets SpAMM (:func:`spamm_symbolic`) prune whole subtrees mid-descent.
+    """
+    ai, bi, _, _ = _tree_descend(ia, ib, tau=None)
+    return _tasks_from_leaf_pairs(ia, ib, ai, bi)
+
+
+def spamm_symbolic(
+    ia: QuadtreeIndex, ib: QuadtreeIndex, tau: float
+) -> tuple[Tasks, float, int]:
+    """Hierarchical SpAMM symbolic phase.
+
+    Applies the ``||A_node||_F * ||B_node||_F <= remaining-budget`` bound at
+    every level of the descent, so a subtree pair pruned at level L never
+    expands its up-to-4^(depth-L) leaf tasks.  Returns ``(tasks, err_bound,
+    pairs_visited)`` with the guarantee ``||A@B - C||_F <= err_bound <= tau``
+    (triangle inequality over the pruned node-pair products).
+    """
+    ai, bi, err, visited = _tree_descend(ia, ib, tau=tau)
+    return _tasks_from_leaf_pairs(ia, ib, ai, bi), err, visited
 
 
 def spgemm_symbolic_recursive(a_coords: np.ndarray, b_coords: np.ndarray) -> Tasks:
@@ -226,11 +344,38 @@ def spgemm_numeric(
     ).astype(out_dtype)
 
 
-def multiply(a: BSMatrix, b: BSMatrix, *, impl: str = "auto") -> BSMatrix:
-    """C = A @ B (regular multiplication task type)."""
+def _common_depth(a: BSMatrix, b: BSMatrix) -> int:
+    """Shared quadtree depth so both operands hang off one root."""
+    return max(quadtree_depth(*a.nblocks), quadtree_depth(*b.nblocks))
+
+
+def multiply(
+    a: BSMatrix, b: BSMatrix, *, impl: str = "auto", cache: SymbolicCache | None = None
+) -> BSMatrix:
+    """C = A @ B (regular multiplication task type).
+
+    The symbolic phase is the vectorized quadtree descent over the operands'
+    cached :class:`~repro.core.quadtree.QuadtreeIndex` structures; pass a
+    :class:`~repro.core.cache.SymbolicCache` to skip it entirely whenever the
+    pair of sparsity patterns has been seen before (iterative algorithms —
+    see :func:`repro.core.purify.sp2_purify`).
+    """
     assert a.shape[1] == b.shape[0], (a.shape, b.shape)
     assert a.bs == b.bs
-    tasks = spgemm_symbolic(a.coords, b.coords)
+
+    def build() -> Tasks:
+        depth = _common_depth(a, b)
+        return spgemm_symbolic_tree(
+            a.quadtree_index(depth, with_norms=False),
+            b.quadtree_index(depth, with_norms=False),
+        )
+
+    if cache is None:
+        tasks = build()
+    else:
+        tasks = cache.get_or_build(
+            ("spgemm", a.structure_key, b.structure_key), build
+        )
     data = spgemm_numeric(a.data, b.data, tasks, impl=impl)
     return BSMatrix(
         shape=(a.shape[0], b.shape[1]), bs=a.bs, coords=tasks.c_coords, data=data
@@ -278,13 +423,43 @@ def symm_square(a: BSMatrix, *, impl: str = "auto") -> BSMatrix:
     return syrk(a, impl=impl)
 
 
-def spamm(a: BSMatrix, b: BSMatrix, tau: float, *, impl: str = "auto"):
+def spamm(
+    a: BSMatrix,
+    b: BSMatrix,
+    tau: float,
+    *,
+    impl: str = "auto",
+    method: str = "hierarchical",
+):
     """Sparse approximate multiply (paper: SpAMM task type).
 
-    Skips tasks whose contribution bound ||A_a||_F * ||B_b||_F <= tau_task,
-    with tau_task chosen greedily so the *total* skipped bound <= tau.
-    Returns (C, error_bound) with ||AB - C||_F <= error_bound <= tau.
+    Skips work whose contribution bound ||A_node||_F * ||B_node||_F fits a
+    greedy budget so the *total* skipped bound <= tau.  Returns
+    (C, error_bound) with ||AB - C||_F <= error_bound <= tau.
+
+    ``method="hierarchical"`` (default) prunes during the quadtree descent
+    (:func:`spamm_symbolic`): a dropped subtree pair is never enumerated, so
+    the symbolic cost shrinks with the dropped work.  ``method="leaf"`` is
+    the flat reference: enumerate every leaf task, then prune.
     """
+    if method == "hierarchical":
+        depth = _common_depth(a, b)
+        tasks, err, _ = spamm_symbolic(
+            a.quadtree_index(depth), b.quadtree_index(depth), tau
+        )
+        if tasks.num_tasks == 0:
+            return BSMatrix.zeros((a.shape[0], b.shape[1]), a.bs, a.dtype), err
+        data = spgemm_numeric(a.data, b.data, tasks, impl=impl)
+        return (
+            BSMatrix(
+                shape=(a.shape[0], b.shape[1]),
+                bs=a.bs,
+                coords=tasks.c_coords,
+                data=data,
+            ),
+            err,
+        )
+    assert method == "leaf", method
     tasks = spgemm_symbolic(a.coords, b.coords)
     if tasks.num_tasks == 0:
         return BSMatrix.zeros((a.shape[0], b.shape[1]), a.bs, a.dtype), 0.0

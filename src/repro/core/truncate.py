@@ -5,6 +5,9 @@ The paper ships several error-control variants; we implement:
 * :func:`truncate` — block-level truncation with a *global* Frobenius-norm
   guarantee: the blocks with smallest norms are removed greedily such that
   ``||A - truncate(A, tau)||_F <= tau`` (tight by construction).
+* :func:`truncate_hierarchical` — the same global guarantee, decided on the
+  quadtree: whole subtrees with small subtree norms are dropped first during
+  a top-down descent, so a dropped subtree's leaves are never visited.
 * :func:`truncate_elementwise` — zero every element with ``|a_ij| <= eps``
   and drop blocks that become empty (the classic drop-tolerance variant).
 """
@@ -18,7 +21,7 @@ import numpy as np
 
 from .matrix import BSMatrix
 
-__all__ = ["truncate", "truncate_elementwise"]
+__all__ = ["truncate", "truncate_hierarchical", "truncate_elementwise"]
 
 
 def truncate(a: BSMatrix, tau: float) -> BSMatrix:
@@ -33,6 +36,55 @@ def truncate(a: BSMatrix, tau: float) -> BSMatrix:
         return a
     keep = np.ones(a.nnzb, dtype=bool)
     keep[order[:ndrop]] = False
+    idx = np.nonzero(keep)[0]
+    return BSMatrix(
+        shape=a.shape, bs=a.bs, coords=a.coords[idx], data=a.data[jnp.asarray(idx)]
+    )
+
+
+def truncate_hierarchical(a: BSMatrix, tau: float) -> BSMatrix:
+    """Truncate by dropping whole quadtree subtrees first, then leaves.
+
+    Top-down greedy over the cached :class:`~repro.core.quadtree.QuadtreeIndex`
+    subtree norms: at each level, the frontier nodes with smallest subtree
+    norms are dropped while the *squared* budget allows (a subtree's squared
+    Frobenius norm is exactly the sum of its leaf squares, so the accounting
+    is exact); survivors descend.  The global guarantee
+    ``||A - truncate_hierarchical(A, tau)||_F <= tau`` is preserved; the
+    dropped set may differ from :func:`truncate`'s leaf-greedy optimum, but a
+    subtree dropped at level L is removed without its leaves ever being
+    enumerated — the paper's hierarchical error-control task.
+    """
+    if a.nnzb == 0 or tau <= 0:
+        return a
+    qt = a.quadtree_index()
+    budget_sq = float(tau) ** 2
+    drop_mark = np.zeros(a.nnzb + 1, dtype=np.int64)
+    frontier = np.zeros(1, dtype=np.int64)  # root
+    for level in range(qt.depth + 1):
+        sq = qt.norms[level][frontier] ** 2
+        order = np.argsort(sq)
+        csum = np.cumsum(sq[order])
+        ndrop = int(np.searchsorted(csum, budget_sq, side="right"))
+        if ndrop:
+            budget_sq -= float(csum[ndrop - 1])
+            dropped = frontier[order[:ndrop]]
+            ls = qt.leaf_start[level]
+            np.add.at(drop_mark, ls[dropped], 1)
+            np.add.at(drop_mark, ls[dropped + 1], -1)
+            keep_nodes = np.ones(frontier.size, dtype=bool)
+            keep_nodes[order[:ndrop]] = False
+            frontier = frontier[keep_nodes]
+        if frontier.size == 0 or level == qt.depth:
+            break
+        cs = qt.child_start[level]
+        s0 = cs[frontier]
+        counts = cs[frontier + 1] - s0
+        local = np.arange(int(counts.sum())) - np.repeat(np.cumsum(counts) - counts, counts)
+        frontier = np.repeat(s0, counts) + local
+    keep = np.cumsum(drop_mark[:-1]) == 0
+    if keep.all():
+        return a
     idx = np.nonzero(keep)[0]
     return BSMatrix(
         shape=a.shape, bs=a.bs, coords=a.coords[idx], data=a.data[jnp.asarray(idx)]

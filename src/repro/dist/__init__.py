@@ -15,8 +15,10 @@ operands between operations.  This package is that layer for the XLA mesh:
   (structure union, owner-aligned re-slotting), ``dist_scale``,
   ``dist_trace`` / ``dist_frobenius_norm`` (psum reductions),
   ``dist_truncate`` (host symbolic selection, device compaction).
-* :func:`dist_multiply` (:mod:`repro.dist.multiply`) — C = A @ B on resident
-  operands through the cached schedule.
+* :func:`dist_multiply` / :func:`dist_spamm` (:mod:`repro.dist.multiply`) —
+  C = A @ B on resident operands through the cached schedule; the SpAMM
+  variant threads a hierarchically-pruned task list into the plan with an
+  error bound <= tau.
 * :func:`dist_sp2_purify` (:mod:`repro.dist.purify`) — the full SP2 loop on
   resident matrices with per-iteration cache/comm stats.
 """
@@ -30,7 +32,7 @@ from .collectives import (
     dist_truncate,
 )
 from .matrix import DistBSMatrix, scatter
-from .multiply import dist_multiply, multiply_plan_key
+from .multiply import dist_multiply, dist_spamm, multiply_plan_key
 from .purify import DistPurifyStats, dist_sp2_purify
 
 __all__ = [
@@ -43,6 +45,7 @@ __all__ = [
     "dist_frobenius_norm",
     "dist_truncate",
     "dist_multiply",
+    "dist_spamm",
     "multiply_plan_key",
     "dist_sp2_purify",
     "DistPurifyStats",

@@ -5,25 +5,25 @@ for re-fetches once their access pattern stabilizes.  The XLA-side
 equivalents of those re-fetches are (a) host-side symbolic planning, (b)
 shipping plan index arrays to devices and (c) tracing + compiling the
 ``shard_map`` program.  :class:`PlanCache` memoizes all three behind a key
-derived from :func:`repro.core.schedule.structure_fingerprint` of the operand
+derived from :func:`repro.core.quadtree.structure_fingerprint` of the operand
 structures (Morton codes + owner maps) plus the schedule knobs (nparts,
 placement/exchange mode, impl).  Every purification iteration after the
 sparsity pattern stabilizes under truncation is a pure cache hit: no
 planning, no recompilation, no host->device transfer.
 
-Hit/miss counters are surfaced via :meth:`PlanCache.stats`, mirroring
-``plan_stats``-style metrics.
+The generic LRU + hit/miss machinery lives in
+:class:`repro.core.cache.SymbolicCache`, which the single-host symbolic
+phases share; ``PlanCache`` is its distributed-plan face.
 """
 
 from __future__ import annotations
 
-import collections
-from typing import Any, Callable, Hashable
+from repro.core.cache import SymbolicCache
 
 __all__ = ["PlanCache"]
 
 
-class PlanCache:
+class PlanCache(SymbolicCache):
     """LRU cache from structure keys to built plans/executables.
 
     Keys are hashable tuples (callers prefix them with a kind tag such as
@@ -31,50 +31,3 @@ class PlanCache:
     returns — typically a (plan, executable) pair whose executable holds
     device-resident index arrays and a jitted shard_map program.
     """
-
-    def __init__(self, max_entries: int = 128):
-        self.max_entries = max_entries
-        self._entries: collections.OrderedDict[Hashable, Any] = (
-            collections.OrderedDict()
-        )
-        self.hits = 0
-        self.misses = 0
-        self._by_kind: collections.Counter = collections.Counter()
-
-    def get_or_build(self, key: Hashable, builder: Callable[[], Any]) -> Any:
-        if key in self._entries:
-            self.hits += 1
-            self._by_kind[(key[0] if isinstance(key, tuple) else "?", "hit")] += 1
-            self._entries.move_to_end(key)
-            return self._entries[key]
-        self.misses += 1
-        self._by_kind[(key[0] if isinstance(key, tuple) else "?", "miss")] += 1
-        value = builder()
-        self._entries[key] = value
-        while len(self._entries) > self.max_entries:
-            self._entries.popitem(last=False)
-        return value
-
-    def peek(self, key: Hashable, default: Any = None) -> Any:
-        """Read an entry without touching counters or LRU order."""
-        return self._entries.get(key, default)
-
-    def __len__(self) -> int:
-        return len(self._entries)
-
-    def __contains__(self, key: Hashable) -> bool:
-        return key in self._entries
-
-    def clear(self) -> None:
-        self._entries.clear()
-
-    def stats(self) -> dict:
-        """plan_stats-style cache metrics."""
-        total = self.hits + self.misses
-        return dict(
-            entries=len(self._entries),
-            hits=self.hits,
-            misses=self.misses,
-            hit_rate=self.hits / total if total else 0.0,
-            by_kind={f"{k}/{o}": v for (k, o), v in sorted(self._by_kind.items())},
-        )

@@ -12,15 +12,19 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.distributed import make_spgemm_executable
+from repro.core.quadtree import build_quadtree_index, quadtree_depth
 from repro.core.schedule import make_spgemm_plan, structure_fingerprint
+from repro.core.spgemm import spamm_symbolic
 
 from .cache import PlanCache
-from .matrix import DistBSMatrix, mesh_key
+from .matrix import DistBSMatrix, _store_sharding, mesh_key
 
-__all__ = ["dist_multiply", "multiply_plan_key"]
+__all__ = ["dist_multiply", "dist_spamm", "multiply_plan_key"]
 
 
 def multiply_plan_key(
@@ -88,4 +92,116 @@ def dist_multiply(
         cap=plan.c_cap,
         store=c_store,
         mesh=a.mesh,
+    )
+
+
+def _resident_block_norms(x: DistBSMatrix) -> np.ndarray:
+    """Per-block Frobenius norms in stack order; only the tiny [P, cap] norm
+    table crosses device->host (the block data stays resident).  Matches
+    :func:`repro.core.matrix.block_frobenius_norms` bit-for-bit so the
+    hierarchical prune decisions agree with the host path."""
+    norms = np.asarray(
+        jnp.sqrt(jnp.sum(jnp.square(x.store.astype(jnp.float32)), axis=(2, 3)))
+    )
+    return (
+        norms[x.owner, x.slot].astype(np.float64)
+        if x.nnzb
+        else np.zeros((0,), np.float64)
+    )
+
+
+def dist_spamm(
+    a: DistBSMatrix,
+    b: DistBSMatrix,
+    tau: float,
+    cache: PlanCache | None = None,
+    *,
+    exchange: str = "p2p",
+    impl: str = "ref",
+) -> tuple[DistBSMatrix, float]:
+    """Sparse approximate multiply on resident operands: C ~= A @ B.
+
+    The hierarchical SpAMM symbolic phase (:func:`repro.core.spgemm.spamm_symbolic`)
+    runs on the host against quadtree indexes carrying subtree norms — norms
+    depend on current values, so it runs every call, but it is cheap and
+    shrinks with the pruned work.  The *pruned task list* is then threaded
+    into :func:`make_spgemm_plan(tasks=...)`; the plan + executable are cached
+    keyed by the pruned structure, so a stable prune pattern (e.g. SP2
+    iterations past pattern stabilization) reuses the compiled program.
+
+    Returns ``(C, err_bound)`` with ``||A@B - C||_F <= err_bound <= tau``.
+    """
+    assert a.mesh is b.mesh or list(a.mesh.devices.flat) == list(
+        b.mesh.devices.flat
+    ), "operands must live on the same worker mesh"
+    assert a.shape[1] == b.shape[0] and a.bs == b.bs, (a.shape, b.shape)
+    depth = max(
+        quadtree_depth(-(-a.shape[0] // a.bs), -(-a.shape[1] // a.bs)),
+        quadtree_depth(-(-b.shape[0] // b.bs), -(-b.shape[1] // b.bs)),
+    )
+    ia = build_quadtree_index(a.coords, _resident_block_norms(a), depth=depth)
+    ib = build_quadtree_index(b.coords, _resident_block_norms(b), depth=depth)
+    tasks, err, _ = spamm_symbolic(ia, ib, tau)
+    if tasks.num_tasks == 0:
+        store = jax.device_put(
+            jnp.zeros((a.nparts, 1, a.bs, a.bs), dtype=a.dtype),
+            _store_sharding(a.mesh),
+        )
+        empty = DistBSMatrix(
+            shape=(a.shape[0], b.shape[1]),
+            bs=a.bs,
+            coords=np.zeros((0, 2), dtype=np.int64),
+            owner=np.zeros((0,), dtype=np.int32),
+            slot=np.zeros((0,), dtype=np.int32),
+            cap=1,
+            store=store,
+            mesh=a.mesh,
+        )
+        return empty, err
+
+    key = (
+        "spamm",
+        structure_fingerprint(
+            a.codes(), b.codes(), a.owner, b.owner, a.nparts, a.bs,
+            tasks.a_idx, tasks.b_idx, tasks.c_idx,
+        ),
+        mesh_key(a.mesh),
+        exchange,
+        impl,
+    )
+
+    def build():
+        plan = make_spgemm_plan(
+            a.coords,
+            b.coords,
+            a.nparts,
+            a.bs,
+            exchange=exchange,
+            tasks=tasks,
+            a_owner=a.owner,
+            b_owner=b.owner,
+        )
+        assert plan.a_cap == a.cap and plan.b_cap == b.cap, (
+            plan.a_cap, a.cap, plan.b_cap, b.cap,
+        )
+        exe = make_spgemm_executable(plan, a.mesh, impl=impl)
+        return plan, exe
+
+    if cache is None:
+        plan, exe = build()
+    else:
+        plan, exe = cache.get_or_build(key, build)
+    c_store = exe(a.store, b.store)
+    return (
+        DistBSMatrix(
+            shape=(a.shape[0], b.shape[1]),
+            bs=a.bs,
+            coords=plan.c_coords,
+            owner=np.asarray(plan.c_owner, dtype=np.int32),
+            slot=np.asarray(plan.c_slot, dtype=np.int32),
+            cap=plan.c_cap,
+            store=c_store,
+            mesh=a.mesh,
+        ),
+        err,
     )

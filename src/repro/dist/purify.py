@@ -30,7 +30,7 @@ from repro.core.schedule import plan_stats
 from .cache import PlanCache
 from .collectives import dist_add, dist_frobenius_norm, dist_trace, dist_truncate
 from .matrix import DistBSMatrix, scatter
-from .multiply import dist_multiply, multiply_plan_key
+from .multiply import dist_multiply, dist_spamm, multiply_plan_key
 
 __all__ = ["dist_sp2_purify", "DistPurifyStats"]
 
@@ -65,6 +65,7 @@ def dist_sp2_purify(
     max_iter: int = 100,
     idem_tol: float = 1e-8,
     trunc_tau: float = 0.0,
+    spamm_tau: float = 0.0,
     impl: str = "ref",
     exchange: str = "p2p",
     cache: PlanCache | None = None,
@@ -74,11 +75,18 @@ def dist_sp2_purify(
     Accepts a host ``BSMatrix`` (scattered once) or an already-resident
     ``DistBSMatrix``.  Returns the gathered density matrix and stats; pass a
     ``cache`` to share plans across calls (e.g. repeated SCF-style solves on
-    a fixed sparsity pattern).
+    a fixed sparsity pattern).  ``spamm_tau > 0`` replaces the exact multiply
+    with hierarchical SpAMM (:func:`repro.dist.multiply.dist_spamm`): each
+    square carries an error bound <= spamm_tau, and the pruned task list is
+    threaded into the cached plan.
     """
     cache = cache if cache is not None else PlanCache()
     scale, shift = sp2_init_coeffs(lmin, lmax)
     if isinstance(f, DistBSMatrix):
+        assert mesh is None or mesh is f.mesh, (
+            "resident F already lives on a mesh; drop the mesh argument or "
+            "pass the one it was scattered onto"
+        )
         mesh = f.mesh
         # X0 = scale*F + shift*I, built resident: only the diagonal identity
         # enters through scatter; F's store never leaves the mesh
@@ -94,13 +102,21 @@ def dist_sp2_purify(
     best = x
     for it in range(max_iter):
         h0, m0, t0 = cache.hits, cache.misses, time.perf_counter()
-        x2 = dist_multiply(x, x, cache, exchange=exchange, impl=impl)
+        if spamm_tau > 0:
+            x2, mult_err = dist_spamm(x, x, spamm_tau, cache, exchange=exchange, impl=impl)
+        else:
+            x2 = dist_multiply(x, x, cache, exchange=exchange, impl=impl)
+            mult_err = 0.0
         idem = dist_frobenius_norm(dist_add(x2, x, 1.0, -1.0, cache), cache)
         tr = dist_trace(x, cache)
         traces.append(tr)
         idems.append(idem)
         nnzbs.append(x.nnzb)
-        entry = cache.peek(multiply_plan_key(x, x, exchange=exchange, impl=impl))
+        entry = (
+            cache.peek(multiply_plan_key(x, x, exchange=exchange, impl=impl))
+            if spamm_tau <= 0
+            else None
+        )
         plan = entry[0] if entry is not None else None
         per_iter.append(
             dict(
@@ -110,6 +126,7 @@ def dist_sp2_purify(
                 trace=tr,
                 cache_hits=cache.hits - h0,
                 cache_misses=cache.misses - m0,
+                spamm_err=mult_err,
                 recv_bytes_mean=(
                     plan_stats(plan)["recv_bytes_mean"] if plan is not None else 0.0
                 ),

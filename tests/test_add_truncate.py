@@ -4,11 +4,13 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core import (
+    BSMatrix,
     add,
     add_scaled_identity,
     identity,
     truncate,
     truncate_elementwise,
+    truncate_hierarchical,
 )
 
 from helpers import banded_matrix, random_block_matrix
@@ -68,3 +70,57 @@ def test_truncate_elementwise():
     t = truncate_elementwise(a, 0.5)
     d = t.to_dense()
     assert ((np.abs(d) > 0.5) | (d == 0)).all()
+
+
+@given(tau=st.floats(0.0, 100.0), seed=st.integers(0, 8))
+@settings(max_examples=30, deadline=None)
+def test_truncate_hierarchical_error_control(tau, seed):
+    a = random_block_matrix(48, 8, 0.6, seed)
+    t = truncate_hierarchical(a, tau)
+    err = np.linalg.norm(a.to_dense() - t.to_dense())
+    assert err <= tau + 1e-5
+    assert t.nnzb <= a.nnzb
+
+
+def test_truncate_hierarchical_drops_whole_subtrees():
+    # a matrix with one tiny quadrant: the whole subtree goes in one decision
+    rng = np.random.default_rng(0)
+    n, bs = 64, 8
+    d = rng.standard_normal((n, n)).astype(np.float32)
+    d[n // 2 :, n // 2 :] *= 1e-6  # bottom-right quadrant is negligible
+    a = BSMatrix.from_dense(d, bs)
+    tau = 1e-3
+    t = truncate_hierarchical(a, tau)
+    # the negligible quadrant's blocks are gone, the rest survives
+    gone = (t.coords[:, 0] >= n // (2 * bs)) & (t.coords[:, 1] >= n // (2 * bs))
+    assert not gone.any()
+    assert np.linalg.norm(a.to_dense() - t.to_dense()) <= tau + 1e-6
+
+
+def test_truncate_hierarchical_edge_cases():
+    z = BSMatrix.zeros((32, 32), 8)
+    assert truncate_hierarchical(z, 1.0) is z
+    a = random_block_matrix(32, 8, 0.5, 4)
+    assert truncate_hierarchical(a, 0.0) is a  # tau=0: no-op
+    # all-dropped: budget above the full norm empties the matrix
+    t = truncate_hierarchical(a, a.frobenius_norm() * 2)
+    assert t.nnzb == 0 and np.allclose(t.to_dense(), 0.0)
+
+
+@pytest.mark.parametrize("n,bs", [(40, 8), (56, 16)])
+def test_truncate_elementwise_non_power_of_two_grid(n, bs):
+    a = random_block_matrix(n, bs, 0.6, seed=n)
+    eps = float(np.median(np.abs(np.asarray(a.data)))) if a.nnzb else 0.1
+    t = truncate_elementwise(a, eps)
+    d, ref = t.to_dense(), a.to_dense()
+    assert np.array_equal(d != 0, np.abs(ref) > eps)
+    assert np.allclose(d[d != 0], ref[np.abs(ref) > eps])
+
+
+def test_truncate_elementwise_all_dropped_and_empty():
+    z = BSMatrix.zeros((24, 24), 8)
+    assert truncate_elementwise(z, 0.5) is z
+    a = random_block_matrix(24, 8, 0.5, 7)
+    t = truncate_elementwise(a, float(np.abs(np.asarray(a.data)).max()) + 1.0)
+    assert t.nnzb == 0
+    assert np.allclose(t.to_dense(), 0.0)

@@ -15,9 +15,9 @@ import pytest
 
 _SCRIPT = r"""
 import numpy as np, jax, json, sys
-from repro.core import BSMatrix, multiply, add, truncate, sp2_purify
+from repro.core import BSMatrix, multiply, add, truncate, sp2_purify, spamm
 from repro.core.distributed import make_worker_mesh
-from repro.dist import (scatter, PlanCache, dist_multiply, dist_add,
+from repro.dist import (scatter, PlanCache, dist_multiply, dist_spamm, dist_add,
                         dist_trace, dist_frobenius_norm, dist_truncate,
                         dist_sp2_purify)
 
@@ -87,6 +87,32 @@ out["iters"] = [st.iterations, st_ref.iterations]
 out["cache"] = st.cache
 out["tail_hits"] = [pi["cache_hits"] for pi in st.per_iter[-3:]]
 out["tail_misses"] = [pi["cache_misses"] for pi in st.per_iter[-3:]]
+
+# hierarchical SpAMM on resident operands: bound holds, matches host path,
+# repeated calls with a stable prune pattern hit the plan cache
+tau_s = 2.0
+sc = PlanCache()
+Cs, err_s = dist_spamm(dA, dB, tau_s, sc)
+host_c, host_err = spamm(A, B, tau_s)
+out["spamm_bound_ok"] = bool(err_s <= tau_s + 1e-9)
+out["spamm_true_err"] = float(
+    np.linalg.norm(Cs.gather().to_dense() - A.to_dense() @ B.to_dense())
+)
+out["spamm_err_bound"] = float(err_s)
+out["spamm_host_agree"] = float(
+    np.abs(Cs.gather().to_dense() - host_c.to_dense()).max()
+)
+dist_spamm(dA, dB, tau_s, sc)  # same values -> same pruned tasks -> hit
+out["spamm_cache"] = sc.stats()
+
+# SP2 with SpAMM multiplies: density still correct within the loosened bound
+d_spamm, st_sp = dist_sp2_purify(f, nocc, lmin, lmax, mesh,
+                                 idem_tol=1e-5, trunc_tau=1e-5, spamm_tau=1e-6)
+out["purify_spamm_err"] = float(np.abs(d_spamm.to_dense() - d_ref.to_dense()).max())
+out["purify_spamm_trace"] = float(d_spamm.trace())
+out["purify_spamm_errs_bounded"] = bool(
+    all(pi["spamm_err"] <= 1e-6 + 1e-12 for pi in st_sp.per_iter)
+)
 print("RESULT " + json.dumps(out))
 """
 
@@ -138,6 +164,21 @@ def test_dist_purify_matches_single_host(dist_results):
     assert dist_results["purify_err"] < 1e-4
     assert dist_results["purify_resident_err"] < 1e-4
     assert abs(dist_results["purify_trace"] - dist_results["nocc"]) < 0.05
+
+
+def test_dist_spamm(dist_results):
+    assert dist_results["spamm_bound_ok"]
+    assert dist_results["spamm_true_err"] <= dist_results["spamm_err_bound"] + 1e-2
+    # identical norms -> identical hierarchical prune as the host path
+    assert dist_results["spamm_host_agree"] < 1e-5
+    st = dist_results["spamm_cache"]
+    assert st["hits"] >= 1  # stable prune pattern reuses plan + executable
+
+
+def test_dist_purify_with_spamm(dist_results):
+    assert dist_results["purify_spamm_err"] < 1e-3
+    assert abs(dist_results["purify_spamm_trace"] - dist_results["nocc"]) < 0.05
+    assert dist_results["purify_spamm_errs_bounded"]
     it_dist, it_ref = dist_results["iters"]
     assert it_dist == it_ref
 

@@ -73,6 +73,39 @@ def test_from_blocks_sums_duplicates():
     assert np.allclose(d[4:, 4:], 1.0)
 
 
+def test_get_elements_empty_matrix():
+    # regression: searchsorted into a zero-length code array used to IndexError
+    z = BSMatrix.zeros((32, 32), 8)
+    got = z.get_elements([0, 5, 31], [1, 2, 31])
+    assert got.shape == (3,) and (got == 0).all()
+
+
+def test_get_elements_empty_queries():
+    m = banded_matrix(32, 2, 8)
+    assert m.get_elements([], []).shape == (0,)
+
+
+def test_to_dense_matches_block_loop():
+    # vectorized scatter must equal the per-block loop reference exactly
+    for n, bs, d, seed in [(40, 8, 0.3, 0), (56, 16, 0.7, 1), (24, 4, 0.0, 2)]:
+        m = random_block_matrix(n, bs, d, seed)
+        data = np.asarray(m.data)
+        nbr, nbc = m.nblocks
+        ref = np.zeros((nbr * bs, nbc * bs), dtype=data.dtype)
+        for t in range(m.nnzb):
+            i, j = m.coords[t]
+            ref[i * bs : (i + 1) * bs, j * bs : (j + 1) * bs] = data[t]
+        assert np.array_equal(m.to_dense(), ref[:n, :n])
+
+
+def test_to_dense_rectangular_partial_blocks():
+    rng = np.random.default_rng(4)
+    d = rng.standard_normal((37, 21)).astype(np.float32)
+    m = BSMatrix.from_dense(d, 8)
+    assert m.to_dense().shape == (37, 21)
+    assert np.allclose(m.to_dense(), d)
+
+
 def test_leaf_specs():
     m = banded_matrix(128, 5, 32)
     spec = LeafSpec("block_sparse", inner_bs=8)

@@ -4,6 +4,7 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core.quadtree import (
+    build_quadtree_index,
     expand_prefix,
     morton_decode,
     morton_encode,
@@ -11,6 +12,8 @@ from repro.core.quadtree import (
     quadtree_depth,
     quadtree_node_counts,
 )
+
+from helpers import banded_matrix, random_block_matrix
 
 
 @given(
@@ -70,3 +73,83 @@ def test_depth():
     assert quadtree_depth(1, 1) == 0
     assert quadtree_depth(2, 2) == 1
     assert quadtree_depth(5, 3) == 3
+
+
+# -- QuadtreeIndex -----------------------------------------------------------
+
+
+@given(n=st.integers(8, 80), bs=st.sampled_from([4, 8]), d=st.floats(0.05, 0.9), seed=st.integers(0, 6))
+@settings(max_examples=20, deadline=None)
+def test_quadtree_index_invariants(n, bs, d, seed):
+    m = random_block_matrix(n, bs, d, seed)
+    if m.nnzb == 0:
+        return
+    qt = m.quadtree_index()
+    # level sizes match the implicit node counts
+    assert qt.node_counts() == quadtree_node_counts(m.coords, depth=qt.depth)
+    # child spans partition each next level, in order
+    for k in range(qt.depth):
+        cs = qt.child_start[k]
+        assert cs[0] == 0 and cs[-1] == qt.prefixes[k + 1].size
+        assert np.all(np.diff(cs) >= 1)  # every node has a nonzero child
+        # every child's prefix >> 2 equals its parent's prefix
+        parent = np.repeat(np.arange(qt.prefixes[k].size), np.diff(cs))
+        assert np.array_equal(
+            qt.prefixes[k + 1] >> np.uint64(2), qt.prefixes[k][parent]
+        )
+    # leaf spans cover the stack exactly
+    for k in range(qt.depth + 1):
+        ls = qt.leaf_start[k]
+        assert ls[0] == 0 and ls[-1] == m.nnzb
+
+
+@given(n=st.integers(8, 64), bs=st.sampled_from([4, 8]), seed=st.integers(0, 6))
+@settings(max_examples=15, deadline=None)
+def test_subtree_norms_match_dense(n, bs, seed):
+    from repro.core.quadtree import expand_prefix
+
+    m = random_block_matrix(n, bs, 0.4, seed)
+    if m.nnzb == 0:
+        return
+    qt = m.quadtree_index()
+    dense = m.to_dense().astype(np.float64)
+    pad = np.zeros((m.nblocks[0] * bs, m.nblocks[1] * bs))
+    pad[: dense.shape[0], : dense.shape[1]] = dense
+    # root norm is the full Frobenius norm
+    assert np.isclose(qt.norms[0][0], np.linalg.norm(pad), rtol=1e-5)
+    # every node's subtree norm equals the norm of its bounding box
+    for level in range(qt.depth + 1):
+        for j, p in enumerate(qt.prefixes[level][:16]):  # cap for speed
+            r0, r1, c0, c1 = expand_prefix(int(p), level, qt.depth)
+            sub = pad[r0 * bs : r1 * bs, c0 * bs : c1 * bs]
+            assert np.isclose(qt.norms[level][j], np.linalg.norm(sub), rtol=1e-5)
+
+
+def test_quadtree_index_cached_on_matrix():
+    m = banded_matrix(64, 3, 8)
+    q1 = m.quadtree_index()
+    q2 = m.quadtree_index()
+    assert q1 is q2  # lazily built once per (matrix, depth)
+    q3 = m.quadtree_index(depth=q1.depth + 2)
+    assert q3 is not q1 and q3.depth == q1.depth + 2
+    # fingerprints are structure-keyed: same codes + depth => same key
+    m2 = banded_matrix(64, 3, 8, seed=9)  # same band structure, other values
+    assert m2.quadtree_index().fingerprint == q1.fingerprint
+    assert m.structure_key == m2.structure_key
+
+
+def test_quadtree_index_empty_and_single():
+    empty = build_quadtree_index(np.zeros((0, 2), dtype=np.int64))
+    assert empty.nnzb == 0 and empty.num_nodes() == 0
+    single = build_quadtree_index(np.array([[0, 0]]), np.array([2.0]), depth=0)
+    assert single.depth == 0 and single.nnzb == 1
+    assert np.isclose(single.norms[0][0], 2.0)
+
+
+def test_boundaries_are_node_starts():
+    m = banded_matrix(128, 5, 8)
+    qt = m.quadtree_index()
+    b = qt.boundaries()
+    assert b[0] == 0 and b[-1] == m.nnzb
+    # level-restricted boundaries are a subset of the merged set
+    assert np.all(np.isin(qt.boundaries(level=1), b))

@@ -11,6 +11,7 @@ from repro.core.schedule import (
     partition_morton,
     partition_random,
     plan_stats,
+    subtree_boundaries,
 )
 
 from helpers import banded_matrix, random_block_matrix
@@ -122,3 +123,43 @@ def test_partition_morton_weighted():
 def test_partition_random_covers():
     owner = partition_random(100, 7, seed=3)
     assert set(owner.tolist()) == set(range(7))
+
+
+def test_partition_morton_snaps_to_subtree_boundaries():
+    # dense power-of-two grid: every partition cut can land on a node start
+    n, bs, nparts = 64, 8, 4
+    a = random_block_matrix(n, bs, 1.0, 0)
+    align = subtree_boundaries(a.coords)
+    owner = partition_morton(a.nnzb, nparts, align=align)
+    cuts = np.nonzero(np.diff(owner))[0] + 1
+    assert np.all(np.isin(cuts, align))
+    # balance is preserved within the slack
+    loads = np.bincount(owner, minlength=nparts)
+    assert loads.max() / (a.nnzb / nparts) < 1.3
+
+
+def test_partition_morton_alignment_respects_balance_slack():
+    # pathological weights: snapping must not blow the balance bound
+    rng = np.random.default_rng(1)
+    w = rng.random(128) * 10
+    align = np.array([0, 1, 127, 128])  # useless candidates far from targets
+    owner = partition_morton(128, 4, w, align=align)
+    loads = np.array([w[owner == p].sum() for p in range(4)])
+    assert loads.max() / (w.sum() / 4) < 1.5  # cuts stayed near the quantiles
+
+
+def test_subtree_boundaries_unsorted_returns_none():
+    coords = np.array([[3, 3], [0, 0]])  # not Morton order
+    assert subtree_boundaries(coords) is None
+    assert subtree_boundaries(np.zeros((0, 2), dtype=np.int64)) is None
+
+
+def test_aligned_plan_keeps_locality_and_balance():
+    a = banded_matrix(512, 20, 16, seed=4)
+    aligned = plan_stats(make_spgemm_plan(a.coords, a.coords, 8, 16))
+    unaligned = plan_stats(
+        make_spgemm_plan(a.coords, a.coords, 8, 16, align_subtrees=False)
+    )
+    assert aligned["task_balance"] < 1.6
+    # subtree alignment must not cost communication (same or fewer bytes)
+    assert aligned["recv_bytes_mean"] <= unaligned["recv_bytes_mean"] * 1.1

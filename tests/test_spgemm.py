@@ -6,16 +6,31 @@ from hypothesis import strategies as st
 from repro.core import (
     BSMatrix,
     LeafSpec,
+    SymbolicCache,
     exact_spgemm_flops,
     multiply,
     spamm,
+    spamm_symbolic,
     spgemm_symbolic,
     spgemm_symbolic_recursive,
+    spgemm_symbolic_tree,
+    symm_square,
     syrk,
     task_flops,
 )
+from repro.core.spgemm import _common_depth
 
 from helpers import banded_matrix, random_block_matrix
+
+
+def decay_matrix(n: int, bs: int, rate: float = 0.5, seed: int = 0) -> BSMatrix:
+    """Exponential off-diagonal decay — the paper's SpAMM-friendly sequence."""
+    rng = np.random.default_rng(seed)
+    i, j = np.meshgrid(np.arange(n), np.arange(n), indexing="ij")
+    a = rng.standard_normal((n, n)).astype(np.float32) * np.exp(
+        -rate * np.abs(i - j)
+    ).astype(np.float32)
+    return BSMatrix.from_dense(a, bs)
 
 
 @given(
@@ -107,10 +122,124 @@ def test_flop_counting():
 
 
 def test_symm_square():
-    from repro.core import symm_square
-
     a = banded_matrix(64, 5, 8, seed=11)
     sym = BSMatrix.from_dense(a.to_dense() + a.to_dense().T, 8)
     sq = symm_square(sym)
     ref = sym.to_dense() @ sym.to_dense()
     assert np.allclose(sq.to_dense(), ref, atol=1e-4)
+
+
+# -- vectorized quadtree descent (production symbolic path) ------------------
+
+
+@given(
+    n=st.integers(8, 64),
+    bs=st.sampled_from([4, 8]),
+    da=st.floats(0.05, 1.0),
+    db=st.floats(0.05, 1.0),
+    seed=st.integers(0, 8),
+)
+@settings(max_examples=25, deadline=None)
+def test_symbolic_tree_identical_to_flat(n, bs, da, db, seed):
+    a = random_block_matrix(n, bs, da, seed)
+    b = random_block_matrix(n, bs, db, seed + 31)
+    t1 = spgemm_symbolic(a.coords, b.coords)
+    depth = _common_depth(a, b)
+    t2 = spgemm_symbolic_tree(a.quadtree_index(depth), b.quadtree_index(depth))
+    # bit-identical Tasks, not just the same set
+    assert np.array_equal(t1.a_idx, t2.a_idx)
+    assert np.array_equal(t1.b_idx, t2.b_idx)
+    assert np.array_equal(t1.c_idx, t2.c_idx)
+    assert np.array_equal(t1.c_coords, t2.c_coords)
+
+
+def test_symbolic_tree_rectangular():
+    rng = np.random.default_rng(5)
+    a = BSMatrix.from_dense(rng.standard_normal((24, 72)).astype(np.float32), 8)
+    b = BSMatrix.from_dense(rng.standard_normal((72, 16)).astype(np.float32), 8)
+    t1 = spgemm_symbolic(a.coords, b.coords)
+    depth = _common_depth(a, b)
+    t2 = spgemm_symbolic_tree(a.quadtree_index(depth), b.quadtree_index(depth))
+    assert np.array_equal(t1.a_idx, t2.a_idx)
+    assert np.array_equal(t1.c_coords, t2.c_coords)
+    c = multiply(a, b)  # production path goes through the descent
+    assert np.allclose(c.to_dense(), a.to_dense() @ b.to_dense(), atol=1e-3)
+
+
+def test_multiply_symbolic_cache():
+    cache = SymbolicCache()
+    a = random_block_matrix(48, 8, 0.4, 1)
+    b = random_block_matrix(48, 8, 0.4, 2)
+    c1 = multiply(a, b, cache=cache)
+    c2 = multiply(a, b, cache=cache)  # second call skips the symbolic phase
+    assert cache.hits == 1 and cache.misses == 1
+    assert np.array_equal(np.asarray(c1.data), np.asarray(c2.data))
+    # uncached result is bit-identical
+    c3 = multiply(a, b)
+    assert np.array_equal(c1.coords, c3.coords)
+    assert np.array_equal(np.asarray(c1.data), np.asarray(c3.data))
+
+
+# -- hierarchical SpAMM ------------------------------------------------------
+
+
+@given(tau=st.floats(0.01, 50.0), seed=st.integers(0, 5))
+@settings(max_examples=15, deadline=None)
+def test_spamm_hierarchical_error_bound(tau, seed):
+    a = decay_matrix(64, 8, rate=0.3, seed=seed)
+    b = decay_matrix(64, 8, rate=0.3, seed=seed + 1)
+    c, bound = spamm(a, b, tau)
+    err = np.linalg.norm(c.to_dense() - a.to_dense() @ b.to_dense())
+    assert bound <= tau + 1e-9
+    assert err <= bound + 1e-3  # float32 numeric slack
+
+
+def test_spamm_hierarchical_visits_fewer_nodes():
+    # decay sequence: pruning during descent must skip whole subtrees, so the
+    # symbolic phase visits strictly fewer node pairs than full enumeration
+    a = decay_matrix(256, 8, rate=0.15, seed=3)
+    depth = _common_depth(a, a)
+    ia = a.quadtree_index(depth)
+    full_tasks, _, full_visits = spamm_symbolic(ia, ia, 0.0)
+    tau = 1e-2 * a.frobenius_norm() ** 2
+    tasks, err, visits = spamm_symbolic(ia, ia, tau)
+    assert visits < full_visits, (visits, full_visits)
+    assert tasks.num_tasks < full_tasks.num_tasks
+    assert err <= tau
+
+
+def test_spamm_leaf_method_still_available():
+    a = banded_matrix(64, 4, 8, 1)
+    c_h, e_h = spamm(a, a, 1.0)
+    c_l, e_l = spamm(a, a, 1.0, method="leaf")
+    ref = a.to_dense() @ a.to_dense()
+    for c, e in [(c_h, e_h), (c_l, e_l)]:
+        assert e <= 1.0 + 1e-9
+        assert np.linalg.norm(c.to_dense() - ref) <= e + 1e-3
+
+
+# -- satellite: syrk / symm_square / truncate_elementwise edge cases ---------
+
+
+@pytest.mark.parametrize("n,bs", [(40, 16), (56, 8), (24, 16)])
+def test_syrk_non_power_of_two_grid(n, bs):
+    # non-power-of-two block grids (5x5, 7x7, ...) against the dense reference
+    a = random_block_matrix(n, bs, 0.5, seed=n)
+    s = syrk(a)
+    assert np.allclose(s.to_dense(), a.to_dense() @ a.to_dense().T, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,bs", [(40, 8), (48, 16)])
+def test_symm_square_non_power_of_two_grid(n, bs):
+    a = random_block_matrix(n, bs, 0.4, seed=n + 1)
+    sym = BSMatrix.from_dense(a.to_dense() + a.to_dense().T, bs)
+    assert np.allclose(
+        symm_square(sym).to_dense(), sym.to_dense() @ sym.to_dense(), atol=1e-4
+    )
+
+
+def test_syrk_empty():
+    z = BSMatrix.zeros((40, 24), 8)
+    s = syrk(z)
+    assert s.shape == (40, 40) and s.nnzb == 0
+    assert np.allclose(s.to_dense(), 0.0)

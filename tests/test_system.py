@@ -98,3 +98,46 @@ def test_quadtree_sparsity_survives_squaring():
     c = multiply(a, a)
     nb = a.nblocks[0]
     assert c.nnzb < 0.2 * nb * nb  # banded^2 is still banded (width doubles)
+
+
+def test_purify_symbolic_cache_hits_and_bit_identical():
+    """Stable-pattern SP2 iterations skip the symbolic phase via the
+    structure-keyed SymbolicCache, with results bit-identical to uncached."""
+    from repro.core import SymbolicCache
+
+    rng = np.random.default_rng(3)
+    n, bs, nocc = 128, 16, 40
+    h = np.zeros((n, n), dtype=np.float32)
+    for i in range(n):
+        lo, hi = max(0, i - 3), min(n, i + 4)
+        h[i, lo:hi] = 0.2 * rng.standard_normal(hi - lo)
+    h = (h + h.T) / 2 + np.diag(np.linspace(-1, 1, n))
+    f = BSMatrix.from_dense(h, bs)
+    w = np.linalg.eigvalsh(h.astype(np.float64))
+    lmin, lmax = float(w.min()) - 0.05, float(w.max()) + 0.05
+
+    cache = SymbolicCache()
+    d1, st1 = sp2_purify(
+        f, nocc, lmin, lmax, idem_tol=1e-5, trunc_tau=1e-5, impl="ref", cache=cache
+    )
+    assert st1.symbolic_cache["hits"] > 0
+    assert st1.symbolic_cache["hits"] + st1.symbolic_cache["misses"] == st1.iterations
+    # every iteration whose operand structure has been seen before is a hit;
+    # only structure-changing iterations (truncation altered the pattern) miss
+    hits = np.asarray(st1.cache_hits_history)
+    assert ((hits == 0) | (hits == 1)).all()
+    # once the pattern stabilizes the tail is all hits
+    assert hits[-3:].tolist() == [1, 1, 1]
+
+    # bit-identical to the uncached (fresh-cache) run
+    d2, _ = sp2_purify(f, nocc, lmin, lmax, idem_tol=1e-5, trunc_tau=1e-5, impl="ref")
+    assert np.array_equal(d1.coords, d2.coords)
+    assert np.array_equal(np.asarray(d1.data), np.asarray(d2.data))
+
+    # a second solve sharing the cache starts hot: zero misses
+    m0 = cache.misses
+    d3, st3 = sp2_purify(
+        f, nocc, lmin, lmax, idem_tol=1e-5, trunc_tau=1e-5, impl="ref", cache=cache
+    )
+    assert cache.misses == m0
+    assert np.array_equal(np.asarray(d1.data), np.asarray(d3.data))
