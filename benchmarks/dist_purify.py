@@ -11,6 +11,13 @@ SP2 purification workload (the paper's multiplication-heavy scenario):
   multiply),
 * plan-cache hit/miss counts per iteration.
 
+A second section compares error-control modes on the SpAMM-enabled loop:
+leaf truncation + replan SpAMM (a wiggling prune pattern re-plans and
+re-jits) against hierarchical truncation + delta-plan SpAMM (the prune
+pattern is a task mask over the cached full plan — zero misses once the
+sparsity pattern stabilizes), reporting per-iteration plan-cache misses,
+planning/compile time, and host symbolic time.
+
 Run:  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src python benchmarks/dist_purify.py
 """
@@ -101,6 +108,38 @@ def resident_purify(f, n_occ, lmin, lmax, mesh):
     return d, stats, total, scatter_s, scatter_bytes
 
 
+def error_control_comparison(f, n_occ, lmin, lmax, mesh, spamm_tau=1e-6):
+    """Leaf/replan vs hierarchical/delta error control on the same SP2 run."""
+    modes = [
+        ("leaf + replan-SpAMM", dict(trunc_method="leaf", spamm_method="replan")),
+        ("hier + delta-SpAMM", dict(trunc_method="hierarchical", spamm_method="delta")),
+    ]
+    print("\n-- error-control modes (spamm_tau=%g, trunc_tau=%g) --" % (spamm_tau, TRUNC_TAU))
+    for name, kw in modes:
+        cache = PlanCache()
+        df = scatter(f, mesh)
+        t0 = time.perf_counter()
+        _, stats = dist_sp2_purify(
+            df, n_occ, lmin, lmax, idem_tol=IDEM_TOL, trunc_tau=TRUNC_TAU,
+            spamm_tau=spamm_tau, cache=cache, **kw,
+        )
+        total = time.perf_counter() - t0
+        per = stats.per_iter
+        misses = [pi["cache_misses"] for pi in per]
+        sym_ms = [pi["symbolic_s"] * 1e3 for pi in per]
+        build_ms = [pi["plan_build_s"] * 1e3 for pi in per]
+        all_hit = sum(1 for m in misses if m == 0)
+        print(f"\n  [{name}]  iters={stats.iterations}  wall/iter "
+              f"{total/max(stats.iterations,1)*1e3:.1f} ms")
+        print(f"    plan misses/iter    {misses}")
+        print(f"    all-hit iterations  {all_hit}/{len(per)}")
+        print(f"    symbolic ms/iter    mean {np.mean(sym_ms):7.2f}  "
+              f"tail {np.mean(sym_ms[-5:]):7.2f}")
+        print(f"    plan+jit ms/iter    mean {np.mean(build_ms):7.2f}  "
+              f"tail {np.mean(build_ms[-5:]):7.2f}")
+        print(f"    recv MB/worker tail {per[-1]['recv_bytes_mean']/1e6:.3f}")
+
+
 def main():
     assert jax.device_count() == P, f"need {P} devices, got {jax.device_count()}"
     mesh = make_worker_mesh(P)
@@ -154,6 +193,8 @@ def main():
     print(f"\nresident speedup      {speedup:9.2f}x per iteration")
     print(f"h2d reduction         {np.sum(h2d_b)/max(scatter_bytes,1):9.1f}x "
           f"({np.sum(h2d_b)/1e6:.1f} MB -> {scatter_bytes/1e6:.1f} MB once)")
+
+    error_control_comparison(f, NOCC, lmin, lmax, mesh)
 
 
 if __name__ == "__main__":

@@ -16,6 +16,7 @@ Hit/miss counters are surfaced via :meth:`SymbolicCache.stats`.
 from __future__ import annotations
 
 import collections
+import time
 from typing import Any, Callable, Hashable
 
 __all__ = ["SymbolicCache"]
@@ -38,6 +39,15 @@ class SymbolicCache:
         self.hits = 0
         self.misses = 0
         self._by_kind: collections.Counter = collections.Counter()
+        # key of the plan used by the most recent multiply-family call (set by
+        # repro.dist.multiply so drivers can peek the plan actually executed,
+        # delta/SpAMM included); None when the last call built no plan
+        self.last_plan_key: Hashable | None = None
+        # accumulated seconds spent in cache-miss builders (planning + jit)
+        # and in per-call symbolic phases that run outside the cache (SpAMM
+        # descent, hierarchical truncation selection — value-dependent work)
+        self.build_s = 0.0
+        self.symbolic_s = 0.0
 
     def get_or_build(self, key: Hashable, builder: Callable[[], Any]) -> Any:
         if key in self._entries:
@@ -47,7 +57,9 @@ class SymbolicCache:
             return self._entries[key]
         self.misses += 1
         self._by_kind[(key[0] if isinstance(key, tuple) else "?", "miss")] += 1
+        t0 = time.perf_counter()
         value = builder()
+        self.build_s += time.perf_counter() - t0
         self._entries[key] = value
         while len(self._entries) > self.max_entries:
             self._entries.popitem(last=False)
@@ -74,5 +86,7 @@ class SymbolicCache:
             hits=self.hits,
             misses=self.misses,
             hit_rate=self.hits / total if total else 0.0,
+            build_s=self.build_s,
+            symbolic_s=self.symbolic_s,
             by_kind={f"{k}/{o}": v for (k, o), v in sorted(self._by_kind.items())},
         )

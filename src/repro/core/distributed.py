@@ -37,6 +37,8 @@ __all__ = [
     "unshard_result",
     "make_spgemm_executable",
     "SpgemmExecutable",
+    "make_masked_spgemm_executable",
+    "MaskedSpgemmExecutable",
 ]
 
 AXIS = "worker"
@@ -68,17 +70,8 @@ def _exchange_bufs(store, offsets, send_pads, nparts):
     return jnp.concatenate(bufs, axis=0) if len(bufs) > 1 else store
 
 
-def _mapped_multiply(
-    a_store,
-    b_store,
-    task_a,
-    task_b,
-    task_c,
-    *a_and_b_sends,
-    plan: SpgemmPlan,
-    impl: str,
-):
-    """Per-device body. Leading dim of every arg is this device's slice (1)."""
+def _assemble_operands(a_store, b_store, a_and_b_sends, plan: SpgemmPlan):
+    """Device-local operand buffers per the plan's exchange mode."""
     na = len(plan.a_offsets)
     a_sends = a_and_b_sends[:na]
     b_sends = a_and_b_sends[na:]
@@ -92,17 +85,54 @@ def _mapped_multiply(
         b_all = jax.lax.all_gather(b_store[0], AXIS).reshape(
             -1, *b_store.shape[-2:]
         )
-    num_out = plan.c_cap + 1  # trash row for padded tasks
+    return a_all, b_all
+
+
+def _block_spmm_fn(impl: str):
     if impl == "kernel":
         from repro.kernels import ops as kops
 
-        c = kops.block_spmm(a_all, b_all, task_a[0], task_b[0], task_c[0], num_out)
-    else:
-        from repro.kernels import ref as kref
+        return kops.block_spmm
+    from repro.kernels import ref as kref
 
-        c = kref.block_spmm_ref(
-            a_all, b_all, task_a[0], task_b[0], task_c[0], num_out
-        )
+    return kref.block_spmm_ref
+
+
+def _mapped_multiply(
+    a_store,
+    b_store,
+    task_a,
+    task_b,
+    task_c,
+    *a_and_b_sends,
+    plan: SpgemmPlan,
+    impl: str,
+):
+    """Per-device body. Leading dim of every arg is this device's slice (1)."""
+    a_all, b_all = _assemble_operands(a_store, b_store, a_and_b_sends, plan)
+    num_out = plan.c_cap + 1  # trash row for padded tasks
+    c = _block_spmm_fn(impl)(a_all, b_all, task_a[0], task_b[0], task_c[0], num_out)
+    return c[None, : plan.c_cap]
+
+
+def _mapped_multiply_masked(
+    a_store,
+    b_store,
+    task_a,
+    task_b,
+    task_c,
+    task_on,
+    *a_and_b_sends,
+    plan: SpgemmPlan,
+    impl: str,
+):
+    """Masked multiply body: tasks with ``task_on`` False are redirected to the
+    trash row — the same mechanism padding already uses — so one compiled
+    program serves every prune pattern over a fixed structure."""
+    a_all, b_all = _assemble_operands(a_store, b_store, a_and_b_sends, plan)
+    num_out = plan.c_cap + 1
+    tc = jnp.where(task_on[0], task_c[0], plan.c_cap)
+    c = _block_spmm_fn(impl)(a_all, b_all, task_a[0], task_b[0], tc, num_out)
     return c[None, : plan.c_cap]
 
 
@@ -117,26 +147,34 @@ class SpgemmExecutable:
     together these are the chunk-cache analogue of the paper's runtime.
     """
 
+    # subclasses swap the mapped body and declare how many extra per-call
+    # sharded arguments it takes between the plan index arrays and the sends
+    _body = staticmethod(_mapped_multiply)
+    _n_runtime_args = 0
+
     def __init__(self, plan: SpgemmPlan, mesh: Mesh, *, impl: str = "ref"):
         assert mesh.devices.size == plan.nparts, (mesh.devices.size, plan.nparts)
         self.plan = plan
         self.mesh = mesh
         self.impl = impl
-        sh = NamedSharding(mesh, P(AXIS))
-        put = lambda x: jax.device_put(jnp.asarray(x), sh)
-        self._plan_args = [
+        self._sh = NamedSharding(mesh, P(AXIS))
+        put = lambda x: jax.device_put(jnp.asarray(x), self._sh)
+        self._idx_args = [
             put(plan.task_a),
             put(plan.task_b),
             put(plan.task_c),
         ]
-        self._plan_args += [put(plan.a_send[d]) for d in plan.a_offsets]
-        self._plan_args += [put(plan.b_send[d]) for d in plan.b_offsets]
-        fn = functools.partial(_mapped_multiply, plan=plan, impl=impl)
+        self._send_args = [put(plan.a_send[d]) for d in plan.a_offsets]
+        self._send_args += [put(plan.b_send[d]) for d in plan.b_offsets]
+        fn = functools.partial(type(self)._body, plan=plan, impl=impl)
+        nargs = (
+            2 + len(self._idx_args) + self._n_runtime_args + len(self._send_args)
+        )
         self._mapped = jax.jit(
             shard_map(
                 fn,
                 mesh=mesh,
-                in_specs=tuple(P(AXIS) for _ in range(2 + len(self._plan_args))),
+                in_specs=tuple(P(AXIS) for _ in range(nargs)),
                 out_specs=P(AXIS),
                 check_vma=False,
             )
@@ -144,13 +182,46 @@ class SpgemmExecutable:
 
     def __call__(self, a_store: jax.Array, b_store: jax.Array) -> jax.Array:
         """Run on per-device padded stores [P, cap, bs, bs]; returns C stores."""
-        return self._mapped(a_store, b_store, *self._plan_args)
+        return self._mapped(a_store, b_store, *self._idx_args, *self._send_args)
 
 
 def make_spgemm_executable(
     plan: SpgemmPlan, mesh: Mesh | None = None, *, impl: str = "ref"
 ) -> SpgemmExecutable:
     return SpgemmExecutable(plan, mesh or make_worker_mesh(plan.nparts), impl=impl)
+
+
+class MaskedSpgemmExecutable(SpgemmExecutable):
+    """A full-structure multiply that takes a per-task on/off mask at call time.
+
+    Built once from the *full* (unpruned) plan; each ``__call__`` additionally
+    receives ``task_on`` ``[P, t_cap]`` bool — False tasks write to the trash
+    row, exactly like padding, so their contribution is dropped without
+    re-planning, re-tracing, or recompiling.  This is the delta-plan SpAMM
+    executable: one jitted program per structure serves every fluctuating
+    ``tau``-prune pattern (``repro.dist.multiply.dist_spamm``), at full-plan
+    exchange cost but zero per-pattern symbolic/compile cost.
+    """
+
+    _body = staticmethod(_mapped_multiply_masked)
+    _n_runtime_args = 1
+
+    def __call__(
+        self, a_store: jax.Array, b_store: jax.Array, task_on: np.ndarray
+    ) -> jax.Array:
+        """Run with a [P, t_cap] bool task mask; returns C stores [P, c_cap, bs, bs].
+
+        ``task_on`` is the only per-call host->device transfer — a tiny bool
+        table, the delta against the cached full plan.
+        """
+        mask = jax.device_put(jnp.asarray(task_on, dtype=jnp.bool_), self._sh)
+        return self._mapped(a_store, b_store, *self._idx_args, mask, *self._send_args)
+
+
+def make_masked_spgemm_executable(
+    plan: SpgemmPlan, mesh: Mesh | None = None, *, impl: str = "ref"
+) -> MaskedSpgemmExecutable:
+    return MaskedSpgemmExecutable(plan, mesh or make_worker_mesh(plan.nparts), impl=impl)
 
 
 def dist_spgemm(

@@ -270,4 +270,11 @@ class BSMatrix:
 
 @jax.jit
 def block_frobenius_norms(data: jax.Array) -> jax.Array:
-    return jnp.sqrt(jnp.sum(jnp.square(data.astype(jnp.float32)), axis=(1, 2)))
+    """Frobenius norm over the trailing (bs, bs) axes; any leading batch shape.
+
+    The single norm kernel shared by host block stacks ``[nnzb, bs, bs]`` and
+    the resident per-device stores ``[P, cap, bs, bs]``
+    (:func:`repro.dist.matrix.resident_block_norms`) — one accumulation dtype,
+    so host and resident SpAMM/truncation prune decisions agree bit-for-bit.
+    """
+    return jnp.sqrt(jnp.sum(jnp.square(data.astype(jnp.float32)), axis=(-2, -1)))

@@ -38,6 +38,7 @@ __all__ = [
     "structure_fingerprint",
     "QuadtreeIndex",
     "build_quadtree_index",
+    "hierarchical_drop_mask",
 ]
 
 _B = [
@@ -202,6 +203,56 @@ class QuadtreeIndex:
         if level is not None:
             return np.unique(self.leaf_start[level])
         return np.unique(np.concatenate([ls for ls in self.leaf_start]))
+
+
+def hierarchical_drop_mask(qt: QuadtreeIndex, tau: float) -> tuple[np.ndarray, int]:
+    """Top-down greedy subtree-drop selection under a global Frobenius budget.
+
+    The shared symbolic phase of hierarchical truncation (host
+    :func:`repro.core.truncate.truncate_hierarchical` and the distributed
+    ``dist_truncate_hierarchical``): at each level, the frontier nodes with
+    smallest subtree norms are dropped while the *squared* budget allows (a
+    subtree's squared Frobenius norm is exactly the sum of its leaf squares,
+    so the accounting is exact); survivors descend.
+
+    Returns ``(keep, nodes_visited)``: ``keep`` is a bool mask over the
+    Morton-sorted leaf stack (False = the leaf lies under a dropped subtree)
+    with ``sqrt(sum of dropped leaf norms^2) <= tau`` by construction, and
+    ``nodes_visited`` counts the frontier nodes whose norms were examined —
+    nodes (and leaves) below a dropped subtree are never visited.
+    """
+    assert qt.norms is not None, "hierarchical drop needs subtree norms"
+    nnzb = qt.nnzb
+    if nnzb == 0:
+        return np.zeros((0,), dtype=bool), 0
+    budget_sq = float(tau) ** 2
+    drop_mark = np.zeros(nnzb + 1, dtype=np.int64)
+    frontier = np.zeros(1, dtype=np.int64)  # root
+    visited = 0
+    for level in range(qt.depth + 1):
+        visited += int(frontier.size)
+        sq = qt.norms[level][frontier] ** 2
+        order = np.argsort(sq)
+        csum = np.cumsum(sq[order])
+        ndrop = int(np.searchsorted(csum, budget_sq, side="right"))
+        if ndrop:
+            budget_sq -= float(csum[ndrop - 1])
+            dropped = frontier[order[:ndrop]]
+            ls = qt.leaf_start[level]
+            np.add.at(drop_mark, ls[dropped], 1)
+            np.add.at(drop_mark, ls[dropped + 1], -1)
+            keep_nodes = np.ones(frontier.size, dtype=bool)
+            keep_nodes[order[:ndrop]] = False
+            frontier = frontier[keep_nodes]
+        if frontier.size == 0 or level == qt.depth:
+            break
+        cs = qt.child_start[level]
+        s0 = cs[frontier]
+        counts = cs[frontier + 1] - s0
+        local = np.arange(int(counts.sum())) - np.repeat(np.cumsum(counts) - counts, counts)
+        frontier = np.repeat(s0, counts) + local
+    keep = np.cumsum(drop_mark[:-1]) == 0
+    return keep, visited
 
 
 def build_quadtree_index(

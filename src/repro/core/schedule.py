@@ -173,6 +173,11 @@ class SpgemmPlan:
     c_store_idx: np.ndarray  # [P, c_cap] global C block idx (pad -> 0)
     c_store_valid: np.ndarray
     tasks: Tasks
+    # [P, t_cap] global task index (into the tasks arrays) per padded device
+    # slot (pad -> 0; mask with task_count) — lets a per-call prune pattern
+    # over the global task list be relaid into the device task layout without
+    # re-planning (delta-plan SpAMM, repro.dist.multiply)
+    task_gidx: np.ndarray | None = None
 
     @property
     def shapes(self):
@@ -356,12 +361,13 @@ def make_spgemm_plan(
             x_owner, x_slot, offsets, send_pad, recv_pos, cap, g, dev
         )
 
-    task_a_l, task_b_l, task_c_l = [], [], []
+    task_a_l, task_b_l, task_c_l, task_g_l = [], [], [], []
     for p in range(nparts):
         sel = np.nonzero(t_owner == p)[0]
         # keep tasks sorted by local C slot for kernel-friendly accumulation
         order = np.argsort(c_slot[tasks.c_idx[sel]], kind="stable")
         sel = sel[order]
+        task_g_l.append(sel.astype(np.int32))
         ta = np.array(
             [
                 local_index(a_owner, a_slot, a_offsets, a_send, a_recv_pos, a_cap, g, p)
@@ -385,6 +391,7 @@ def make_spgemm_plan(
     task_a = _pad_ragged(task_a_l, 0)
     task_b = _pad_ragged(task_b_l, 0)
     task_c = _pad_ragged(task_c_l, c_cap)  # trash row
+    task_gidx = _pad_ragged(task_g_l, 0)
 
     return SpgemmPlan(
         nparts=nparts,
@@ -418,6 +425,7 @@ def make_spgemm_plan(
         c_store_idx=c_store_idx,
         c_store_valid=c_store_valid,
         tasks=tasks,
+        task_gidx=task_gidx,
     )
 
 

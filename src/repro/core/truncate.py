@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .matrix import BSMatrix
+from .quadtree import hierarchical_drop_mask
 
 __all__ = ["truncate", "truncate_hierarchical", "truncate_elementwise"]
 
@@ -46,10 +47,10 @@ def truncate_hierarchical(a: BSMatrix, tau: float) -> BSMatrix:
     """Truncate by dropping whole quadtree subtrees first, then leaves.
 
     Top-down greedy over the cached :class:`~repro.core.quadtree.QuadtreeIndex`
-    subtree norms: at each level, the frontier nodes with smallest subtree
-    norms are dropped while the *squared* budget allows (a subtree's squared
-    Frobenius norm is exactly the sum of its leaf squares, so the accounting
-    is exact); survivors descend.  The global guarantee
+    subtree norms via :func:`repro.core.quadtree.hierarchical_drop_mask` —
+    the same descent the distributed path
+    (``repro.dist.collectives.dist_truncate_hierarchical``) runs against the
+    resident norm table.  The global guarantee
     ``||A - truncate_hierarchical(A, tau)||_F <= tau`` is preserved; the
     dropped set may differ from :func:`truncate`'s leaf-greedy optimum, but a
     subtree dropped at level L is removed without its leaves ever being
@@ -57,32 +58,7 @@ def truncate_hierarchical(a: BSMatrix, tau: float) -> BSMatrix:
     """
     if a.nnzb == 0 or tau <= 0:
         return a
-    qt = a.quadtree_index()
-    budget_sq = float(tau) ** 2
-    drop_mark = np.zeros(a.nnzb + 1, dtype=np.int64)
-    frontier = np.zeros(1, dtype=np.int64)  # root
-    for level in range(qt.depth + 1):
-        sq = qt.norms[level][frontier] ** 2
-        order = np.argsort(sq)
-        csum = np.cumsum(sq[order])
-        ndrop = int(np.searchsorted(csum, budget_sq, side="right"))
-        if ndrop:
-            budget_sq -= float(csum[ndrop - 1])
-            dropped = frontier[order[:ndrop]]
-            ls = qt.leaf_start[level]
-            np.add.at(drop_mark, ls[dropped], 1)
-            np.add.at(drop_mark, ls[dropped + 1], -1)
-            keep_nodes = np.ones(frontier.size, dtype=bool)
-            keep_nodes[order[:ndrop]] = False
-            frontier = frontier[keep_nodes]
-        if frontier.size == 0 or level == qt.depth:
-            break
-        cs = qt.child_start[level]
-        s0 = cs[frontier]
-        counts = cs[frontier + 1] - s0
-        local = np.arange(int(counts.sum())) - np.repeat(np.cumsum(counts) - counts, counts)
-        frontier = np.repeat(s0, counts) + local
-    keep = np.cumsum(drop_mark[:-1]) == 0
+    keep, _ = hierarchical_drop_mask(a.quadtree_index(), tau)
     if keep.all():
         return a
     idx = np.nonzero(keep)[0]

@@ -14,11 +14,14 @@ operands between operations.  This package is that layer for the XLA mesh:
 * resident collectives (:mod:`repro.dist.collectives`) — ``dist_add``
   (structure union, owner-aligned re-slotting), ``dist_scale``,
   ``dist_trace`` / ``dist_frobenius_norm`` (psum reductions),
-  ``dist_truncate`` (host symbolic selection, device compaction).
+  ``dist_truncate`` / ``dist_truncate_hierarchical`` (host symbolic
+  selection — flat greedy or quadtree subtree-drop over the resident norm
+  table — then device compaction).
 * :func:`dist_multiply` / :func:`dist_spamm` (:mod:`repro.dist.multiply`) —
-  C = A @ B on resident operands through the cached schedule; the SpAMM
-  variant threads a hierarchically-pruned task list into the plan with an
-  error bound <= tau.
+  C = A @ B on resident operands through the cached schedule; SpAMM prunes
+  hierarchically with an error bound <= tau, by default as a *delta plan*:
+  a task mask against the cached full-multiply executable, so fluctuating
+  prune patterns never miss the plan cache.
 * :func:`dist_sp2_purify` (:mod:`repro.dist.purify`) — the full SP2 loop on
   resident matrices with per-iteration cache/comm stats.
 """
@@ -30,23 +33,32 @@ from .collectives import (
     dist_scale,
     dist_trace,
     dist_truncate,
+    dist_truncate_hierarchical,
 )
-from .matrix import DistBSMatrix, scatter
-from .multiply import dist_multiply, dist_spamm, multiply_plan_key
+from .matrix import DistBSMatrix, resident_block_norms, scatter
+from .multiply import (
+    dist_multiply,
+    dist_spamm,
+    multiply_plan_key,
+    spamm_delta_plan_key,
+)
 from .purify import DistPurifyStats, dist_sp2_purify
 
 __all__ = [
     "DistBSMatrix",
     "scatter",
+    "resident_block_norms",
     "PlanCache",
     "dist_add",
     "dist_scale",
     "dist_trace",
     "dist_frobenius_norm",
     "dist_truncate",
+    "dist_truncate_hierarchical",
     "dist_multiply",
     "dist_spamm",
     "multiply_plan_key",
+    "spamm_delta_plan_key",
     "dist_sp2_purify",
     "DistPurifyStats",
 ]

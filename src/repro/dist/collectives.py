@@ -14,12 +14,19 @@ phase that only ever touches the resident stores:
 * :func:`dist_truncate` — device-computed block norms, host symbolic
   selection (identical error control to :func:`repro.core.truncate.truncate`),
   device-side compaction gather; blocks keep their owners so no data moves.
+* :func:`dist_truncate_hierarchical` — the same compaction, but the symbolic
+  selection is the quadtree subtree-drop descent
+  (:func:`repro.core.quadtree.hierarchical_drop_mask`) over a
+  :class:`~repro.core.quadtree.QuadtreeIndex` built from the resident norm
+  table: dropped subtrees' leaves are never enumerated, and only the tiny
+  [P, cap] norm table ever crosses device->host.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +34,11 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.distributed import AXIS, _exchange_bufs
+from repro.core.quadtree import (
+    build_quadtree_index,
+    hierarchical_drop_mask,
+    quadtree_depth,
+)
 from repro.core.schedule import (
     _owner_slots,
     local_fetch_index,
@@ -36,7 +48,7 @@ from repro.core.schedule import (
 from repro.jax_compat import shard_map
 
 from .cache import PlanCache
-from .matrix import DistBSMatrix, mesh_key
+from .matrix import DistBSMatrix, mesh_key, resident_block_norms
 
 __all__ = [
     "dist_add",
@@ -44,6 +56,7 @@ __all__ = [
     "dist_trace",
     "dist_frobenius_norm",
     "dist_truncate",
+    "dist_truncate_hierarchical",
 ]
 
 
@@ -109,18 +122,20 @@ class AddExecutable:
         c_slot, c_stores = _owner_slots(c_owner, nparts)
         c_cap = max(max((len(s) for s in c_stores), default=0), 1)
 
-        # which A/B blocks each device needs (ascending by construction)
-        def needs(x_pos, x_owner):
+        # which A/B blocks each device needs: the source blocks of the union
+        # entries it owns (ascending by construction; plan_fetch skips the
+        # ones whose source copy is already local)
+        def needs(x_pos):
             dst_of = c_owner[x_pos]
             return [
                 np.nonzero(dst_of == p)[0].astype(np.int64) for p in range(nparts)
             ]
 
         a_offsets, a_send, _, a_recv = plan_fetch(
-            a.owner, a.slot, needs(pos_a, a.owner), nparts
+            a.owner, a.slot, needs(pos_a), nparts
         )
         b_offsets, b_send, _, b_recv = plan_fetch(
-            b.owner, b.slot, needs(pos_b, b.owner), nparts
+            b.owner, b.slot, needs(pos_b), nparts
         )
 
         # union position -> source block index (or -1)
@@ -314,30 +329,16 @@ class _CompactExecutable:
         return self._mapped(store, *self._args)
 
 
-def dist_truncate(
-    a: DistBSMatrix, tau: float, cache: PlanCache | None = None
+def _compact_to_kept(
+    a: DistBSMatrix, kept: np.ndarray, cache: PlanCache | None
 ) -> DistBSMatrix:
-    """Drop smallest-norm blocks with sqrt(sum of dropped norms^2) <= tau.
+    """Device-side compaction onto a kept subset of the block stack.
 
-    Block norms are computed on device (only the tiny [P, cap] norm table
-    crosses to the host); the greedy global selection is the same error
-    control as :func:`repro.core.truncate.truncate`; surviving blocks are
-    compacted device-side and keep their owners, so truncation moves no
-    block data between devices.
+    Shared tail of both truncation variants: blocks keep their owners (slots
+    just close ranks within each device), so truncation never moves block
+    data between devices; the gather executable is cached per
+    (structure, kept-set).
     """
-    if a.nnzb == 0 or tau <= 0:
-        return a
-    norms_sq = np.asarray(_block_norms_sq(a.store))  # [P, cap] -> host (small)
-    n_sq = norms_sq[a.owner, a.slot].astype(np.float64)
-    order = np.argsort(n_sq)
-    csum = np.sqrt(np.cumsum(n_sq[order]))
-    ndrop = int(np.searchsorted(csum, tau, side="right"))
-    if ndrop == 0:
-        return a
-    keep = np.ones(a.nnzb, dtype=bool)
-    keep[order[:ndrop]] = False
-    kept = np.nonzero(keep)[0]
-
     new_owner = a.owner[kept]
     new_slot, new_stores = _owner_slots(new_owner, a.nparts)
     new_cap = max(max((len(s) for s in new_stores), default=0), 1)
@@ -361,3 +362,79 @@ def dist_truncate(
         store=exe(a.store),
         mesh=a.mesh,
     )
+
+
+def dist_truncate(
+    a: DistBSMatrix, tau: float, cache: PlanCache | None = None
+) -> DistBSMatrix:
+    """Drop smallest-norm blocks with sqrt(sum of dropped norms^2) <= tau.
+
+    Block norms are computed on device (only the tiny [P, cap] norm table
+    crosses to the host); the greedy global selection is the same error
+    control as :func:`repro.core.truncate.truncate`; surviving blocks are
+    compacted device-side and keep their owners, so truncation moves no
+    block data between devices.
+    """
+    if a.nnzb == 0 or tau <= 0:
+        return a
+    t0 = time.perf_counter()
+    norms_sq = np.asarray(_block_norms_sq(a.store))  # [P, cap] -> host (small)
+    n_sq = norms_sq[a.owner, a.slot].astype(np.float64)
+    order = np.argsort(n_sq)
+    csum = np.sqrt(np.cumsum(n_sq[order]))
+    ndrop = int(np.searchsorted(csum, tau, side="right"))
+    if cache is not None:
+        cache.symbolic_s += time.perf_counter() - t0
+    if ndrop == 0:
+        return a
+    keep = np.ones(a.nnzb, dtype=bool)
+    keep[order[:ndrop]] = False
+    return _compact_to_kept(a, np.nonzero(keep)[0], cache)
+
+
+def dist_truncate_hierarchical(
+    a: DistBSMatrix,
+    tau: float,
+    cache: PlanCache | None = None,
+    *,
+    norms: np.ndarray | None = None,
+    stats: dict | None = None,
+) -> DistBSMatrix:
+    """Truncate by dropping whole quadtree subtrees first — resident variant.
+
+    Builds a :class:`~repro.core.quadtree.QuadtreeIndex` from the resident
+    per-block norm table (one tiny [P, cap] device->host transfer, or zero
+    when ``norms`` is supplied by a caller that already fetched it) and runs
+    the same top-down subtree-drop descent as
+    :func:`repro.core.truncate.truncate_hierarchical` — identical kept set on
+    identical inputs, same global guarantee ``||A - T(A)||_F <= tau``, and a
+    subtree dropped at level L is removed without its leaves ever being
+    enumerated.  Survivors are compacted device-side keeping their owners, so
+    no block data moves between devices.
+
+    ``stats``, when a dict, receives ``nodes_visited`` (frontier nodes whose
+    norms the descent examined) and ``kept`` (surviving stack indices) — the
+    SP2 driver uses ``kept`` to carry the norm table forward to the next
+    iteration's SpAMM without a fresh fetch.
+    """
+    if stats is not None:
+        stats["nodes_visited"] = 0
+        stats["kept"] = np.arange(a.nnzb, dtype=np.int64)
+    if a.nnzb == 0 or tau <= 0:
+        return a
+    t0 = time.perf_counter()
+    if norms is None:
+        norms = resident_block_norms(a)
+    depth = quadtree_depth(-(-a.shape[0] // a.bs), -(-a.shape[1] // a.bs))
+    qt = build_quadtree_index(a.coords, norms, depth=depth)
+    keep, visited = hierarchical_drop_mask(qt, tau)
+    if cache is not None:
+        cache.symbolic_s += time.perf_counter() - t0
+    if stats is not None:
+        stats["nodes_visited"] = visited
+    if keep.all():
+        return a
+    kept = np.nonzero(keep)[0]
+    if stats is not None:
+        stats["kept"] = kept
+    return _compact_to_kept(a, kept, cache)

@@ -31,11 +31,11 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.distributed import AXIS, make_worker_mesh
-from repro.core.matrix import BSMatrix
+from repro.core.matrix import BSMatrix, block_frobenius_norms
 from repro.core.quadtree import morton_encode
 from repro.core.schedule import _owner_slots, partition_morton
 
-__all__ = ["DistBSMatrix", "scatter", "mesh_key"]
+__all__ = ["DistBSMatrix", "scatter", "mesh_key", "resident_block_norms"]
 
 
 def mesh_key(mesh: Mesh) -> tuple:
@@ -127,6 +127,21 @@ class DistBSMatrix:
 
     def astype(self, dtype) -> "DistBSMatrix":
         return dataclasses.replace(self, store=self.store.astype(dtype))
+
+
+def resident_block_norms(x: DistBSMatrix) -> np.ndarray:
+    """Per-block Frobenius norms in stack order from the resident store.
+
+    Runs :func:`repro.core.matrix.block_frobenius_norms` — the exact kernel
+    the host path uses, same accumulation dtype — on the ``[P, cap, bs, bs]``
+    store; only the tiny ``[P, cap]`` norm table crosses device->host (the
+    block data stays resident).  Host and resident SpAMM / hierarchical
+    truncation therefore make identical prune decisions near ``tau``.
+    """
+    if x.nnzb == 0:
+        return np.zeros((0,), dtype=np.float64)
+    table = np.asarray(block_frobenius_norms(x.store))  # [P, cap] -> host
+    return table[x.owner, x.slot].astype(np.float64)
 
 
 def scatter(

@@ -6,25 +6,56 @@ on the mesh, the schedule comes from the structure-keyed
 :class:`~repro.dist.cache.PlanCache` (symbolic phase + shard_map executable
 + device-resident plan arrays, built once per distinct structure), and the
 result store is produced sharded — it never visits the host.
+
+``dist_spamm`` adds error-controlled approximate multiply in two modes:
+
+* ``method="delta"`` (default) — the *delta-plan* path: the full-multiply
+  plan and a :class:`~repro.core.distributed.MaskedSpgemmExecutable` are
+  cached once per structure; each call runs the hierarchical SpAMM descent
+  on the host and ships only a tiny per-task on/off mask (``gval``-style
+  zeroing via trash-row redirect).  A fluctuating ``tau``-prune pattern
+  therefore never causes a plan-cache miss — the SP2 inner loop stays pure
+  device work.
+* ``method="replan"`` — the pruned task list is threaded into
+  :func:`make_spgemm_plan(tasks=...)` and the plan is keyed by the pruned
+  structure: cheaper flops/exchange per call, but any wiggle in the prune
+  pattern re-plans and re-jits.
 """
 
 from __future__ import annotations
 
-import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.distributed import make_spgemm_executable
+from repro.core.distributed import (
+    make_masked_spgemm_executable,
+    make_spgemm_executable,
+)
 from repro.core.quadtree import build_quadtree_index, quadtree_depth
 from repro.core.schedule import make_spgemm_plan, structure_fingerprint
 from repro.core.spgemm import spamm_symbolic
 
 from .cache import PlanCache
-from .matrix import DistBSMatrix, _store_sharding, mesh_key
+from .matrix import (
+    DistBSMatrix,
+    _store_sharding,
+    mesh_key,
+    resident_block_norms,
+)
 
-__all__ = ["dist_multiply", "dist_spamm", "multiply_plan_key"]
+__all__ = [
+    "dist_multiply",
+    "dist_spamm",
+    "multiply_plan_key",
+    "spamm_delta_plan_key",
+]
+
+# backward-compatible private name; the implementation now lives next to the
+# store layout it reads (repro.dist.matrix)
+_resident_block_norms = resident_block_norms
 
 
 def multiply_plan_key(
@@ -42,6 +73,29 @@ def multiply_plan_key(
     )
 
 
+def spamm_delta_plan_key(
+    a: DistBSMatrix, b: DistBSMatrix, *, exchange: str, impl: str
+) -> tuple:
+    """Delta-plan SpAMM cache key — structure only, independent of the per-call
+    prune pattern, so every call on a stable structure is a hit."""
+    return (
+        "spamm-delta",
+        structure_fingerprint(
+            a.codes(), b.codes(), a.owner, b.owner, a.nparts, a.bs
+        ),
+        mesh_key(a.mesh),
+        exchange,
+        impl,
+    )
+
+
+def _check_operands(a: DistBSMatrix, b: DistBSMatrix) -> None:
+    assert a.mesh is b.mesh or list(a.mesh.devices.flat) == list(
+        b.mesh.devices.flat
+    ), "operands must live on the same worker mesh"
+    assert a.shape[1] == b.shape[0] and a.bs == b.bs, (a.shape, b.shape)
+
+
 def dist_multiply(
     a: DistBSMatrix,
     b: DistBSMatrix,
@@ -51,10 +105,7 @@ def dist_multiply(
     impl: str = "ref",
 ) -> DistBSMatrix:
     """C = A @ B with A, B, C device-resident.  Plan + executable cached."""
-    assert a.mesh is b.mesh or list(a.mesh.devices.flat) == list(
-        b.mesh.devices.flat
-    ), "operands must live on the same worker mesh"
-    assert a.shape[1] == b.shape[0] and a.bs == b.bs, (a.shape, b.shape)
+    _check_operands(a, b)
 
     def build():
         plan = make_spgemm_plan(
@@ -76,12 +127,12 @@ def dist_multiply(
         exe = make_spgemm_executable(plan, a.mesh, impl=impl)
         return plan, exe
 
+    key = multiply_plan_key(a, b, exchange=exchange, impl=impl)
     if cache is None:
         plan, exe = build()
     else:
-        plan, exe = cache.get_or_build(
-            multiply_plan_key(a, b, exchange=exchange, impl=impl), build
-        )
+        plan, exe = cache.get_or_build(key, build)
+        cache.last_plan_key = key
     c_store = exe(a.store, b.store)
     return DistBSMatrix(
         shape=(a.shape[0], b.shape[1]),
@@ -95,18 +146,49 @@ def dist_multiply(
     )
 
 
-def _resident_block_norms(x: DistBSMatrix) -> np.ndarray:
-    """Per-block Frobenius norms in stack order; only the tiny [P, cap] norm
-    table crosses device->host (the block data stays resident).  Matches
-    :func:`repro.core.matrix.block_frobenius_norms` bit-for-bit so the
-    hierarchical prune decisions agree with the host path."""
-    norms = np.asarray(
-        jnp.sqrt(jnp.sum(jnp.square(x.store.astype(jnp.float32)), axis=(2, 3)))
+def _spamm_pruned_tasks(
+    a: DistBSMatrix,
+    b: DistBSMatrix,
+    tau: float,
+    a_norms: np.ndarray | None,
+    b_norms: np.ndarray | None,
+):
+    """Hierarchical SpAMM descent on the resident structures.
+
+    Norm tables default to one [P, cap] device->host fetch per operand
+    (:func:`resident_block_norms`); callers holding a current table — e.g.
+    the SP2 driver after a hierarchical truncation — pass it in so the fetch
+    is shared.  Returns ``(tasks, err_bound)``.
+    """
+    depth = max(
+        quadtree_depth(-(-a.shape[0] // a.bs), -(-a.shape[1] // a.bs)),
+        quadtree_depth(-(-b.shape[0] // b.bs), -(-b.shape[1] // b.bs)),
     )
-    return (
-        norms[x.owner, x.slot].astype(np.float64)
-        if x.nnzb
-        else np.zeros((0,), np.float64)
+    na = a_norms if a_norms is not None else resident_block_norms(a)
+    if b is a:
+        nb = na
+    else:
+        nb = b_norms if b_norms is not None else resident_block_norms(b)
+    ia = build_quadtree_index(a.coords, na, depth=depth)
+    ib = ia if b is a else build_quadtree_index(b.coords, nb, depth=depth)
+    tasks, err, _ = spamm_symbolic(ia, ib, tau)
+    return tasks, err
+
+
+def _empty_dist_result(a: DistBSMatrix, b: DistBSMatrix) -> DistBSMatrix:
+    store = jax.device_put(
+        jnp.zeros((a.nparts, 1, a.bs, a.bs), dtype=a.dtype),
+        _store_sharding(a.mesh),
+    )
+    return DistBSMatrix(
+        shape=(a.shape[0], b.shape[1]),
+        bs=a.bs,
+        coords=np.zeros((0, 2), dtype=np.int64),
+        owner=np.zeros((0,), dtype=np.int32),
+        slot=np.zeros((0,), dtype=np.int32),
+        cap=1,
+        store=store,
+        mesh=a.mesh,
     )
 
 
@@ -118,46 +200,109 @@ def dist_spamm(
     *,
     exchange: str = "p2p",
     impl: str = "ref",
+    method: str = "delta",
+    a_norms: np.ndarray | None = None,
+    b_norms: np.ndarray | None = None,
 ) -> tuple[DistBSMatrix, float]:
     """Sparse approximate multiply on resident operands: C ~= A @ B.
 
     The hierarchical SpAMM symbolic phase (:func:`repro.core.spgemm.spamm_symbolic`)
     runs on the host against quadtree indexes carrying subtree norms — norms
     depend on current values, so it runs every call, but it is cheap and
-    shrinks with the pruned work.  The *pruned task list* is then threaded
-    into :func:`make_spgemm_plan(tasks=...)`; the plan + executable are cached
-    keyed by the pruned structure, so a stable prune pattern (e.g. SP2
-    iterations past pattern stabilization) reuses the compiled program.
+    shrinks with the pruned work.  ``a_norms`` / ``b_norms`` (stack-order
+    per-block norms, as returned by :func:`resident_block_norms`) let callers
+    share one norm-table fetch across operations.
+
+    ``method="delta"`` applies the prune pattern as a task mask against the
+    cached full-multiply plan (see module docstring): the plan cache is keyed
+    by structure alone, so prune-pattern fluctuation never misses.
+    ``method="replan"`` threads the pruned task list into a per-pattern plan.
 
     Returns ``(C, err_bound)`` with ``||A@B - C||_F <= err_bound <= tau``.
     """
-    assert a.mesh is b.mesh or list(a.mesh.devices.flat) == list(
-        b.mesh.devices.flat
-    ), "operands must live on the same worker mesh"
-    assert a.shape[1] == b.shape[0] and a.bs == b.bs, (a.shape, b.shape)
-    depth = max(
-        quadtree_depth(-(-a.shape[0] // a.bs), -(-a.shape[1] // a.bs)),
-        quadtree_depth(-(-b.shape[0] // b.bs), -(-b.shape[1] // b.bs)),
-    )
-    ia = build_quadtree_index(a.coords, _resident_block_norms(a), depth=depth)
-    ib = build_quadtree_index(b.coords, _resident_block_norms(b), depth=depth)
-    tasks, err, _ = spamm_symbolic(ia, ib, tau)
+    _check_operands(a, b)
+    t0 = time.perf_counter()
+    tasks, err = _spamm_pruned_tasks(a, b, tau, a_norms, b_norms)
+    if cache is not None:
+        # descent time only — miss builders are timed into cache.build_s by
+        # get_or_build, and must not be double-counted as symbolic work
+        cache.symbolic_s += time.perf_counter() - t0
+
+    if method == "delta":
+        key = spamm_delta_plan_key(a, b, exchange=exchange, impl=impl)
+
+        def build():
+            # the delta plan IS the exact-multiply plan; reuse one already
+            # cached for dist_multiply on this structure instead of redoing
+            # the symbolic phase (only the executable differs)
+            exact = (
+                cache.peek(multiply_plan_key(a, b, exchange=exchange, impl=impl))
+                if cache is not None
+                else None
+            )
+            plan = exact[0] if exact is not None else make_spgemm_plan(
+                a.coords,
+                b.coords,
+                a.nparts,
+                a.bs,
+                exchange=exchange,
+                a_owner=a.owner,
+                b_owner=b.owner,
+            )
+            assert plan.a_cap == a.cap and plan.b_cap == b.cap, (
+                plan.a_cap, a.cap, plan.b_cap, b.cap,
+            )
+            exe = make_masked_spgemm_executable(plan, a.mesh, impl=impl)
+            return plan, exe
+
+        if cache is None:
+            plan, exe = build()
+        else:
+            plan, exe = cache.get_or_build(key, build)
+            cache.last_plan_key = key
+        # relay the kept (a, b) pairs onto the full task list: a task is
+        # uniquely (a_idx, b_idx) — the output block is determined by the pair
+        t1 = time.perf_counter()
+        full = plan.tasks
+        if full.num_tasks == 0:
+            # no structural overlap: every padded slot is already masked off
+            # (task_gidx pads with 0, which must not index an empty task list)
+            task_on = np.zeros(plan.task_gidx.shape, dtype=bool)
+        else:
+            keep_task = np.zeros(full.num_tasks, dtype=bool)
+            if tasks.num_tasks:
+                nb_blocks = np.int64(max(b.nnzb, 1))
+                keep_task = np.isin(
+                    full.a_idx * nb_blocks + full.b_idx,
+                    tasks.a_idx * nb_blocks + tasks.b_idx,
+                )
+            valid = (
+                np.arange(plan.task_gidx.shape[1])[None, :]
+                < plan.task_count[:, None]
+            )
+            task_on = keep_task[plan.task_gidx] & valid
+        if cache is not None:
+            cache.symbolic_s += time.perf_counter() - t1
+        c_store = exe(a.store, b.store, task_on)
+        return (
+            DistBSMatrix(
+                shape=(a.shape[0], b.shape[1]),
+                bs=a.bs,
+                coords=plan.c_coords,
+                owner=np.asarray(plan.c_owner, dtype=np.int32),
+                slot=np.asarray(plan.c_slot, dtype=np.int32),
+                cap=plan.c_cap,
+                store=c_store,
+                mesh=a.mesh,
+            ),
+            err,
+        )
+
+    assert method == "replan", method
     if tasks.num_tasks == 0:
-        store = jax.device_put(
-            jnp.zeros((a.nparts, 1, a.bs, a.bs), dtype=a.dtype),
-            _store_sharding(a.mesh),
-        )
-        empty = DistBSMatrix(
-            shape=(a.shape[0], b.shape[1]),
-            bs=a.bs,
-            coords=np.zeros((0, 2), dtype=np.int64),
-            owner=np.zeros((0,), dtype=np.int32),
-            slot=np.zeros((0,), dtype=np.int32),
-            cap=1,
-            store=store,
-            mesh=a.mesh,
-        )
-        return empty, err
+        if cache is not None:
+            cache.last_plan_key = None  # no plan ran; nothing to peek
+        return _empty_dist_result(a, b), err
 
     key = (
         "spamm",
@@ -191,6 +336,7 @@ def dist_spamm(
         plan, exe = build()
     else:
         plan, exe = cache.get_or_build(key, build)
+        cache.last_plan_key = key
     c_store = exe(a.store, b.store)
     return (
         DistBSMatrix(

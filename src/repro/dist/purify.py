@@ -25,12 +25,18 @@ from repro.core.add import add_scaled_identity, identity
 from repro.core.distributed import make_worker_mesh
 from repro.core.matrix import BSMatrix
 from repro.core.purify import PurifyStats, Sp2Monitor, sp2_init_coeffs, sp2_should_square
-from repro.core.schedule import plan_stats
+from repro.core.schedule import SpgemmPlan, plan_stats
 
 from .cache import PlanCache
-from .collectives import dist_add, dist_frobenius_norm, dist_trace, dist_truncate
-from .matrix import DistBSMatrix, scatter
-from .multiply import dist_multiply, dist_spamm, multiply_plan_key
+from .collectives import (
+    dist_add,
+    dist_frobenius_norm,
+    dist_trace,
+    dist_truncate,
+    dist_truncate_hierarchical,
+)
+from .matrix import DistBSMatrix, resident_block_norms, scatter
+from .multiply import dist_multiply, dist_spamm
 
 __all__ = ["dist_sp2_purify", "DistPurifyStats"]
 
@@ -66,6 +72,8 @@ def dist_sp2_purify(
     idem_tol: float = 1e-8,
     trunc_tau: float = 0.0,
     spamm_tau: float = 0.0,
+    trunc_method: str = "hierarchical",
+    spamm_method: str = "delta",
     impl: str = "ref",
     exchange: str = "p2p",
     cache: PlanCache | None = None,
@@ -77,8 +85,20 @@ def dist_sp2_purify(
     ``cache`` to share plans across calls (e.g. repeated SCF-style solves on
     a fixed sparsity pattern).  ``spamm_tau > 0`` replaces the exact multiply
     with hierarchical SpAMM (:func:`repro.dist.multiply.dist_spamm`): each
-    square carries an error bound <= spamm_tau, and the pruned task list is
-    threaded into the cached plan.
+    square carries an error bound <= spamm_tau.
+
+    Error control is hierarchical end to end by default:
+    ``trunc_method="hierarchical"`` truncates via the quadtree subtree-drop
+    descent on the resident norm table
+    (:func:`repro.dist.collectives.dist_truncate_hierarchical`; ``"leaf"``
+    selects the flat greedy :func:`~repro.dist.collectives.dist_truncate`),
+    and ``spamm_method="delta"`` applies the per-iteration prune pattern as a
+    task mask against the cached full-multiply plan (``"replan"`` builds a
+    plan per pruned pattern).  With the defaults, one [P, cap] norm-table
+    fetch per iteration is shared between truncation and the next SpAMM, and
+    once the sparsity pattern stabilizes an iteration incurs *zero*
+    plan-cache misses even while the ``tau``-prune pattern fluctuates — the
+    inner loop is pure device work.
     """
     cache = cache if cache is not None else PlanCache()
     scale, shift = sp2_init_coeffs(lmin, lmax)
@@ -100,28 +120,65 @@ def dist_sp2_purify(
     traces, idems, nnzbs, per_iter = [], [], [], []
     monitor = Sp2Monitor(idem_tol)
     best = x
+    x_norms = None  # stack-order norm table of x, carried over from truncation
     for it in range(max_iter):
-        h0, m0, t0 = cache.hits, cache.misses, time.perf_counter()
+        h0, m0 = cache.hits, cache.misses
+        b0, s0, t0 = cache.build_s, cache.symbolic_s, time.perf_counter()
         if spamm_tau > 0:
-            x2, mult_err = dist_spamm(x, x, spamm_tau, cache, exchange=exchange, impl=impl)
+            x2, mult_err = dist_spamm(
+                x, x, spamm_tau, cache,
+                exchange=exchange, impl=impl,
+                method=spamm_method, a_norms=x_norms,
+            )
         else:
             x2 = dist_multiply(x, x, cache, exchange=exchange, impl=impl)
             mult_err = 0.0
+        # peek the plan the multiply actually used (exact, SpAMM-replan or
+        # SpAMM-delta — last_plan_key tracks all three), so recv-bytes stats
+        # stay truthful for every multiply mode
+        entry = (
+            cache.peek(cache.last_plan_key)
+            if cache.last_plan_key is not None
+            else None
+        )
+        plan = entry[0] if entry is not None else None
+        assert plan is None or isinstance(plan, SpgemmPlan)
         idem = dist_frobenius_norm(dist_add(x2, x, 1.0, -1.0, cache), cache)
         tr = dist_trace(x, cache)
         traces.append(tr)
         idems.append(idem)
         nnzbs.append(x.nnzb)
-        entry = (
-            cache.peek(multiply_plan_key(x, x, exchange=exchange, impl=impl))
-            if spamm_tau <= 0
-            else None
-        )
-        plan = entry[0] if entry is not None else None
+        nnzb_it = x.nnzb
+        stop = monitor.update(it, idem)
+        if monitor.improved:
+            best = x
+        if not stop:
+            if sp2_should_square(tr, n_occ):
+                x = x2
+            else:
+                x = dist_add(x, x2, 2.0, -1.0, cache)
+            x_norms = None
+            if trunc_tau > 0:
+                if trunc_method == "hierarchical":
+                    # one norm-table fetch serves both the truncation descent
+                    # and the next iteration's SpAMM: compaction keeps block
+                    # values, so the kept subset of the table is the
+                    # truncated matrix's
+                    pre_norms = resident_block_norms(x)
+                    info: dict = {}
+                    x = dist_truncate_hierarchical(
+                        x, trunc_tau, cache, norms=pre_norms, stats=info
+                    )
+                    x_norms = pre_norms[info["kept"]]
+                else:
+                    assert trunc_method == "leaf", trunc_method
+                    x = dist_truncate(x, trunc_tau, cache)
+        # appended after the update + truncation so each row carries its own
+        # iteration's full cache/timing deltas (truncation included)
         per_iter.append(
             dict(
                 iteration=it,
-                nnzb=x.nnzb,
+                nnzb=nnzb_it,
                 idem=idem,
                 trace=tr,
                 cache_hits=cache.hits - h0,
@@ -130,20 +187,13 @@ def dist_sp2_purify(
                 recv_bytes_mean=(
                     plan_stats(plan)["recv_bytes_mean"] if plan is not None else 0.0
                 ),
+                plan_build_s=cache.build_s - b0,
+                symbolic_s=cache.symbolic_s - s0,
                 wall_s=time.perf_counter() - t0,
             )
         )
-        stop = monitor.update(it, idem)
-        if monitor.improved:
-            best = x
         if stop:
             break
-        if sp2_should_square(tr, n_occ):
-            x = x2
-        else:
-            x = dist_add(x, x2, 2.0, -1.0, cache)
-        if trunc_tau > 0:
-            x = dist_truncate(x, trunc_tau, cache)
     return best.gather(), DistPurifyStats(
         len(traces), traces, idems, nnzbs, cache.stats(), per_iter
     )

@@ -97,6 +97,28 @@ def test_truncate_hierarchical_drops_whole_subtrees():
     assert np.linalg.norm(a.to_dense() - t.to_dense()) <= tau + 1e-6
 
 
+def test_hierarchical_drop_mask_skips_dropped_subtrees():
+    # the shared descent (core + distributed truncation) must never visit
+    # nodes under a dropped subtree: with one negligible quadrant the visit
+    # count stays well below the total node count
+    from repro.core.quadtree import hierarchical_drop_mask
+
+    rng = np.random.default_rng(1)
+    n, bs = 64, 8
+    d = rng.standard_normal((n, n)).astype(np.float32)
+    d[n // 2 :, n // 2 :] *= 1e-6
+    a = BSMatrix.from_dense(d, bs)
+    qt = a.quadtree_index()
+    keep, visited = hierarchical_drop_mask(qt, 1e-3)
+    assert 0 < visited < qt.num_nodes()
+    # the mask agrees with the public truncation entry point
+    t = truncate_hierarchical(a, 1e-3)
+    assert int(keep.sum()) == t.nnzb
+    # no drops: every level's frontier is visited in full
+    keep_all, visited_all = hierarchical_drop_mask(qt, 0.0)
+    assert keep_all.all() and visited_all == qt.num_nodes()
+
+
 def test_truncate_hierarchical_edge_cases():
     z = BSMatrix.zeros((32, 32), 8)
     assert truncate_hierarchical(z, 1.0) is z

@@ -16,10 +16,13 @@ import pytest
 _SCRIPT = r"""
 import numpy as np, jax, json, sys
 from repro.core import BSMatrix, multiply, add, truncate, sp2_purify, spamm
+from repro.core.truncate import truncate_hierarchical
+from repro.core.quadtree import build_quadtree_index
 from repro.core.distributed import make_worker_mesh
 from repro.dist import (scatter, PlanCache, dist_multiply, dist_spamm, dist_add,
                         dist_trace, dist_frobenius_norm, dist_truncate,
-                        dist_sp2_purify)
+                        dist_truncate_hierarchical, dist_sp2_purify,
+                        resident_block_norms)
 
 assert jax.device_count() == 4, jax.device_count()
 rng = np.random.default_rng(0)
@@ -61,6 +64,43 @@ refT = truncate(A, tau)
 out["trunc_nnzb"] = [T.nnzb, refT.nnzb, A.nnzb]
 out["trunc_err"] = float(np.abs(T.gather().to_dense() - refT.to_dense()).max())
 
+# resident norm table is the exact host computation (same kernel, same
+# accumulation dtype) so prune decisions agree bit-for-bit near tau
+out["norms_bitwise_equal"] = bool(
+    np.array_equal(resident_block_norms(dA), np.asarray(A.block_norms()))
+)
+
+# dist_truncate edge cases mirroring the core-path tests
+tau_all = A.frobenius_norm() * 1.01  # tau >= ||A||_F: every block dropped
+T_all = dist_truncate(dA, tau_all, cache)
+out["trunc_all_dropped"] = [T_all.nnzb, truncate(A, tau_all).nnzb]
+single = BSMatrix.from_dense(np.full((16, 16), 0.5, np.float32), 16)
+dsingle = scatter(single, mesh)
+out["trunc_single"] = [
+    dist_truncate(dsingle, 1e-6, cache).nnzb,   # tau below the block norm: kept
+    dist_truncate(dsingle, 1e6, cache).nnzb,    # tau above: dropped
+]
+out["trunc_kept_set_equal"] = bool(
+    np.array_equal(dist_truncate(dA, tau, cache).coords, truncate(A, tau).coords)
+)
+
+# hierarchical resident truncation: same kept set as the core descent, global
+# Frobenius guarantee, and dropped subtrees' leaves never enumerated
+tau_h = float(np.median(A.block_norms()) * 3)
+info = {}
+Th = dist_truncate_hierarchical(dA, tau_h, cache, stats=info)
+refTh = truncate_hierarchical(A, tau_h)
+out["htrunc_nnzb"] = [Th.nnzb, refTh.nnzb, A.nnzb]
+out["htrunc_coords_equal"] = bool(np.array_equal(Th.coords, refTh.coords))
+out["htrunc_err"] = float(np.abs(Th.gather().to_dense() - refTh.to_dense()).max())
+out["htrunc_guarantee"] = [
+    float(np.linalg.norm(A.to_dense() - np.asarray(Th.gather().to_dense(), np.float64))),
+    tau_h,
+]
+qt_full = build_quadtree_index(A.coords, np.asarray(A.block_norms(), np.float64))
+out["htrunc_visited"] = [int(info["nodes_visited"]), int(qt_full.num_nodes())]
+out["htrunc_kept_len"] = [int(len(info["kept"])), Th.nnzb]
+
 # SP2 purification on an SPD-shifted banded Hamiltonian
 n, bs, nocc = 128, 16, 40
 r = np.random.default_rng(3)
@@ -73,13 +113,14 @@ f = BSMatrix.from_dense(h, bs)
 w = np.linalg.eigvalsh(h.astype(np.float64))
 lmin, lmax = float(w.min()) - 0.05, float(w.max()) + 0.05
 d_ref, st_ref = sp2_purify(f, nocc, lmin, lmax, idem_tol=1e-5, trunc_tau=1e-5, impl="ref")
+# leaf truncation runs the identical selection to the core driver -> exact parity
 pc = PlanCache()
-d_dist, st = dist_sp2_purify(f, nocc, lmin, lmax, mesh,
-                             idem_tol=1e-5, trunc_tau=1e-5, cache=pc)
+d_dist, st = dist_sp2_purify(f, nocc, lmin, lmax, mesh, idem_tol=1e-5,
+                             trunc_tau=1e-5, trunc_method="leaf", cache=pc)
 out["purify_err"] = float(np.abs(d_dist.to_dense() - d_ref.to_dense()).max())
 # resident-input branch: already-scattered F, X0 built on the mesh
-d_res, _ = dist_sp2_purify(scatter(f, mesh), nocc, lmin, lmax,
-                           idem_tol=1e-5, trunc_tau=1e-5)
+d_res, _ = dist_sp2_purify(scatter(f, mesh), nocc, lmin, lmax, idem_tol=1e-5,
+                           trunc_tau=1e-5, trunc_method="leaf")
 out["purify_resident_err"] = float(np.abs(d_res.to_dense() - d_ref.to_dense()).max())
 out["purify_trace"] = float(d_dist.trace())
 out["nocc"] = nocc
@@ -90,7 +131,7 @@ out["tail_misses"] = [pi["cache_misses"] for pi in st.per_iter[-3:]]
 
 # hierarchical SpAMM on resident operands: bound holds, matches host path,
 # repeated calls with a stable prune pattern hit the plan cache
-tau_s = 2.0
+tau_s = 20.0  # large enough that the descent actually prunes subtrees
 sc = PlanCache()
 Cs, err_s = dist_spamm(dA, dB, tau_s, sc)
 host_c, host_err = spamm(A, B, tau_s)
@@ -105,13 +146,51 @@ out["spamm_host_agree"] = float(
 dist_spamm(dA, dB, tau_s, sc)  # same values -> same pruned tasks -> hit
 out["spamm_cache"] = sc.stats()
 
-# SP2 with SpAMM multiplies: density still correct within the loosened bound
-d_spamm, st_sp = dist_sp2_purify(f, nocc, lmin, lmax, mesh,
-                                 idem_tol=1e-5, trunc_tau=1e-5, spamm_tau=1e-6)
+# delta-plan SpAMM: a *different* tau (different prune pattern) still hits the
+# structure-keyed plan; the replan path must re-plan for the new pattern
+h0, m0 = sc.hits, sc.misses
+Cs2, err_s2 = dist_spamm(dA, dB, tau_s * 3, sc)
+out["spamm_delta_other_tau"] = [sc.hits - h0, sc.misses - m0]
+host_c2, _ = spamm(A, B, tau_s * 3)
+out["spamm_delta_other_tau_agree"] = float(
+    np.abs(Cs2.gather().to_dense() - host_c2.to_dense()).max()
+)
+Cr, err_r = dist_spamm(dA, dB, tau_s, sc, method="replan")
+out["spamm_replan_agree"] = float(
+    np.abs(Cr.gather().to_dense() - host_c.to_dense()).max()
+)
+out["spamm_replan_bound"] = [float(err_r), float(err_s)]
+# delta path with an empty full task list (no structural overlap): the mask
+# relay must not index into the zero-length task array
+E = BSMatrix.from_blocks((32, 32), 16, np.array([[0, 1]]),
+                         np.ones((1, 16, 16), np.float32))
+Ce, _ = dist_spamm(scatter(E, mesh), scatter(E, mesh), 0.5, sc)
+out["spamm_delta_empty_nnzb"] = Ce.nnzb
+
+# SP2 with SpAMM multiplies (leaf parity run): density still correct
+d_spamm, st_sp = dist_sp2_purify(f, nocc, lmin, lmax, mesh, idem_tol=1e-5,
+                                 trunc_tau=1e-5, trunc_method="leaf",
+                                 spamm_tau=1e-6)
 out["purify_spamm_err"] = float(np.abs(d_spamm.to_dense() - d_ref.to_dense()).max())
 out["purify_spamm_trace"] = float(d_spamm.trace())
 out["purify_spamm_errs_bounded"] = bool(
     all(pi["spamm_err"] <= 1e-6 + 1e-12 for pi in st_sp.per_iter)
+)
+
+# the default end-to-end path: hierarchical truncation + delta SpAMM.  Once
+# the sparsity pattern stabilizes an iteration incurs ZERO plan-cache misses
+# even though the tau-prune pattern still fluctuates, recv bytes are reported
+# from the plan actually executed (regression: used to read the exact-multiply
+# key and report 0.0 whenever spamm_tau > 0), and the density is still right.
+d_hier, st_h = dist_sp2_purify(f, nocc, lmin, lmax, mesh, idem_tol=1e-5,
+                               trunc_tau=1e-5, spamm_tau=1e-6)
+out["purify_hier_err"] = float(np.abs(d_hier.to_dense() - d_ref.to_dense()).max())
+out["purify_hier_trace"] = float(d_hier.trace())
+out["purify_hier_tail_misses"] = [pi["cache_misses"] for pi in st_h.per_iter[-3:]]
+out["purify_hier_tail_hits"] = [pi["cache_hits"] for pi in st_h.per_iter[-3:]]
+out["purify_spamm_recv_bytes"] = [pi["recv_bytes_mean"] for pi in st_h.per_iter]
+out["purify_hier_errs_bounded"] = bool(
+    all(pi["spamm_err"] <= 1e-6 + 1e-12 for pi in st_h.per_iter)
 )
 print("RESULT " + json.dumps(out))
 """
@@ -181,6 +260,61 @@ def test_dist_purify_with_spamm(dist_results):
     assert dist_results["purify_spamm_errs_bounded"]
     it_dist, it_ref = dist_results["iters"]
     assert it_dist == it_ref
+
+
+def test_resident_norms_match_host_bitwise(dist_results):
+    # same kernel, same accumulation dtype: host and resident SpAMM /
+    # truncation prune decisions can never disagree near tau
+    assert dist_results["norms_bitwise_equal"]
+
+
+def test_dist_truncate_edge_cases(dist_results):
+    assert dist_results["trunc_all_dropped"] == [0, 0]  # tau >= ||A||_F
+    assert dist_results["trunc_single"] == [1, 0]  # single-block keep / drop
+    assert dist_results["trunc_kept_set_equal"]  # same kept set as core
+
+
+def test_dist_truncate_hierarchical(dist_results):
+    t, ref, orig = dist_results["htrunc_nnzb"]
+    assert t == ref < orig  # dropped blocks, identical set to the core descent
+    assert dist_results["htrunc_coords_equal"]
+    assert dist_results["htrunc_err"] == 0.0
+    err, tau = dist_results["htrunc_guarantee"]
+    assert err <= tau * (1 + 1e-6) + 1e-6  # global Frobenius guarantee
+    visited, total = dist_results["htrunc_visited"]
+    assert 0 < visited < total  # dropped subtrees' leaves never enumerated
+    kept_reported, kept_actual = dist_results["htrunc_kept_len"]
+    assert kept_reported == kept_actual
+
+
+def test_dist_spamm_delta_plan(dist_results):
+    # a different tau (different prune pattern) must NOT miss the plan cache
+    hits, misses = dist_results["spamm_delta_other_tau"]
+    assert misses == 0 and hits >= 1
+    assert dist_results["spamm_delta_other_tau_agree"] < 1e-5
+    # replan mode computes the same result and the same bound
+    assert dist_results["spamm_replan_agree"] < 1e-5
+    r, d = dist_results["spamm_replan_bound"]
+    assert abs(r - d) < 1e-9
+    assert dist_results["spamm_delta_empty_nnzb"] == 0
+
+
+def test_dist_purify_hierarchical_delta_zero_misses(dist_results):
+    # the issue's acceptance criterion: with spamm_tau > 0 and hierarchical
+    # trunc_tau > 0, a stabilized-pattern iteration incurs zero plan-cache
+    # misses even while the tau-prune pattern fluctuates
+    assert dist_results["purify_hier_err"] < 1e-3
+    assert abs(dist_results["purify_hier_trace"] - dist_results["nocc"]) < 0.05
+    assert dist_results["purify_hier_errs_bounded"]
+    assert all(m == 0 for m in dist_results["purify_hier_tail_misses"])
+    assert all(h > 0 for h in dist_results["purify_hier_tail_hits"])
+
+
+def test_dist_purify_spamm_recv_bytes_reported(dist_results):
+    # regression: recv_bytes_mean read the exact-multiply key and reported
+    # 0.0 for every iteration whenever spamm_tau > 0
+    rb = dist_results["purify_spamm_recv_bytes"]
+    assert rb and all(b > 0 for b in rb)
 
 
 def test_dist_purify_plan_cache_hits(dist_results):
