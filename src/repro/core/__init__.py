@@ -9,6 +9,8 @@ schedules in :mod:`repro.core.schedule` / :mod:`repro.core.distributed`.
 from .add import add, add_scaled_identity, identity
 from .cache import SymbolicCache
 from .inverse import (
+    InverseStats,
+    RefineMonitor,
     factorization_residual,
     inv_chol,
     localized_inverse_factorization,
@@ -63,6 +65,8 @@ __all__ = [
     "inv_chol",
     "localized_inverse_factorization",
     "factorization_residual",
+    "InverseStats",
+    "RefineMonitor",
     "submatrix",
     "sp2_purify",
 ]

@@ -69,6 +69,21 @@ class SymbolicCache:
         """Read an entry without touching counters or LRU order."""
         return self._entries.get(key, default)
 
+    def snapshot(self) -> tuple:
+        """Counter snapshot for per-stage/per-iteration deltas (see delta)."""
+        return (self.hits, self.misses, self.build_s, self.symbolic_s)
+
+    def delta(self, snap: tuple) -> dict:
+        """Counters accumulated since ``snap`` — the per-iteration cache rows
+        reported by the SP2 / inverse-factorization drivers."""
+        h, m, b, s = snap
+        return dict(
+            cache_hits=self.hits - h,
+            cache_misses=self.misses - m,
+            plan_build_s=self.build_s - b,
+            symbolic_s=self.symbolic_s - s,
+        )
+
     def __len__(self) -> int:
         return len(self._entries)
 

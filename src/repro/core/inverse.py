@@ -9,14 +9,26 @@ Finds Z with Z^T A Z = I for symmetric positive definite A.
   two diagonal quadrants independently, then correct the coupling by
   iterative refinement Z <- Z(I + delta/2), delta = I - Z^T A Z  [paper refs
   4, 19].  Truncation keeps the iterates sparse.
+
+The refinement *policy* (convergence / divergence tests, best-iterate
+tracking) lives in :class:`RefineMonitor` so the host driver here and the
+device-resident driver in :mod:`repro.dist.inverse` run the identical
+iteration on different matrix backends — the same split as
+:class:`repro.core.purify.Sp2Monitor` for SP2.  Both drivers thread a
+structure-keyed :class:`~repro.core.cache.SymbolicCache` through every
+multiply, so refinement iterations on a stabilized sparsity pattern skip the
+symbolic phase entirely.
 """
 
 from __future__ import annotations
+
+import dataclasses
 
 import jax.numpy as jnp
 import numpy as np
 
 from .add import add, identity
+from .cache import SymbolicCache
 from .matrix import BSMatrix
 from .spgemm import multiply
 from .truncate import truncate
@@ -27,6 +39,8 @@ __all__ = [
     "inv_chol",
     "localized_inverse_factorization",
     "factorization_residual",
+    "RefineMonitor",
+    "InverseStats",
 ]
 
 
@@ -81,12 +95,75 @@ def _dense_inv_chol(a: BSMatrix) -> BSMatrix:
     return BSMatrix.from_dense(z.astype(np.asarray(a.data).dtype), a.bs)
 
 
-def inv_chol(a: BSMatrix, leaf_blocks: int = 1, *, impl: str = "auto") -> BSMatrix:
+@dataclasses.dataclass
+class RefineMonitor:
+    """Convergence / divergence policy of the iterative refinement
+    Z <- Z(I + delta/2), shared by the host and resident drivers.
+
+    Tracks the most accurate iterate seen; ``update`` flags a stop on
+    convergence (residual ||I - Z^T A Z||_F below tolerance), divergence
+    (the residual grows 4x past the best seen), or stagnation (no new best
+    for ``max_stall`` consecutive iterations — truncation / SpAMM error
+    floors the residual above ``tol``, and iterating past the floor is pure
+    waste).  On a non-convergence stop the caller returns the best iterate.
+    """
+
+    tol: float
+    max_stall: int = 3
+    best_r: float = float("inf")
+    best_iter: int = -1
+    stall: int = 0
+    improved: bool = False  # whether the last update() set a new best
+
+    def update(self, it: int, r: float) -> bool:
+        """Record iteration ``it``; return True when refinement should stop."""
+        self.improved = r < self.best_r
+        if self.improved:
+            self.best_r, self.best_iter = r, it
+            self.stall = 0
+        else:
+            self.stall += 1
+        if r <= self.tol:
+            return True
+        return r > 4.0 * self.best_r or self.stall >= self.max_stall
+
+
+@dataclasses.dataclass
+class InverseStats:
+    """Metrics of one inverse-factorization run (mirrors PurifyStats).
+
+    ``residual_history[i]`` is ``||I - Z_i^T A Z_i||_F`` before update ``i``;
+    ``factorization_residual`` is the residual of the returned Z.  The
+    symbolic-cache fields report the hit/miss behaviour of the refinement
+    loop: once the iterate's sparsity pattern stabilizes under truncation,
+    iterations are all hits (the symbolic phase is skipped entirely).
+    """
+
+    iterations: int
+    residual_history: list
+    factorization_residual: float
+    nnzb_history: list
+    symbolic_cache: dict | None = None
+    cache_hits_history: list | None = None
+    cache_misses_history: list | None = None
+
+
+def inv_chol(
+    a: BSMatrix,
+    leaf_blocks: int = 1,
+    *,
+    impl: str = "auto",
+    cache: SymbolicCache | None = None,
+) -> BSMatrix:
     """Recursive inverse Cholesky.  Z upper triangular, Z^T A Z = I.
 
     Recursion: split A at the quadtree midpoint,
       Z00 = invchol(A00);  W = A01^T Z00;  S = A11 - W W^T;
       Z11 = invchol(S);    Z01 = -Z00 W^T Z11.
+
+    ``cache`` memoizes every multiply's symbolic phase by structure —
+    recursions over repeated quadrant structures (banded matrices, SCF-style
+    repeated factorizations) skip the descent on the second encounter.
     """
     nbr = a.nblocks[0]
     if nbr <= leaf_blocks:
@@ -96,18 +173,31 @@ def inv_chol(a: BSMatrix, leaf_blocks: int = 1, *, impl: str = "auto") -> BSMatr
     a00 = submatrix(a, 0, split, 0, split)
     a01 = submatrix(a, 0, split, split, nbr)
     a11 = submatrix(a, split, nbr, split, nbr)
-    z00 = inv_chol(a00, leaf_blocks, impl=impl)
-    w = multiply(a01.transpose(), z00, impl=impl)  # [n1, n0]
-    s = add(a11, multiply(w, w.transpose(), impl=impl), 1.0, -1.0)
-    z11 = inv_chol(s, leaf_blocks, impl=impl)
-    z01 = multiply(multiply(z00, w.transpose(), impl=impl), z11, impl=impl).scale(-1.0)
+    z00 = inv_chol(a00, leaf_blocks, impl=impl, cache=cache)
+    w = multiply(a01.transpose(), z00, impl=impl, cache=cache)  # [n1, n0]
+    s = add(a11, multiply(w, w.transpose(), impl=impl, cache=cache), 1.0, -1.0)
+    z11 = inv_chol(s, leaf_blocks, impl=impl, cache=cache)
+    z01 = multiply(
+        multiply(z00, w.transpose(), impl=impl, cache=cache),
+        z11,
+        impl=impl,
+        cache=cache,
+    ).scale(-1.0)
     zero = BSMatrix.zeros((a11.shape[0], a00.shape[1]), a.bs, a.dtype)
     return assemble2x2(z00, z01, zero, z11, split)
 
 
-def factorization_residual(a: BSMatrix, z: BSMatrix, *, impl: str = "auto") -> float:
+def factorization_residual(
+    a: BSMatrix,
+    z: BSMatrix,
+    *,
+    impl: str = "auto",
+    cache: SymbolicCache | None = None,
+) -> float:
     """||I - Z^T A Z||_F."""
-    zaz = multiply(multiply(z.transpose(), a, impl=impl), z, impl=impl)
+    zaz = multiply(
+        multiply(z.transpose(), a, impl=impl, cache=cache), z, impl=impl, cache=cache
+    )
     delta = add(identity(a.shape[0], a.bs, a.dtype), zaz, 1.0, -1.0)
     return delta.frobenius_norm()
 
@@ -120,32 +210,71 @@ def localized_inverse_factorization(
     trunc_tau: float = 0.0,
     leaf_blocks: int = 1,
     impl: str = "auto",
-) -> tuple[BSMatrix, list[float]]:
-    """Divide-and-conquer inverse factorization with iterative refinement."""
+    cache: SymbolicCache | None = None,
+) -> tuple[BSMatrix, InverseStats]:
+    """Divide-and-conquer inverse factorization with iterative refinement.
+
+    Factorize the two diagonal quadrants independently, then correct the
+    coupling by Z <- Z(I + delta/2), delta = I - Z^T A Z, until
+    :class:`RefineMonitor` stops the loop.  Every multiply's symbolic phase
+    goes through ``cache`` (a :class:`~repro.core.cache.SymbolicCache`;
+    created here when omitted), so iterations whose sparsity pattern is
+    stable skip the symbolic phase entirely — hit/miss counts are reported
+    per iteration in the returned :class:`InverseStats`.
+    """
+    cache = cache if cache is not None else SymbolicCache()
     nbr = a.nblocks[0]
     if nbr <= leaf_blocks:
-        return _dense_inv_chol(a), []
+        z = _dense_inv_chol(a)
+        return z, InverseStats(
+            0, [], factorization_residual(a, z, impl=impl, cache=cache), [z.nnzb],
+            cache.stats(), [], [],
+        )
     depth = int(np.ceil(np.log2(nbr)))
     split = 1 << (depth - 1)
     a00 = submatrix(a, 0, split, 0, split)
     a11 = submatrix(a, split, nbr, split, nbr)
-    z00 = inv_chol(a00, leaf_blocks, impl=impl)
-    z11 = inv_chol(a11, leaf_blocks, impl=impl)
+    z00 = inv_chol(a00, leaf_blocks, impl=impl, cache=cache)
+    z11 = inv_chol(a11, leaf_blocks, impl=impl, cache=cache)
     zero01 = BSMatrix.zeros((z00.shape[0], z11.shape[1]), a.bs, a.dtype)
     zero10 = BSMatrix.zeros((z11.shape[0], z00.shape[1]), a.bs, a.dtype)
     z = assemble2x2(z00, zero01, zero10, z11, split)
 
     eye = identity(a.shape[0], a.bs, a.dtype)
+    monitor = RefineMonitor(tol)
+    best = z
     history: list[float] = []
-    for _ in range(max_iter):
-        zaz = multiply(multiply(z.transpose(), a, impl=impl), z, impl=impl)
+    nnzbs, hits_hist, miss_hist = [], [], []
+    for it in range(max_iter):
+        h0, m0 = cache.hits, cache.misses
+        zaz = multiply(
+            multiply(z.transpose(), a, impl=impl, cache=cache),
+            z,
+            impl=impl,
+            cache=cache,
+        )
         delta = add(eye, zaz, 1.0, -1.0)
         r = delta.frobenius_norm()
         history.append(r)
-        if r <= tol:
+        nnzbs.append(z.nnzb)
+        stop = monitor.update(it, r)
+        if monitor.improved:
+            best = z
+        if not stop:
+            step = add(eye, delta, 1.0, 0.5)  # I + delta/2
+            z = multiply(z, step, impl=impl, cache=cache)
+            if trunc_tau > 0:
+                z = truncate(z, trunc_tau)
+        hits_hist.append(cache.hits - h0)
+        miss_hist.append(cache.misses - m0)
+        if stop:
             break
-        step = add(eye, delta, 1.0, 0.5)  # I + delta/2
-        z = multiply(z, step, impl=impl)
-        if trunc_tau > 0:
-            z = truncate(z, trunc_tau)
-    return z, history
+    return best, InverseStats(
+        len(history),
+        history,
+        monitor.best_r,
+        nnzbs,
+        cache.stats(),
+        hits_hist,
+        miss_hist,
+    )

@@ -130,7 +130,11 @@ def spgemm_symbolic(a_coords: np.ndarray, b_coords: np.ndarray) -> Tasks:
 
 
 def _tree_descend(
-    ia: QuadtreeIndex, ib: QuadtreeIndex, tau: float | None
+    ia: QuadtreeIndex,
+    ib: QuadtreeIndex,
+    tau: float | None,
+    *,
+    upper_only: bool = False,
 ) -> tuple[np.ndarray, np.ndarray, float, int]:
     """Vectorized level-synchronous quadtree descent for C = A @ B.
 
@@ -141,6 +145,13 @@ def _tree_descend(
     applies the SpAMM bound during descent — at each level the smallest
     ``||A_node|| * ||B_node||`` products are greedily dropped while their sum
     fits the remaining budget, so pruned subtrees are *never enumerated*.
+
+    ``upper_only`` restricts the descent to the upper triangle of C (the
+    paper's symmetric task types): a node pair whose output node lies
+    strictly below the diagonal — A-node row prefix > B-node col prefix —
+    can only produce c_row > c_col leaves, so the whole pair is dropped
+    mid-descent and its subtree is never expanded; diagonal-straddling pairs
+    keep descending and the leaf level applies the exact c_row <= c_col cut.
 
     Returns ``(leaf_a, leaf_b, err_bound, pairs_visited)``: leaf pairs as
     block-stack indices, the accumulated pruned-bound sum (<= tau), and the
@@ -174,6 +185,12 @@ def _tree_descend(
         pa = ia.prefixes[level + 1][ach]
         pb = ib.prefixes[level + 1][bch]
         match = (pa & one) == ((pb >> one) & one)
+        if upper_only:
+            # output node (i, j): i from the A child prefix, j from the B
+            # child prefix; strictly-lower nodes cannot reach c_row <= c_col
+            i_node, _ = morton_decode(pa)
+            _, j_node = morton_decode(pb)
+            match &= i_node <= j_node
         ai, bi = ach[match], bch[match]
         visited += int(ai.size)
         if budget > 0.0 and ai.size:
@@ -201,15 +218,23 @@ def _tasks_from_leaf_pairs(ia: QuadtreeIndex, ib: QuadtreeIndex, ai, bi) -> Task
     return _finalize_tasks(ai, bi, ar, bc)
 
 
-def spgemm_symbolic_tree(ia: QuadtreeIndex, ib: QuadtreeIndex) -> Tasks:
+def spgemm_symbolic_tree(
+    ia: QuadtreeIndex, ib: QuadtreeIndex, *, upper_only: bool = False
+) -> Tasks:
     """Symbolic phase via vectorized quadtree descent — the production path.
 
     Identical output to :func:`spgemm_symbolic` (tested bit-for-bit), but
     structured as the paper's hierarchy walk over cached
     :class:`~repro.core.quadtree.QuadtreeIndex` structures, which is what
     lets SpAMM (:func:`spamm_symbolic`) prune whole subtrees mid-descent.
+
+    ``upper_only`` keeps only tasks with ``c_row <= c_col``, pruned *during*
+    the descent (strictly-lower node pairs are never expanded) — the
+    symmetric task types (:func:`syrk` / :func:`symm_square`) use it to
+    roughly halve their symbolic cost versus enumerate-then-filter, with a
+    bit-identical task list (tested).
     """
-    ai, bi, _, _ = _tree_descend(ia, ib, tau=None)
+    ai, bi, _, _ = _tree_descend(ia, ib, tau=None, upper_only=upper_only)
     return _tasks_from_leaf_pairs(ia, ib, ai, bi)
 
 
@@ -385,22 +410,18 @@ def multiply(
 def syrk(a: BSMatrix, *, impl: str = "auto") -> BSMatrix:
     """Symmetric rank-k construction: C = A @ A^T, exploiting symmetry.
 
-    Only tasks with c_row <= c_col are computed; the mirror is materialized by
+    Only tasks with c_row <= c_col are computed — via the ``upper_only``
+    hierarchy descent, so strictly-lower subtree pairs are pruned before
+    their leaves are ever enumerated — and the mirror is materialized by
     transposing the strictly-upper blocks (paper: symmetric square / rank-k
     task types).
     """
     at = a.transpose()
-    tasks = spgemm_symbolic(a.coords, at.coords)
-    keep = tasks.c_coords[tasks.c_idx, 0] <= tasks.c_coords[tasks.c_idx, 1]
-    # re-index kept tasks onto the kept output blocks
-    kept_out = np.unique(tasks.c_idx[keep])
-    remap = -np.ones(tasks.num_out, dtype=np.int64)
-    remap[kept_out] = np.arange(kept_out.size)
-    upper = Tasks(
-        a_idx=tasks.a_idx[keep],
-        b_idx=tasks.b_idx[keep],
-        c_idx=remap[tasks.c_idx[keep]],
-        c_coords=tasks.c_coords[kept_out],
+    depth = _common_depth(a, at)
+    upper = spgemm_symbolic_tree(
+        a.quadtree_index(depth, with_norms=False),
+        at.quadtree_index(depth, with_norms=False),
+        upper_only=True,
     )
     data = spgemm_numeric(a.data, at.data, upper, impl=impl)
     upper_m = BSMatrix(shape=(a.shape[0], a.shape[0]), bs=a.bs, coords=upper.c_coords, data=data)

@@ -14,51 +14,84 @@ operands between operations.  This package is that layer for the XLA mesh:
 * resident collectives (:mod:`repro.dist.collectives`) — ``dist_add``
   (structure union, owner-aligned re-slotting), ``dist_scale``,
   ``dist_trace`` / ``dist_frobenius_norm`` (psum reductions),
-  ``dist_truncate`` / ``dist_truncate_hierarchical`` (host symbolic
-  selection — flat greedy or quadtree subtree-drop over the resident norm
-  table — then device compaction).
+  ``dist_transpose`` (re-slot to the transposed owner layout via planned
+  ppermute rounds, no host gather), ``dist_submatrix`` /
+  ``dist_assemble2x2`` (quadrant slice and glue — owner-local, zero
+  inter-device motion), ``dist_truncate`` / ``dist_truncate_hierarchical``
+  (host symbolic selection — flat greedy or quadtree subtree-drop over the
+  resident norm table — then device compaction).
 * :func:`dist_multiply` / :func:`dist_spamm` (:mod:`repro.dist.multiply`) —
   C = A @ B on resident operands through the cached schedule; SpAMM prunes
   hierarchically with an error bound <= tau, by default as a *delta plan*:
   a task mask against the cached full-multiply executable, so fluctuating
   prune patterns never miss the plan cache.
-* :func:`dist_sp2_purify` (:mod:`repro.dist.purify`) — the full SP2 loop on
-  resident matrices with per-iteration cache/comm stats.
+* :func:`dist_inv_chol` / :func:`dist_localized_inverse_factorization`
+  (:mod:`repro.dist.inverse`) — inverse factorization (Z^T A Z = I) with
+  the refinement loop running entirely through delta-plan SpAMM and
+  hierarchical truncation, sharing one norm-table fetch per iteration.
+* :func:`dist_sp2_purify` / :func:`dist_sqrt_inv_pipeline`
+  (:mod:`repro.dist.purify`) — the full SP2 loop on resident matrices with
+  per-iteration cache/comm stats, and the end-to-end SPD pipeline
+  S -> Z -> Z^T H Z -> SP2 -> Z D Z^T that never leaves the devices.
 """
 
 from .cache import PlanCache
 from .collectives import (
     dist_add,
+    dist_assemble2x2,
     dist_frobenius_norm,
     dist_scale,
+    dist_submatrix,
     dist_trace,
+    dist_transpose,
     dist_truncate,
     dist_truncate_hierarchical,
+    transpose_permutation,
 )
-from .matrix import DistBSMatrix, resident_block_norms, scatter
+from .inverse import (
+    DistInverseStats,
+    dist_inv_chol,
+    dist_localized_inverse_factorization,
+)
+from .matrix import DistBSMatrix, dist_zeros, resident_block_norms, scatter
 from .multiply import (
     dist_multiply,
     dist_spamm,
     multiply_plan_key,
     spamm_delta_plan_key,
 )
-from .purify import DistPurifyStats, dist_sp2_purify
+from .purify import (
+    DistPurifyStats,
+    SqrtInvPipelineStats,
+    dist_sp2_purify,
+    dist_sqrt_inv_pipeline,
+)
 
 __all__ = [
     "DistBSMatrix",
     "scatter",
+    "dist_zeros",
     "resident_block_norms",
     "PlanCache",
     "dist_add",
     "dist_scale",
     "dist_trace",
     "dist_frobenius_norm",
+    "dist_transpose",
+    "dist_submatrix",
+    "dist_assemble2x2",
+    "transpose_permutation",
     "dist_truncate",
     "dist_truncate_hierarchical",
     "dist_multiply",
     "dist_spamm",
     "multiply_plan_key",
     "spamm_delta_plan_key",
+    "dist_inv_chol",
+    "dist_localized_inverse_factorization",
+    "DistInverseStats",
     "dist_sp2_purify",
     "DistPurifyStats",
+    "dist_sqrt_inv_pipeline",
+    "SqrtInvPipelineStats",
 ]

@@ -26,8 +26,12 @@ __all__ = ["PlanCache"]
 class PlanCache(SymbolicCache):
     """LRU cache from structure keys to built plans/executables.
 
-    Keys are hashable tuples (callers prefix them with a kind tag such as
-    ``"spgemm"`` / ``"add"`` / ``"trace"``).  Values are whatever the builder
-    returns — typically a (plan, executable) pair whose executable holds
-    device-resident index arrays and a jitted shard_map program.
+    Keys are hashable tuples (callers prefix them with a kind tag:
+    ``"spgemm"`` / ``"spamm"`` / ``"spamm-delta"`` / ``"add"`` /
+    ``"transpose"`` / ``"slice"`` / ``"assemble"`` / ``"truncate"`` /
+    ``"trace"`` / ``"fro"`` / ``"norms"`` — the full resident vocabulary;
+    per-kind hit/miss counts surface in :meth:`stats`).  Values are whatever
+    the builder returns — typically a (plan, executable) pair whose
+    executable holds device-resident index arrays and a jitted shard_map
+    program.
     """

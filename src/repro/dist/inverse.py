@@ -1,0 +1,272 @@
+"""Device-resident inverse factorization (paper §2.2) — repro.dist.inverse.
+
+The multiplication-heavy workload that motivates the whole quadtree design,
+run end-to-end on the resident runtime: find Z with Z^T A Z = I for SPD A
+without the iterates ever leaving the worker mesh.
+
+* :func:`dist_inv_chol` — recursive inverse Cholesky over the quadtree
+  split.  Quadrants are carved out of the resident store with
+  :func:`~repro.dist.collectives.dist_submatrix` (owner-local masks, no
+  inter-device motion), every Schur step is a resident
+  transpose/multiply/add, and the recursion bottoms out in a dense lapack
+  factorization of the tiny leaf (the one boundary crossing, exactly like
+  the host path's leaf).
+* :func:`dist_localized_inverse_factorization` — divide-and-conquer:
+  factorize the two diagonal quadrants independently, glue them with
+  :func:`~repro.dist.collectives.dist_assemble2x2`, then correct the
+  coupling by iterative refinement Z <- Z(I + delta/2), delta = I - Z^T A Z.
+  The refinement loop is the hot path and runs entirely through the cached
+  planners: ``dist_spamm(method="delta")`` multiplies and
+  ``dist_truncate_hierarchical`` error control share one norm-table fetch
+  per iteration (the transposed iterate's norms are a host-side permutation
+  of the same table — block norms are transpose-invariant), and once the
+  sparsity pattern stabilizes an iteration incurs *zero* plan-cache misses —
+  the same discipline as ``dist_sp2_purify``.
+
+Convergence policy (:class:`repro.core.inverse.RefineMonitor`) is shared
+with the host driver, so both stop on the identical criterion.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.add import identity
+from repro.core.inverse import (
+    RefineMonitor,
+    _dense_inv_chol,
+    factorization_residual,
+)
+from repro.core.schedule import SpgemmPlan, plan_stats
+
+from .cache import PlanCache
+from .collectives import (
+    dist_add,
+    dist_assemble2x2,
+    dist_frobenius_norm,
+    dist_submatrix,
+    dist_transpose,
+    dist_truncate_hierarchical,
+    transpose_permutation,
+)
+from .matrix import DistBSMatrix, dist_zeros, resident_block_norms, scatter
+from .multiply import dist_multiply, dist_spamm
+
+__all__ = [
+    "dist_inv_chol",
+    "dist_localized_inverse_factorization",
+    "DistInverseStats",
+]
+
+
+@dataclasses.dataclass
+class DistInverseStats:
+    """Per-run and per-iteration metrics of the resident refinement loop.
+
+    Mirrors :class:`~repro.dist.purify.DistPurifyStats`: ``per_iter`` rows
+    carry the plan-cache hit/miss deltas, planning/symbolic seconds, the
+    executed multiply plan's mean received bytes per worker, the bytes of
+    the shared norm-table fetch, and the SpAMM error bound of that
+    iteration's multiplies.  ``factorization_residual`` is the residual of
+    the returned (best) iterate.
+    """
+
+    iterations: int
+    residual_history: list
+    factorization_residual: float
+    nnzb_history: list
+    cache: dict  # PlanCache.stats() at exit
+    per_iter: list
+
+
+def dist_inv_chol(
+    a: DistBSMatrix,
+    cache: PlanCache | None = None,
+    *,
+    leaf_blocks: int = 1,
+    exchange: str = "p2p",
+    impl: str = "ref",
+) -> DistBSMatrix:
+    """Recursive inverse Cholesky on the resident store.  Z^T A Z = I.
+
+    Identical recursion (and identical block structure — tested) to
+    :func:`repro.core.inverse.inv_chol`:
+      Z00 = invchol(A00);  W = A01^T Z00;  S = A11 - W W^T;
+      Z11 = invchol(S);    Z01 = -Z00 W^T Z11,
+    with every step a resident collective.  Leaves (<= ``leaf_blocks`` block
+    rows) gather to the host for the dense lapack factorization and scatter
+    straight back — the only boundary crossings, same as the host path.
+    """
+    nbr = -(-a.shape[0] // a.bs)
+    if nbr <= leaf_blocks:
+        return scatter(_dense_inv_chol(a.gather()), a.mesh)
+    depth = int(np.ceil(np.log2(nbr)))
+    split = 1 << (depth - 1)
+    a00 = dist_submatrix(a, 0, split, 0, split, cache)
+    a01 = dist_submatrix(a, 0, split, split, nbr, cache)
+    a11 = dist_submatrix(a, split, nbr, split, nbr, cache)
+    z00 = dist_inv_chol(a00, cache, leaf_blocks=leaf_blocks, exchange=exchange, impl=impl)
+    w = dist_multiply(
+        dist_transpose(a01, cache), z00, cache, exchange=exchange, impl=impl
+    )  # [n1, n0]
+    wt = dist_transpose(w, cache)  # shared by the Schur and coupling steps
+    s = dist_add(
+        a11, dist_multiply(w, wt, cache, exchange=exchange, impl=impl), 1.0, -1.0,
+        cache,
+    )
+    z11 = dist_inv_chol(s, cache, leaf_blocks=leaf_blocks, exchange=exchange, impl=impl)
+    z01 = dist_multiply(
+        dist_multiply(z00, wt, cache, exchange=exchange, impl=impl),
+        z11,
+        cache,
+        exchange=exchange,
+        impl=impl,
+    ).scale(-1.0)
+    zero = dist_zeros((a11.shape[0], a00.shape[1]), a.bs, a.mesh, a.dtype)
+    return dist_assemble2x2(z00, z01, zero, z11, split, cache)
+
+
+def dist_localized_inverse_factorization(
+    a: DistBSMatrix,
+    cache: PlanCache | None = None,
+    *,
+    tol: float = 1e-8,
+    max_iter: int = 100,
+    trunc_tau: float = 0.0,
+    spamm_tau: float = 0.0,
+    spamm_method: str = "delta",
+    leaf_blocks: int = 1,
+    exchange: str = "p2p",
+    impl: str = "ref",
+) -> tuple[DistBSMatrix, DistInverseStats]:
+    """Divide-and-conquer inverse factorization, resident end to end.
+
+    The two diagonal quadrants factorize independently
+    (:func:`dist_inv_chol`), the block-diagonal Z is glued resident, and the
+    refinement Z <- Z(I + delta/2) runs through the cached planners:
+
+    * ``spamm_tau > 0`` routes every refinement multiply through
+      ``dist_spamm(method="delta")`` — the prune pattern is a task mask over
+      the structure-keyed full plan, so a fluctuating ``tau``-prune never
+      misses the plan cache;
+    * ``trunc_tau > 0`` truncates the iterate with the hierarchical
+      subtree-drop descent, and its norm table is carried into the next
+      iteration's SpAMM (the transposed operand reuses the same table via
+      :func:`~repro.dist.collectives.transpose_permutation` — block norms
+      are transpose-invariant), so one fetch serves the whole iteration.
+
+    Convergence/divergence policy is the shared
+    :class:`~repro.core.inverse.RefineMonitor`; the best iterate is
+    returned resident with :class:`DistInverseStats`.
+    """
+    cache = cache if cache is not None else PlanCache()
+    nbr = -(-a.shape[0] // a.bs)
+    if nbr <= leaf_blocks:
+        host_a = a.gather()
+        z_host = _dense_inv_chol(host_a)
+        return scatter(z_host, a.mesh), DistInverseStats(
+            0, [], factorization_residual(host_a, z_host, impl="ref"),
+            [z_host.nnzb], cache.stats(), [],
+        )
+    depth = int(np.ceil(np.log2(nbr)))
+    split = 1 << (depth - 1)
+    a00 = dist_submatrix(a, 0, split, 0, split, cache)
+    a11 = dist_submatrix(a, split, nbr, split, nbr, cache)
+    kw = dict(leaf_blocks=leaf_blocks, exchange=exchange, impl=impl)
+    z00 = dist_inv_chol(a00, cache, **kw)
+    z11 = dist_inv_chol(a11, cache, **kw)
+    zero01 = dist_zeros((z00.shape[0], z11.shape[1]), a.bs, a.mesh, a.dtype)
+    zero10 = dist_zeros((z11.shape[0], z00.shape[1]), a.bs, a.mesh, a.dtype)
+    z = dist_assemble2x2(z00, zero01, zero10, z11, split, cache)
+
+    eye = scatter(identity(a.shape[0], a.bs, a.dtype), a.mesh)
+    # the SPD operand's norms never change: one fetch serves every iteration
+    a_norms = resident_block_norms(a, cache) if spamm_tau > 0 else None
+    monitor = RefineMonitor(tol)
+    best = z
+    history: list[float] = []
+    nnzbs: list[int] = []
+    per_iter: list[dict] = []
+    z_norms = None  # stack-order norm table of z, carried over from truncation
+    for it in range(max_iter):
+        snap, t0 = cache.snapshot(), time.perf_counter()
+        mult_err = 0.0
+        norm_fetch_bytes = 0
+        if spamm_tau > 0:
+            zt = dist_transpose(z, cache)
+            zt_norms = (
+                z_norms[transpose_permutation(z.coords)]
+                if z_norms is not None
+                else None
+            )
+            za, e1 = dist_spamm(
+                zt, a, spamm_tau, cache, exchange=exchange, impl=impl,
+                method=spamm_method, a_norms=zt_norms, b_norms=a_norms,
+            )
+            zaz, e2 = dist_spamm(
+                za, z, spamm_tau, cache, exchange=exchange, impl=impl,
+                method=spamm_method, b_norms=z_norms,
+            )
+            mult_err = max(e1, e2)
+        else:
+            zt = dist_transpose(z, cache)
+            za = dist_multiply(zt, a, cache, exchange=exchange, impl=impl)
+            zaz = dist_multiply(za, z, cache, exchange=exchange, impl=impl)
+        entry = (
+            cache.peek(cache.last_plan_key)
+            if cache.last_plan_key is not None
+            else None
+        )
+        plan = entry[0] if entry is not None else None
+        assert plan is None or isinstance(plan, SpgemmPlan)
+        delta = dist_add(eye, zaz, 1.0, -1.0, cache)
+        r = dist_frobenius_norm(delta, cache)
+        history.append(r)
+        nnzbs.append(z.nnzb)
+        nnzb_it = z.nnzb
+        stop = monitor.update(it, r)
+        if monitor.improved:
+            best = z
+        if not stop:
+            step = dist_add(eye, delta, 1.0, 0.5, cache)  # I + delta/2
+            if spamm_tau > 0:
+                z, e3 = dist_spamm(
+                    z, step, spamm_tau, cache, exchange=exchange, impl=impl,
+                    method=spamm_method, a_norms=z_norms,
+                )
+                mult_err = max(mult_err, e3)
+            else:
+                z = dist_multiply(z, step, cache, exchange=exchange, impl=impl)
+            z_norms = None
+            if trunc_tau > 0:
+                # one norm-table fetch serves the truncation descent and the
+                # next iteration's SpAMM (both orientations of Z)
+                pre_norms = resident_block_norms(z, cache)
+                norm_fetch_bytes = pre_norms.shape[0] * 4
+                info: dict = {}
+                z = dist_truncate_hierarchical(
+                    z, trunc_tau, cache, norms=pre_norms, stats=info
+                )
+                z_norms = pre_norms[info["kept"]]
+        per_iter.append(
+            dict(
+                iteration=it,
+                nnzb=nnzb_it,
+                residual=r,
+                spamm_err=mult_err,
+                recv_bytes_mean=(
+                    plan_stats(plan)["recv_bytes_mean"] if plan is not None else 0.0
+                ),
+                norm_fetch_bytes=norm_fetch_bytes,
+                wall_s=time.perf_counter() - t0,
+                **cache.delta(snap),
+            )
+        )
+        if stop:
+            break
+    return best, DistInverseStats(
+        len(history), history, monitor.best_r, nnzbs, cache.stats(), per_iter
+    )

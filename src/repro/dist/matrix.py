@@ -24,6 +24,7 @@ Layout invariants (relied on by every planner in this package):
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -32,10 +33,17 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.distributed import AXIS, make_worker_mesh
 from repro.core.matrix import BSMatrix, block_frobenius_norms
-from repro.core.quadtree import morton_encode
+from repro.core.quadtree import morton_encode, structure_fingerprint
 from repro.core.schedule import _owner_slots, partition_morton
+from repro.jax_compat import shard_map
 
-__all__ = ["DistBSMatrix", "scatter", "mesh_key", "resident_block_norms"]
+__all__ = [
+    "DistBSMatrix",
+    "scatter",
+    "dist_zeros",
+    "mesh_key",
+    "resident_block_norms",
+]
 
 
 def mesh_key(mesh: Mesh) -> tuple:
@@ -129,19 +137,93 @@ class DistBSMatrix:
         return dataclasses.replace(self, store=self.store.astype(dtype))
 
 
-def resident_block_norms(x: DistBSMatrix) -> np.ndarray:
+def _mapped_norms_psum(store, gpos, *, nnzb: int):
+    """Per-device block norms scattered to global stack positions, psum'd.
+
+    Each stack position receives its value from exactly one device (its
+    owner) plus zeros from the rest — float addition with +0.0 is exact, so
+    the result is bit-identical to fetching the padded table and indexing on
+    the host.  Padding rows scatter into the trash position ``nnzb``.
+    """
+    norms = block_frobenius_norms(store[0])  # [cap], float32
+    out = jnp.zeros((nnzb + 1,), norms.dtype).at[gpos[0]].add(norms)
+    return jax.lax.psum(out[:nnzb], AXIS)
+
+
+class NormTableExecutable:
+    """Fused device-side norm reduction + compaction for one structure.
+
+    The legacy path fetches the padded ``[P, cap]`` norm table and compacts
+    on the host; this executable scatters each device's valid block norms
+    into their global stack positions and ``psum``s over the worker axis, so
+    only the dense ``[nnzb]`` stack-order vector — the exact leaf bounds the
+    hierarchical descents consume — ever crosses device->host.
+    """
+
+    def __init__(self, x: DistBSMatrix):
+        gpos = np.full((x.nparts, x.cap), x.nnzb, dtype=np.int32)  # trash
+        gpos[x.owner, x.slot] = np.arange(x.nnzb, dtype=np.int32)
+        self._gpos = jax.device_put(
+            jnp.asarray(gpos), NamedSharding(x.mesh, P(AXIS))
+        )
+        self._mapped = jax.jit(
+            shard_map(
+                functools.partial(_mapped_norms_psum, nnzb=x.nnzb),
+                mesh=x.mesh,
+                in_specs=(P(AXIS), P(AXIS)),
+                out_specs=P(),
+                check_vma=False,
+            )
+        )
+
+    def __call__(self, store) -> np.ndarray:
+        return np.asarray(self._mapped(store, self._gpos))  # [nnzb] -> host
+
+
+def resident_block_norms(x: DistBSMatrix, cache=None) -> np.ndarray:
     """Per-block Frobenius norms in stack order from the resident store.
 
     Runs :func:`repro.core.matrix.block_frobenius_norms` — the exact kernel
     the host path uses, same accumulation dtype — on the ``[P, cap, bs, bs]``
-    store; only the tiny ``[P, cap]`` norm table crosses device->host (the
-    block data stays resident).  Host and resident SpAMM / hierarchical
-    truncation therefore make identical prune decisions near ``tau``.
+    store, so host and resident SpAMM / hierarchical truncation make
+    identical prune decisions near ``tau``.  With a
+    :class:`~repro.dist.cache.PlanCache`, the reduction and the compaction
+    are fused on device (:class:`NormTableExecutable`, cached per structure):
+    only the ``[nnzb]`` stack-order vector crosses device->host instead of
+    the padded ``[P, cap]`` table, with bit-identical values (tested).
     """
     if x.nnzb == 0:
         return np.zeros((0,), dtype=np.float64)
+    if cache is not None:
+        key = (
+            "norms",
+            structure_fingerprint(x.codes(), x.owner, x.nparts, x.bs),
+            mesh_key(x.mesh),
+        )
+        exe = cache.get_or_build(key, lambda: NormTableExecutable(x))
+        return exe(x.store).astype(np.float64)
     table = np.asarray(block_frobenius_norms(x.store))  # [P, cap] -> host
     return table[x.owner, x.slot].astype(np.float64)
+
+
+def dist_zeros(
+    shape: tuple[int, int], bs: int, mesh: Mesh, dtype=jnp.float32
+) -> DistBSMatrix:
+    """Structurally-empty resident matrix (cap-1 padding store, no blocks)."""
+    store = jax.device_put(
+        jnp.zeros((int(mesh.devices.size), 1, bs, bs), dtype=dtype),
+        _store_sharding(mesh),
+    )
+    return DistBSMatrix(
+        shape=tuple(shape),
+        bs=bs,
+        coords=np.zeros((0, 2), dtype=np.int64),
+        owner=np.zeros((0,), dtype=np.int32),
+        slot=np.zeros((0,), dtype=np.int32),
+        cap=1,
+        store=store,
+        mesh=mesh,
+    )
 
 
 def scatter(

@@ -19,6 +19,7 @@ from __future__ import annotations
 import dataclasses
 import time
 
+import numpy as np
 from jax.sharding import Mesh
 
 from repro.core.add import add_scaled_identity, identity
@@ -32,13 +33,19 @@ from .collectives import (
     dist_add,
     dist_frobenius_norm,
     dist_trace,
+    dist_transpose,
     dist_truncate,
     dist_truncate_hierarchical,
 )
 from .matrix import DistBSMatrix, resident_block_norms, scatter
 from .multiply import dist_multiply, dist_spamm
 
-__all__ = ["dist_sp2_purify", "DistPurifyStats"]
+__all__ = [
+    "dist_sp2_purify",
+    "DistPurifyStats",
+    "dist_sqrt_inv_pipeline",
+    "SqrtInvPipelineStats",
+]
 
 
 @dataclasses.dataclass
@@ -77,7 +84,8 @@ def dist_sp2_purify(
     impl: str = "ref",
     exchange: str = "p2p",
     cache: PlanCache | None = None,
-) -> tuple[BSMatrix, DistPurifyStats]:
+    return_resident: bool = False,
+) -> tuple[BSMatrix | DistBSMatrix, DistPurifyStats]:
     """SP2 purification with every iterate resident on the worker mesh.
 
     Accepts a host ``BSMatrix`` (scattered once) or an already-resident
@@ -99,6 +107,10 @@ def dist_sp2_purify(
     once the sparsity pattern stabilizes an iteration incurs *zero*
     plan-cache misses even while the ``tau``-prune pattern fluctuates — the
     inner loop is pure device work.
+
+    ``return_resident=True`` skips the boundary gather and returns the best
+    iterate as a :class:`~repro.dist.matrix.DistBSMatrix` — pipeline callers
+    (:func:`dist_sqrt_inv_pipeline`) keep chaining resident operations on it.
     """
     cache = cache if cache is not None else PlanCache()
     scale, shift = sp2_init_coeffs(lmin, lmax)
@@ -122,8 +134,7 @@ def dist_sp2_purify(
     best = x
     x_norms = None  # stack-order norm table of x, carried over from truncation
     for it in range(max_iter):
-        h0, m0 = cache.hits, cache.misses
-        b0, s0, t0 = cache.build_s, cache.symbolic_s, time.perf_counter()
+        snap, t0 = cache.snapshot(), time.perf_counter()
         if spamm_tau > 0:
             x2, mult_err = dist_spamm(
                 x, x, spamm_tau, cache,
@@ -164,7 +175,7 @@ def dist_sp2_purify(
                     # and the next iteration's SpAMM: compaction keeps block
                     # values, so the kept subset of the table is the
                     # truncated matrix's
-                    pre_norms = resident_block_norms(x)
+                    pre_norms = resident_block_norms(x, cache)
                     info: dict = {}
                     x = dist_truncate_hierarchical(
                         x, trunc_tau, cache, norms=pre_norms, stats=info
@@ -181,19 +192,157 @@ def dist_sp2_purify(
                 nnzb=nnzb_it,
                 idem=idem,
                 trace=tr,
-                cache_hits=cache.hits - h0,
-                cache_misses=cache.misses - m0,
                 spamm_err=mult_err,
                 recv_bytes_mean=(
                     plan_stats(plan)["recv_bytes_mean"] if plan is not None else 0.0
                 ),
-                plan_build_s=cache.build_s - b0,
-                symbolic_s=cache.symbolic_s - s0,
                 wall_s=time.perf_counter() - t0,
+                **cache.delta(snap),
             )
         )
         if stop:
             break
-    return best.gather(), DistPurifyStats(
+    return (best if return_resident else best.gather()), DistPurifyStats(
         len(traces), traces, idems, nnzbs, cache.stats(), per_iter
+    )
+
+
+# --------------------------------------------------------------------------
+# end-to-end SPD pipeline: S -> Z -> Z^T H Z -> SP2 (-> Z D Z^T)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SqrtInvPipelineStats:
+    """Per-stage metrics of :func:`dist_sqrt_inv_pipeline`.
+
+    ``inverse`` / ``purify`` are the stage drivers' own stats objects
+    (refinement iterations, per-iteration plan hit/miss rows, bytes moved);
+    ``congruence`` and ``back_transform`` carry the cache deltas and wall
+    time of the two multiply pairs; ``bounds`` records the (lmin, lmax) the
+    SP2 stage ran with (estimated from the resident norm table when the
+    caller supplied none); ``cache`` is the shared PlanCache at exit.
+    """
+
+    inverse: object  # DistInverseStats
+    purify: DistPurifyStats
+    congruence: dict
+    back_transform: dict | None
+    bounds: tuple
+    cache: dict
+
+
+def _spectral_bounds_from_norms(coords, norms) -> tuple[float, float]:
+    """Symmetric spectral enclosure from the resident block-norm table.
+
+    ``||F||_2 <= max_i sum_j ||F_ij||_2 <= max_i sum_j ||F_ij||_F`` — a
+    block row-sum (Gershgorin-style) bound computed from the tiny norm
+    table, so estimating SP2's eigenvalue interval costs no extra block
+    data transfer.  Loose bounds cost SP2 iterations, never correctness.
+    """
+    rows = np.asarray(coords)[:, 0]
+    sums = np.zeros(int(rows.max()) + 1 if rows.size else 1, dtype=np.float64)
+    np.add.at(sums, rows, np.asarray(norms, dtype=np.float64))
+    b = float(sums.max()) if rows.size else 0.0
+    if b == 0.0:
+        return -1.0, 1.0  # F == 0: any nondegenerate enclosure of {0} works
+    return -b, b
+
+
+def dist_sqrt_inv_pipeline(
+    s: BSMatrix | DistBSMatrix,
+    h: BSMatrix | DistBSMatrix,
+    n_occ: float,
+    mesh: Mesh | None = None,
+    *,
+    lmin: float | None = None,
+    lmax: float | None = None,
+    tol: float = 1e-8,
+    max_iter: int = 100,
+    idem_tol: float = 1e-8,
+    trunc_tau: float = 0.0,
+    spamm_tau: float = 0.0,
+    leaf_blocks: int = 1,
+    impl: str = "ref",
+    exchange: str = "p2p",
+    cache: PlanCache | None = None,
+    transform_back: bool = True,
+) -> tuple[BSMatrix, SqrtInvPipelineStats]:
+    """The paper's full electronic-structure workflow, resident end to end.
+
+    Overlap matrix S -> inverse factor Z (localized inverse factorization,
+    Z^T S Z = I) -> congruence transform F = Z^T H Z into the orthonormal
+    basis -> SP2 purification of F -> density matrix back in the original
+    basis, D = Z D_ortho Z^T (skipped with ``transform_back=False``).  S and
+    H enter the mesh once (or arrive already resident); every intermediate
+    stays sharded; the returned density matrix is the single boundary
+    gather.  All stages share one :class:`~repro.dist.cache.PlanCache`, so
+    structures recurring across stages (Z, its transpose, the stabilized
+    SP2 iterate) are planned and compiled exactly once.
+
+    When ``lmin`` / ``lmax`` are omitted, the SP2 eigenvalue interval is
+    estimated from F's resident norm table (block Gershgorin row sums — no
+    block data leaves the mesh for it).
+    """
+    from .inverse import dist_localized_inverse_factorization
+
+    cache = cache if cache is not None else PlanCache()
+    if isinstance(s, DistBSMatrix):
+        assert mesh is None or list(mesh.devices.flat) == list(
+            s.mesh.devices.flat
+        ), "resident S lives on a different device set than the given mesh"
+        mesh = s.mesh
+        ds = s
+    else:
+        mesh = mesh or make_worker_mesh()
+        ds = scatter(s, mesh)
+    if isinstance(h, DistBSMatrix):
+        assert list(h.mesh.devices.flat) == list(mesh.devices.flat), (
+            "resident H lives on a different device set than S's mesh"
+        )
+        dh = h
+    else:
+        dh = scatter(h, mesh)
+    assert ds.shape == dh.shape and ds.bs == dh.bs, (ds.shape, dh.shape)
+
+    z, inv_stats = dist_localized_inverse_factorization(
+        ds, cache, tol=tol, max_iter=max_iter, trunc_tau=trunc_tau,
+        spamm_tau=spamm_tau, leaf_blocks=leaf_blocks, exchange=exchange,
+        impl=impl,
+    )
+
+    snap, t0 = cache.snapshot(), time.perf_counter()
+    zt = dist_transpose(z, cache)
+    f_ortho = dist_multiply(
+        dist_multiply(zt, dh, cache, exchange=exchange, impl=impl),
+        z, cache, exchange=exchange, impl=impl,
+    )
+    congruence = dict(wall_s=time.perf_counter() - t0, **cache.delta(snap))
+
+    if lmin is None or lmax is None:
+        lo, hi = _spectral_bounds_from_norms(
+            f_ortho.coords, resident_block_norms(f_ortho, cache)
+        )
+        lmin = lo if lmin is None else lmin
+        lmax = hi if lmax is None else lmax
+
+    d_ortho, purify_stats = dist_sp2_purify(
+        f_ortho, n_occ, lmin, lmax, max_iter=max_iter, idem_tol=idem_tol,
+        trunc_tau=trunc_tau, spamm_tau=spamm_tau, impl=impl,
+        exchange=exchange, cache=cache, return_resident=True,
+    )
+
+    back = None
+    if transform_back:
+        snap, t0 = cache.snapshot(), time.perf_counter()
+        d = dist_multiply(
+            dist_multiply(z, d_ortho, cache, exchange=exchange, impl=impl),
+            zt, cache, exchange=exchange, impl=impl,
+        )
+        back = dict(wall_s=time.perf_counter() - t0, **cache.delta(snap))
+        result = d.gather()
+    else:
+        result = d_ortho.gather()
+    return result, SqrtInvPipelineStats(
+        inv_stats, purify_stats, congruence, back, (lmin, lmax), cache.stats()
     )

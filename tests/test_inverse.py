@@ -3,6 +3,7 @@ import pytest
 
 from repro.core import (
     BSMatrix,
+    SymbolicCache,
     factorization_residual,
     inv_chol,
     localized_inverse_factorization,
@@ -35,9 +36,50 @@ def test_inv_chol_non_power_of_two_blocks():
 
 def test_localized_inverse_factorization():
     a = spd_banded(64, 3, 8)
-    z, hist = localized_inverse_factorization(a, tol=1e-5, max_iter=60)
+    z, stats = localized_inverse_factorization(a, tol=1e-5, max_iter=60)
+    hist = stats.residual_history
     assert hist[-1] < 1e-4
     assert hist[0] > hist[-1]  # refinement reduced the residual
+    assert stats.factorization_residual <= hist[-1] + 1e-12
+
+
+def test_localized_inverse_factorization_symbolic_cache():
+    # the refinement loop threads its multiplies through a SymbolicCache;
+    # once the iterate's sparsity pattern stabilizes, iterations are all hits
+    a = spd_banded(64, 3, 8)
+    cache = SymbolicCache()
+    z, stats = localized_inverse_factorization(
+        a, tol=1e-5, max_iter=60, cache=cache
+    )
+    assert stats.residual_history[-1] < 1e-4
+    assert stats.symbolic_cache["hits"] > 0
+    # the converged iteration's sparsity pattern has been seen -> all hits
+    assert stats.cache_misses_history[-1] == 0
+    assert stats.cache_hits_history[-1] > 0
+    # SCF-style repeated solve on the same structure: zero symbolic work
+    m0 = cache.misses
+    z2, stats2 = localized_inverse_factorization(
+        a, tol=1e-5, max_iter=60, cache=cache
+    )
+    assert cache.misses == m0
+    assert all(m == 0 for m in stats2.cache_misses_history)
+    assert np.array_equal(z2.coords, z.coords)
+
+
+def test_inv_chol_symbolic_cache_and_parity():
+    a = spd_banded(64, 5, 8)
+    cache = SymbolicCache()
+    z_cached = inv_chol(a, cache=cache)
+    z_plain = inv_chol(a)
+    assert np.array_equal(z_cached.coords, z_plain.coords)
+    assert np.allclose(
+        np.asarray(z_cached.data), np.asarray(z_plain.data), atol=1e-6
+    )
+    # repeated factorization on the same structure reuses every symbolic phase
+    h0, m0 = cache.hits, cache.misses
+    inv_chol(a, cache=cache)
+    assert cache.misses == m0 and cache.hits > h0
+    assert factorization_residual(a, z_cached, cache=cache) < 1e-4
 
 
 def test_purification_matches_dense_eig():

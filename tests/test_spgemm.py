@@ -218,6 +218,57 @@ def test_spamm_leaf_method_still_available():
         assert np.linalg.norm(c.to_dense() - ref) <= e + 1e-3
 
 
+# -- symmetric hierarchy descent (syrk / symm_square) ------------------------
+
+
+def _upper_filter_flat(a, at):
+    """The old enumerate-then-filter symbolic path for C = A @ A^T, kept as
+    the reference the upper_only descent must reproduce bit-for-bit."""
+    from repro.core.spgemm import Tasks
+
+    tasks = spgemm_symbolic(a.coords, at.coords)
+    keep = tasks.c_coords[tasks.c_idx, 0] <= tasks.c_coords[tasks.c_idx, 1]
+    kept_out = np.unique(tasks.c_idx[keep])
+    remap = -np.ones(tasks.num_out, dtype=np.int64)
+    remap[kept_out] = np.arange(kept_out.size)
+    return Tasks(
+        a_idx=tasks.a_idx[keep],
+        b_idx=tasks.b_idx[keep],
+        c_idx=remap[tasks.c_idx[keep]],
+        c_coords=tasks.c_coords[kept_out],
+    )
+
+
+@given(n=st.integers(8, 64), bs=st.sampled_from([4, 8]), seed=st.integers(0, 8))
+@settings(max_examples=20, deadline=None)
+def test_symmetric_descent_bit_identical_to_flat_filter(n, bs, seed):
+    a = random_block_matrix(n, bs, 0.4, seed)
+    at = a.transpose()
+    ref = _upper_filter_flat(a, at)
+    depth = _common_depth(a, at)
+    tree = spgemm_symbolic_tree(
+        a.quadtree_index(depth), at.quadtree_index(depth), upper_only=True
+    )
+    assert np.array_equal(ref.a_idx, tree.a_idx)
+    assert np.array_equal(ref.b_idx, tree.b_idx)
+    assert np.array_equal(ref.c_idx, tree.c_idx)
+    assert np.array_equal(ref.c_coords, tree.c_coords)
+
+
+def test_symmetric_descent_halves_visits():
+    from repro.core.spgemm import _tree_descend
+
+    a = random_block_matrix(128, 8, 0.6, seed=2)
+    at = a.transpose()
+    depth = _common_depth(a, at)
+    ia, ib = a.quadtree_index(depth), at.quadtree_index(depth)
+    _, _, _, v_full = _tree_descend(ia, ib, tau=None)
+    _, _, _, v_upper = _tree_descend(ia, ib, tau=None, upper_only=True)
+    # strictly-lower subtrees are dropped mid-descent: the symmetric
+    # descent visits roughly half the node pairs of the full one
+    assert v_upper < 0.65 * v_full, (v_upper, v_full)
+
+
 # -- satellite: syrk / symm_square / truncate_elementwise edge cases ---------
 
 
