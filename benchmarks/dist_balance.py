@@ -1,0 +1,157 @@
+"""Dynamic load balancing on the paper's matrix sequences — perf trajectory.
+
+Runs distributed SP2 purification on the three structure families from
+``benchmarks/spamm_sequences.py`` (banded, exp-decay, random-offdiag) on an
+8-worker CPU mesh, from a deliberately skewed initial layout (every block on
+worker 0 — the scatter a naive driver produces), comparing:
+
+* ``static``      — the layout is never revisited (rebalance=None);
+* ``rebalanced``  — ``RebalancePolicy()``: the measured per-worker cost model
+                    (:mod:`repro.dist.balance`) re-lays the iterate out on
+                    device whenever the combined max/mean imbalance crosses
+                    the threshold.
+
+Reported per (structure, mode): measured imbalance trajectory (max / mean /
+tail), wall seconds per iteration, bytes migrated by re-layouts, and plan
+cache misses.  Results are written machine-readable to
+``BENCH_balance.json`` at the repo root so future PRs can track the
+trajectory.
+
+Run:   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+       PYTHONPATH=src python benchmarks/dist_balance.py [--smoke]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+import spamm_sequences  # noqa: E402  (banded / exp_decay / random_offdiag)
+from repro.core import BSMatrix  # noqa: E402
+from repro.core.distributed import make_worker_mesh  # noqa: E402
+from repro.dist import (  # noqa: E402
+    PlanCache,
+    RebalancePolicy,
+    dist_sp2_purify,
+    scatter,
+)
+
+P = 8
+BS = spamm_sequences.BS  # 16
+IDEM_TOL, TRUNC_TAU, SPAMM_TAU = 1e-5, 1e-5, 1e-6
+OUT_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_balance.json")
+
+
+def sequences(n: int) -> dict[str, BSMatrix]:
+    """The three paper-style structures, SP2-ready (symmetric + spread)."""
+    raw = {
+        "banded": spamm_sequences.banded(n, 24),
+        "exp-decay": spamm_sequences.exp_decay(n, rate=0.08),
+        "random-offdiag": spamm_sequences.random_offdiag(n, density=0.08),
+    }
+    out = {}
+    for name, a in raw.items():
+        d = np.asarray(a.to_dense(), dtype=np.float64)
+        h = 0.2 * (d + d.T) / (2 * max(np.abs(d).max(), 1e-12))
+        h += np.diag(np.linspace(-1.0, 1.0, n))
+        out[name] = BSMatrix.from_dense(h.astype(np.float32), BS)
+    return out
+
+
+def eig_bounds(f: BSMatrix) -> tuple[float, float]:
+    w = np.linalg.eigvalsh(np.asarray(f.to_dense(), np.float64))
+    return float(w.min()) - 0.05, float(w.max()) + 0.05
+
+
+def run_mode(f, nocc, lmin, lmax, mesh, policy, max_iter):
+    skew = np.zeros(f.nnzb, dtype=np.int32)  # skewed initial layout
+    df = scatter(f, mesh, owner=skew)
+    cache = PlanCache()
+    t0 = time.perf_counter()
+    d, st = dist_sp2_purify(
+        df, nocc, lmin, lmax, max_iter=max_iter, idem_tol=IDEM_TOL,
+        trunc_tau=TRUNC_TAU, spamm_tau=SPAMM_TAU, cache=cache,
+        rebalance=policy,
+    )
+    total = time.perf_counter() - t0
+    imbs = [pi["imbalance"] for pi in st.per_iter if pi["imbalance"] is not None]
+    misses = [pi["cache_misses"] for pi in st.per_iter]
+    return d, dict(
+        iterations=st.iterations,
+        rebalances=st.rebalances,
+        wall_s_total=total,
+        wall_s_per_iter=total / max(st.iterations, 1),
+        imbalance_max=float(max(imbs)) if imbs else None,
+        imbalance_mean=float(np.mean(imbs)) if imbs else None,
+        imbalance_tail=float(np.mean(imbs[-3:])) if imbs else None,
+        imbalance_per_iter=[float(i) for i in imbs],
+        migrated_bytes_total=int(sum(pi["migrated_bytes"] for pi in st.per_iter)),
+        plan_misses_total=int(sum(misses)),
+        plan_misses_tail=[int(m) for m in misses[-3:]],
+        cache=dict(hits=st.cache["hits"], misses=st.cache["misses"]),
+    )
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv
+    n = 256 if smoke else 512
+    max_iter = 25 if smoke else 40
+    assert jax.device_count() == P, f"need {P} devices, got {jax.device_count()}"
+    mesh = make_worker_mesh(P)
+
+    results: dict = {}
+    for name, f in sequences(n).items():
+        nocc = int(0.3 * n)
+        lmin, lmax = eig_bounds(f)
+        print(f"\n== {name}: n={n} bs={BS} nnzb={f.nnzb} workers={P} "
+              f"(skewed initial layout: all blocks on worker 0) ==")
+        row: dict = {}
+        d_ref = None
+        for mode, policy in (("static", None), ("rebalanced", RebalancePolicy())):
+            d, r = run_mode(f, nocc, lmin, lmax, mesh, policy, max_iter)
+            if d_ref is None:
+                d_ref = d
+            else:
+                bitwise = bool(np.array_equal(
+                    np.asarray(d_ref.to_dense()), np.asarray(d.to_dense())))
+                r["bit_identical_to_static"] = bitwise
+                assert bitwise, "re-layouts changed the math"
+            row[mode] = r
+            print(f"  [{mode:10s}] iters={r['iterations']:3d}  "
+                  f"wall/iter {r['wall_s_per_iter']*1e3:7.1f} ms  "
+                  f"imb max {r['imbalance_max']:.2f} mean {r['imbalance_mean']:.3f} "
+                  f"tail {r['imbalance_tail']:.3f}  "
+                  f"migrated {r['migrated_bytes_total']/1e3:.1f} kB  "
+                  f"misses {r['plan_misses_total']} (tail {r['plan_misses_tail']})")
+        ratio = row["static"]["imbalance_max"] / row["rebalanced"]["imbalance_max"]
+        row["peak_imbalance_reduction"] = float(ratio)
+        print(f"  peak imbalance reduction: {ratio:.2f}x")
+        results[name] = row
+
+    payload = dict(
+        meta=dict(
+            n=n, bs=BS, workers=P, smoke=smoke, max_iter=max_iter,
+            idem_tol=IDEM_TOL, trunc_tau=TRUNC_TAU, spamm_tau=SPAMM_TAU,
+            initial_layout="all blocks on worker 0",
+            policy=dict(RebalancePolicy().__dict__),
+        ),
+        structures=results,
+    )
+    with open(OUT_PATH, "w") as fh:
+        json.dump(payload, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    print(f"\nwrote {os.path.abspath(OUT_PATH)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -43,6 +43,11 @@ class SymbolicCache:
         # repro.dist.multiply so drivers can peek the plan actually executed,
         # delta/SpAMM included); None when the last call built no plan
         self.last_plan_key: Hashable | None = None
+        # per-worker count of tasks the most recent multiply-family call
+        # actually executed (delta-plan SpAMM masks tasks at runtime, so the
+        # plan's static task_count overstates the work) — the measured flop
+        # load the dynamic load balancer (repro.dist.balance) consumes
+        self.last_task_count = None
         # accumulated seconds spent in cache-miss builders (planning + jit)
         # and in per-call symbolic phases that run outside the cache (SpAMM
         # descent, hierarchical truncation selection — value-dependent work)

@@ -20,9 +20,15 @@ import dataclasses
 
 import numpy as np
 
-from .matrix import BSMatrix
+from .matrix import BSMatrix, block_frobenius_norms
 
-__all__ = ["LeafSpec", "inner_masks", "exact_spgemm_flops", "nnz_elements"]
+__all__ = [
+    "LeafSpec",
+    "inner_masks",
+    "inner_norms",
+    "exact_spgemm_flops",
+    "nnz_elements",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,6 +48,23 @@ def inner_masks(a: BSMatrix, spec: LeafSpec) -> np.ndarray:
     data = np.asarray(a.data)
     blocks = data.reshape(a.nnzb, ni, ibs, ni, ibs)
     return np.any(blocks != 0, axis=(2, 4))
+
+
+def inner_norms(a: BSMatrix, spec: LeafSpec) -> np.ndarray:
+    """Float64 [nnzb, ni, ni]: Frobenius norm of each internal block.
+
+    The leaf-policy view of the norm table: zero internal blocks (the ones a
+    ``block_sparse`` / ``hierarchical`` policy neither stores nor counts) are
+    exact zeros, so these matrices are simultaneously the inner sparsity mask
+    and the ingredient of the tightened SpAMM leaf bound
+    ``||Na @ Nb||_F <= ||A_leaf||_F * ||B_leaf||_F``
+    (:func:`repro.core.spgemm.spamm` with ``leaf_spec=``).  Under
+    ``kind="dense"`` the internal block IS the leaf (``ni == 1``) and the
+    bound degenerates to the plain norm product.
+    """
+    ibs = a.bs if spec.kind == "dense" else spec.inner_bs
+    assert a.bs % ibs == 0
+    return np.asarray(block_frobenius_norms(a.data, inner=ibs), dtype=np.float64)
 
 
 def nnz_elements(a: BSMatrix, spec: LeafSpec) -> int:

@@ -13,6 +13,7 @@ three leaf matrix libraries; see that module).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Sequence
 
 import jax
@@ -268,13 +269,29 @@ class BSMatrix:
         return dataclasses.replace(self, data=self.data.astype(dtype))
 
 
-@jax.jit
-def block_frobenius_norms(data: jax.Array) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("inner",))
+def block_frobenius_norms(data: jax.Array, inner: int | None = None) -> jax.Array:
     """Frobenius norm over the trailing (bs, bs) axes; any leading batch shape.
 
     The single norm kernel shared by host block stacks ``[nnzb, bs, bs]`` and
     the resident per-device stores ``[P, cap, bs, bs]``
     (:func:`repro.dist.matrix.resident_block_norms`) — one accumulation dtype,
     so host and resident SpAMM/truncation prune decisions agree bit-for-bit.
+
+    ``inner`` (a divisor of ``bs``) switches to the leaf-policy resolution of
+    :class:`repro.core.leaf.LeafSpec`: the result gains trailing ``(ni, ni)``
+    axes holding the Frobenius norm of each ``inner x inner`` internal block.
+    Zero internal blocks — the ones a ``block_sparse`` leaf policy neither
+    stores nor counts — come out as exact zeros, so the inner-norm matrices
+    double as the leaf's inner sparsity mask and feed the tightened SpAMM
+    product bound ``||Na @ Nb||_F <= ||A||_F ||B||_F``
+    (:func:`repro.core.spgemm.spamm` with ``leaf_spec=``).  The default path
+    (``inner=None``) is byte-for-byte the original kernel.
     """
-    return jnp.sqrt(jnp.sum(jnp.square(data.astype(jnp.float32)), axis=(-2, -1)))
+    if inner is None:
+        return jnp.sqrt(jnp.sum(jnp.square(data.astype(jnp.float32)), axis=(-2, -1)))
+    bs = data.shape[-1]
+    assert bs % inner == 0, (bs, inner)
+    ni = bs // inner
+    tiles = data.reshape(*data.shape[:-2], ni, inner, ni, inner)
+    return jnp.sqrt(jnp.sum(jnp.square(tiles.astype(jnp.float32)), axis=(-3, -1)))

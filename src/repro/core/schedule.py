@@ -37,6 +37,7 @@ __all__ = [
     "SpgemmPlan",
     "make_spgemm_plan",
     "plan_stats",
+    "plan_worker_bytes",
     "structure_fingerprint",
     "plan_fetch",
     "local_fetch_index",
@@ -429,20 +430,25 @@ def make_spgemm_plan(
     )
 
 
-def plan_stats(plan: SpgemmPlan) -> dict:
-    """Schedule quality metrics — the paper's Fig 1 quantities.
+def plan_worker_bytes(plan: SpgemmPlan) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-worker exchange bytes of a plan: (recv_actual, send_actual, recv_padded).
 
-    * flop balance: max/mean tasks per device (CHT's load balancing claim)
-    * recv bytes per device: actual (true counts) and padded (what the SPMD
-      program moves) — Fig 1c 'data received per worker process'.
+    ``recv_actual`` / ``send_actual`` count the true (unpadded) operand blocks
+    each worker receives / ships during the planned exchange rounds;
+    ``recv_padded`` is what the SPMD program physically moves (uniform padded
+    payloads per ``ppermute`` round).  This is the per-worker breakdown the
+    dynamic load-balancing cost model (:mod:`repro.dist.balance`) consumes —
+    a skewed operand layout shows up as one worker shipping everything.
     """
     P = plan.nparts
     itemsize = 4
     blk = plan.bs * plan.bs * itemsize
     recv_actual = np.zeros(P, dtype=np.float64)
+    send_actual = np.zeros(P, dtype=np.float64)
     recv_padded = np.zeros(P, dtype=np.float64)
     if plan.exchange == "allgather":
-        # every device receives everyone else's full (padded) store
+        # every device receives everyone else's full (padded) store and ships
+        # its own store to the other P-1 devices
         per_dev = (P - 1) * (plan.a_cap + plan.b_cap) * blk
         recv_padded[:] = per_dev
         a_counts = np.bincount(plan.a_owner, minlength=P)
@@ -450,6 +456,7 @@ def plan_stats(plan: SpgemmPlan) -> dict:
         recv_actual[:] = (a_counts.sum() + b_counts.sum()) * blk  # upper: full matrices
         for p in range(P):
             recv_actual[p] -= (a_counts[p] + b_counts[p]) * blk
+            send_actual[p] = (P - 1) * (a_counts[p] + b_counts[p]) * blk
     else:
         for offs, send_cnt, send_pad in (
             (plan.a_offsets, plan.a_send_count, plan.a_send),
@@ -460,7 +467,23 @@ def plan_stats(plan: SpgemmPlan) -> dict:
                 for src in range(P):
                     dst = (src + d) % P
                     recv_actual[dst] += cnt[src] * blk
+                    send_actual[src] += cnt[src] * blk
                     recv_padded[dst] += send_pad[d].shape[1] * blk
+    return recv_actual, send_actual, recv_padded
+
+
+def plan_stats(plan: SpgemmPlan) -> dict:
+    """Schedule quality metrics — the paper's Fig 1 quantities.
+
+    * flop balance: max/mean tasks per device (CHT's load balancing claim)
+    * recv bytes per device: actual (true counts) and padded (what the SPMD
+      program moves) — Fig 1c 'data received per worker process'.
+    * per-worker breakdown (``tasks_per_worker`` / ``recv_bytes_per_worker``
+      / ``send_bytes_per_worker``) — the raw vectors the dynamic
+      load-balancing cost model (:mod:`repro.dist.balance`) weighs.
+    """
+    P = plan.nparts
+    recv_actual, send_actual, recv_padded = plan_worker_bytes(plan)
     tasks = plan.task_count.astype(np.float64)
     mean_t = max(tasks.mean(), 1e-12)
     return dict(
@@ -472,4 +495,7 @@ def plan_stats(plan: SpgemmPlan) -> dict:
         recv_bytes_max=float(recv_actual.max()),
         recv_bytes_padded_mean=float(recv_padded.mean()),
         n_offsets=len(plan.a_offsets) + len(plan.b_offsets),
+        tasks_per_worker=plan.task_count.astype(np.int64).tolist(),
+        recv_bytes_per_worker=recv_actual.tolist(),
+        send_bytes_per_worker=send_actual.tolist(),
     )

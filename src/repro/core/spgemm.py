@@ -328,6 +328,57 @@ def task_flops(tasks: Tasks, bs: int) -> float:
     return 2.0 * float(tasks.num_tasks) * bs**3
 
 
+def _prune_tasks(tasks: Tasks, keep: np.ndarray) -> Tasks:
+    """Restrict a task list to a bool keep mask, dropping orphaned C blocks."""
+    kept_out = np.unique(tasks.c_idx[keep])
+    remap = -np.ones(tasks.num_out, dtype=np.int64)
+    remap[kept_out] = np.arange(kept_out.size)
+    return Tasks(
+        a_idx=tasks.a_idx[keep],
+        b_idx=tasks.b_idx[keep],
+        c_idx=remap[tasks.c_idx[keep]],
+        c_coords=tasks.c_coords[kept_out],
+    )
+
+
+def _refine_leaf_spamm(
+    a: BSMatrix, b: BSMatrix, tasks: Tasks, tau: float, err: float, leaf_spec
+) -> tuple[Tasks, float]:
+    """Leaf-policy SpAMM refinement: inner-norm product bounds per kept task.
+
+    The hierarchical descent prunes with the leaf bound
+    ``||A_leaf||_F * ||B_leaf||_F``; for leaves carrying internal sparsity
+    (:class:`repro.core.leaf.LeafSpec` ``block_sparse`` / ``hierarchical``)
+    the tighter ``||Na @ Nb||_F`` holds, where ``Na[i, k] = ||A_ik||_F`` over
+    the internal blocks: per internal output block,
+    ``||(AB)_ij||_F <= sum_k ||A_ik||_F ||B_kj||_F = (Na Nb)_ij``, and by
+    Cauchy-Schwarz ``||Na Nb||_F <= ||Na||_F ||Nb||_F`` — so tasks whose
+    internal structures barely overlap (disjoint inner masks bound to ~0) are
+    dropped within the remaining ``tau`` budget even though their full-leaf
+    norm product survived the descent.  Under ``kind="dense"`` the internal
+    block is the whole leaf and the bound degenerates to the descent's own,
+    so nothing extra can be pruned: the task list is returned untouched,
+    bit-identical to the plain path (regression-tested).
+    """
+    from .leaf import inner_norms
+
+    ibs = a.bs if leaf_spec.kind == "dense" else leaf_spec.inner_bs
+    if a.bs // ibs <= 1 or tasks.num_tasks == 0:
+        return tasks, err
+    na = inner_norms(a, leaf_spec)  # [nnzb_a, ni, ni]
+    nb = inner_norms(b, leaf_spec)
+    prod = np.einsum("tik,tkj->tij", na[tasks.a_idx], nb[tasks.b_idx])
+    bound = np.sqrt(np.sum(prod**2, axis=(1, 2)))
+    order = np.argsort(bound)
+    csum = np.cumsum(bound[order])
+    ndrop = int(np.searchsorted(csum, tau - err, side="right"))
+    if ndrop == 0:
+        return tasks, err
+    keep = np.ones(tasks.num_tasks, dtype=bool)
+    keep[order[:ndrop]] = False
+    return _prune_tasks(tasks, keep), err + float(csum[ndrop - 1])
+
+
 def spgemm_numeric(
     a_data: jax.Array,
     b_data: jax.Array,
@@ -451,6 +502,7 @@ def spamm(
     *,
     impl: str = "auto",
     method: str = "hierarchical",
+    leaf_spec=None,
 ):
     """Sparse approximate multiply (paper: SpAMM task type).
 
@@ -462,12 +514,21 @@ def spamm(
     (:func:`spamm_symbolic`): a dropped subtree pair is never enumerated, so
     the symbolic cost shrinks with the dropped work.  ``method="leaf"`` is
     the flat reference: enumerate every leaf task, then prune.
+
+    ``leaf_spec`` (a :class:`repro.core.leaf.LeafSpec`) extends either
+    method's pruning below leaf granularity: surviving tasks are re-bounded
+    with the inner-norm product ``||Na @ Nb||_F`` (tighter than the leaf
+    norm product for block-sparse leaves; identical to it for
+    ``kind="dense"``) and further pruned within the remaining budget — see
+    :func:`_refine_leaf_spamm`.
     """
     if method == "hierarchical":
         depth = _common_depth(a, b)
         tasks, err, _ = spamm_symbolic(
             a.quadtree_index(depth), b.quadtree_index(depth), tau
         )
+        if leaf_spec is not None:
+            tasks, err = _refine_leaf_spamm(a, b, tasks, tau, err, leaf_spec)
         if tasks.num_tasks == 0:
             return BSMatrix.zeros((a.shape[0], b.shape[1]), a.bs, a.dtype), err
         data = spgemm_numeric(a.data, b.data, tasks, impl=impl)
@@ -493,16 +554,11 @@ def spamm(
     drop = np.zeros(tasks.num_tasks, dtype=bool)
     drop[order[:ndrop]] = True
     err = float(csum[ndrop - 1]) if ndrop else 0.0
-    keep = ~drop
-    kept_out = np.unique(tasks.c_idx[keep])
-    remap = -np.ones(tasks.num_out, dtype=np.int64)
-    remap[kept_out] = np.arange(kept_out.size)
-    kept = Tasks(
-        a_idx=tasks.a_idx[keep],
-        b_idx=tasks.b_idx[keep],
-        c_idx=remap[tasks.c_idx[keep]],
-        c_coords=tasks.c_coords[kept_out],
-    )
+    kept = _prune_tasks(tasks, ~drop)
+    if leaf_spec is not None:
+        kept, err = _refine_leaf_spamm(a, b, kept, tau, err, leaf_spec)
+    if kept.num_tasks == 0:
+        return BSMatrix.zeros((a.shape[0], b.shape[1]), a.bs, a.dtype), err
     data = spgemm_numeric(a.data, b.data, kept, impl=impl)
     return (
         BSMatrix(shape=(a.shape[0], b.shape[1]), bs=a.bs, coords=kept.c_coords, data=data),

@@ -33,13 +33,29 @@ operands between operations.  This package is that layer for the XLA mesh:
   (:mod:`repro.dist.purify`) — the full SP2 loop on resident matrices with
   per-iteration cache/comm stats, and the end-to-end SPD pipeline
   S -> Z -> Z^T H Z -> SP2 -> Z D Z^T that never leaves the devices.
+* dynamic load balancing (:mod:`repro.dist.balance`) — a measured
+  per-worker cost model (:class:`WorkerLoad`: executed tasks, exchange
+  bytes, owned leaves), a :class:`RebalancePolicy` / :class:`LoadMonitor`
+  feedback loop, and the resident re-layout collective
+  :func:`dist_repartition` (planned ``ppermute`` rounds, block payloads
+  only); the iterative drivers take ``rebalance=`` and re-lay iterates out
+  between iterations when the measured imbalance crosses the threshold.
 """
 
+from .balance import (
+    LoadMonitor,
+    RebalancePolicy,
+    WorkerLoad,
+    owner_imbalance,
+    rebalanced_owner,
+    worker_load,
+)
 from .cache import PlanCache
 from .collectives import (
     dist_add,
     dist_assemble2x2,
     dist_frobenius_norm,
+    dist_repartition,
     dist_scale,
     dist_submatrix,
     dist_trace,
@@ -63,6 +79,7 @@ from .multiply import (
 from .purify import (
     DistPurifyStats,
     SqrtInvPipelineStats,
+    dist_lanczos_bounds,
     dist_sp2_purify,
     dist_sqrt_inv_pipeline,
 )
@@ -78,6 +95,7 @@ __all__ = [
     "dist_trace",
     "dist_frobenius_norm",
     "dist_transpose",
+    "dist_repartition",
     "dist_submatrix",
     "dist_assemble2x2",
     "transpose_permutation",
@@ -92,6 +110,13 @@ __all__ = [
     "DistInverseStats",
     "dist_sp2_purify",
     "DistPurifyStats",
+    "dist_lanczos_bounds",
     "dist_sqrt_inv_pipeline",
     "SqrtInvPipelineStats",
+    "RebalancePolicy",
+    "LoadMonitor",
+    "WorkerLoad",
+    "worker_load",
+    "owner_imbalance",
+    "rebalanced_owner",
 ]

@@ -27,11 +27,14 @@ class PlanCache(SymbolicCache):
     """LRU cache from structure keys to built plans/executables.
 
     Keys are hashable tuples (callers prefix them with a kind tag:
-    ``"spgemm"`` / ``"spamm"`` / ``"spamm-delta"`` / ``"add"`` /
-    ``"transpose"`` / ``"slice"`` / ``"assemble"`` / ``"truncate"`` /
-    ``"trace"`` / ``"fro"`` / ``"norms"`` — the full resident vocabulary;
-    per-kind hit/miss counts surface in :meth:`stats`).  Values are whatever
-    the builder returns — typically a (plan, executable) pair whose
-    executable holds device-resident index arrays and a jitted shard_map
-    program.
+    ``"spgemm"`` / ``"spamm"`` / ``"spamm-delta"`` / ``"spgemm-tasks"`` /
+    ``"add"`` / ``"transpose"`` / ``"repartition"`` / ``"slice"`` /
+    ``"assemble"`` / ``"truncate"`` / ``"trace"`` / ``"fro"`` / ``"norms"``
+    — the full resident vocabulary; per-kind hit/miss counts surface in
+    :meth:`stats`).  Values are whatever the builder returns — typically a
+    (plan, executable) pair whose executable holds device-resident index
+    arrays and a jitted shard_map program.  Every key fingerprints the
+    operand owner maps, so a dynamic re-layout
+    (:func:`repro.dist.collectives.dist_repartition`) re-keys downstream
+    plans automatically and a stabilized layout returns to all-hit.
     """

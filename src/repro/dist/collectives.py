@@ -58,6 +58,8 @@ __all__ = [
     "dist_trace",
     "dist_frobenius_norm",
     "dist_transpose",
+    "dist_repartition",
+    "RepartitionExecutable",
     "dist_submatrix",
     "dist_assemble2x2",
     "dist_truncate",
@@ -438,6 +440,37 @@ def _mapped_transpose(store, gidx, gval, *sends, spec):
     return jnp.transpose(out, (0, 2, 1))[None]
 
 
+def _relayout_gather_plan(x: DistBSMatrix, out_owner: np.ndarray, src: np.ndarray):
+    """Shared exchange-plan assembly of the owner re-layout collectives.
+
+    Output stack position ``o`` lives on device ``out_owner[o]`` and pulls
+    source block ``src[o]`` out of A's resident layout: blocks already local
+    gather from the store, the rest travel via planned ``ppermute`` rounds
+    (:func:`repro.core.schedule.plan_fetch`).  Transpose (``src`` = the
+    transpose permutation) and repartition (``src`` = identity) both build
+    their executables from this.  Returns ``(out_slot, out_cap, offsets,
+    send, send_cnt, gidx, gval)``.
+    """
+    nparts = x.nparts
+    out_slot, out_stores = _owner_slots(out_owner, nparts)
+    out_cap = max(max((len(s) for s in out_stores), default=0), 1)
+    needs = [
+        np.unique(src[out_owner == p]) if np.any(out_owner == p)
+        else np.zeros(0, np.int64)
+        for p in range(nparts)
+    ]
+    offsets, send, send_cnt, recv = plan_fetch(x.owner, x.slot, needs, nparts)
+    gidx = np.zeros((nparts, out_cap), dtype=np.int32)
+    gval = np.zeros((nparts, out_cap), dtype=np.float32)
+    for p, s in enumerate(out_stores):
+        for local, o in enumerate(s):
+            gidx[p, local] = local_fetch_index(
+                x.owner, x.slot, offsets, send, recv, x.cap, src[o], p
+            )
+            gval[p, local] = 1.0
+    return out_slot, out_cap, offsets, send, send_cnt, gidx, gval
+
+
 class TransposeExecutable:
     """Planned resident transpose bound to a mesh.
 
@@ -452,29 +485,13 @@ class TransposeExecutable:
     def __init__(self, a: DistBSMatrix):
         nparts, mesh = a.nparts, a.mesh
         src = transpose_permutation(a.coords)  # out stack pos -> a stack idx
-        out_coords = a.coords[src][:, ::-1]
         out_owner = partition_morton(a.nnzb, nparts)
-        out_slot, out_stores = _owner_slots(out_owner, nparts)
-        out_cap = max(max((len(s) for s in out_stores), default=0), 1)
-
-        needs = [
-            np.unique(src[out_owner == p]) if np.any(out_owner == p)
-            else np.zeros(0, np.int64)
-            for p in range(nparts)
-        ]
-        offsets, send, _, recv = plan_fetch(a.owner, a.slot, needs, nparts)
-
-        gidx = np.zeros((nparts, out_cap), dtype=np.int32)
-        gval = np.zeros((nparts, out_cap), dtype=np.float32)
-        for p, s in enumerate(out_stores):
-            for local, o in enumerate(s):
-                gidx[p, local] = local_fetch_index(
-                    a.owner, a.slot, offsets, send, recv, a.cap, src[o], p
-                )
-                gval[p, local] = 1.0
+        out_slot, out_cap, offsets, send, _, gidx, gval = _relayout_gather_plan(
+            a, out_owner, src
+        )
 
         self.src = src
-        self.out_coords = out_coords
+        self.out_coords = a.coords[src][:, ::-1]
         self.out_owner = out_owner
         self.out_slot = out_slot
         self.out_cap = out_cap
@@ -518,6 +535,125 @@ def dist_transpose(
         cap=exe.out_cap,
         store=exe(a.store),
         mesh=a.mesh,
+    )
+
+
+# --------------------------------------------------------------------------
+# repartition (owner re-layout)
+# --------------------------------------------------------------------------
+
+
+def _mapped_relayout(store, gidx, gval, *sends, spec):
+    allb = _exchange_bufs(store[0], spec.offsets, sends, spec.nparts)
+    return (allb[gidx[0]] * gval[0][:, None, None].astype(store.dtype))[None]
+
+
+class RepartitionExecutable:
+    """Planned owner re-layout bound to a mesh — the dynamic load balancer's
+    data-motion primitive (:mod:`repro.dist.balance`).
+
+    Re-slots every block to a caller-supplied new owner map using the same
+    planned ``ppermute``-round machinery as :class:`TransposeExecutable`:
+    blocks whose owner is unchanged are gathered from the local store, blocks
+    that migrate travel device-to-device in the planned rounds — block
+    payloads only, no host round-trip.  Coordinates and stack (Morton) order
+    are untouched; slots are reassigned in ascending Morton order within each
+    new owner, preserving the layout invariant every planner relies on.
+    Downstream plans re-key automatically: every plan-cache key fingerprints
+    the owner map, so the first operation after a re-layout plans fresh and
+    the cache returns to all-hit once the layout stabilizes.
+    """
+
+    def __init__(self, x: DistBSMatrix, new_owner: np.ndarray):
+        nparts, mesh = x.nparts, x.mesh
+        new_owner = np.asarray(new_owner, dtype=np.int32)
+        assert new_owner.shape == (x.nnzb,)
+        assert new_owner.size == 0 or (
+            new_owner.min() >= 0 and new_owner.max() < nparts
+        ), "owner map must assign every block a device id < mesh size"
+        src = np.arange(x.nnzb, dtype=np.int64)  # re-layout, not a permutation
+        new_slot, new_cap, offsets, send, send_cnt, gidx, gval = (
+            _relayout_gather_plan(x, new_owner, src)
+        )
+
+        self.new_owner = new_owner
+        self.new_slot = new_slot
+        self.new_cap = new_cap
+        self.migrated_blocks = int(np.count_nonzero(new_owner != x.owner))
+        # per-source true send counts (stats): only migrating blocks ship
+        self.sent_blocks = np.zeros(nparts, dtype=np.int64)
+        for d in offsets:
+            self.sent_blocks += send_cnt[d]
+        self.mesh = mesh
+        spec = _TransposeSpec(nparts, offsets)
+        self._args = [_put(mesh, gidx), _put(mesh, gval)]
+        self._sends = [_put(mesh, send[d]) for d in offsets]
+        nargs = 1 + len(self._args) + len(self._sends)
+        self._mapped = jax.jit(
+            shard_map(
+                functools.partial(_mapped_relayout, spec=spec),
+                mesh=mesh,
+                in_specs=tuple(P(AXIS) for _ in range(nargs)),
+                out_specs=P(AXIS),
+                check_vma=False,
+            )
+        )
+
+    def __call__(self, store):
+        return self._mapped(store, *self._args, *self._sends)
+
+
+def dist_repartition(
+    x: DistBSMatrix,
+    new_owner: np.ndarray,
+    cache: PlanCache | None = None,
+    *,
+    stats: dict | None = None,
+) -> DistBSMatrix:
+    """Re-slot A's blocks to ``new_owner`` entirely on device.
+
+    The resident re-layout collective of the dynamic load-balancing
+    subsystem (:mod:`repro.dist.balance`): structure, values and Morton stack
+    order are preserved bit-for-bit (``gather()`` before and after are
+    identical, and so is the stack-order norm table — block values never
+    change, only which device holds them), so a re-layout between iterations
+    is invisible to the algorithm and only visible to the schedule.  The
+    executable is cached per (structure + old owner, new owner); a no-op map
+    (``new_owner == x.owner``) returns ``x`` unchanged without touching the
+    cache.
+
+    ``stats``, when a dict, receives ``migrated_blocks`` / ``migrated_bytes``
+    (blocks that actually changed owner — the planned rounds ship nothing
+    else) and ``sent_blocks_per_worker``.
+    """
+    new_owner = np.asarray(new_owner, dtype=np.int32)
+    if x.nnzb == 0 or np.array_equal(new_owner, x.owner):
+        if stats is not None:
+            stats["migrated_blocks"] = 0
+            stats["migrated_bytes"] = 0
+            stats["sent_blocks_per_worker"] = np.zeros(x.nparts, dtype=np.int64)
+        return x
+    key = (
+        "repartition",
+        _structure_key(x),
+        structure_fingerprint(new_owner),
+    )
+    build = lambda: RepartitionExecutable(x, new_owner)
+    exe = cache.get_or_build(key, build) if cache is not None else build()
+    if stats is not None:
+        blk = x.bs * x.bs * x.store.dtype.itemsize
+        stats["migrated_blocks"] = exe.migrated_blocks
+        stats["migrated_bytes"] = exe.migrated_blocks * blk
+        stats["sent_blocks_per_worker"] = exe.sent_blocks.copy()
+    return DistBSMatrix(
+        shape=tuple(x.shape),
+        bs=x.bs,
+        coords=x.coords,
+        owner=exe.new_owner,
+        slot=exe.new_slot,
+        cap=exe.new_cap,
+        store=exe(x.store),
+        mesh=x.mesh,
     )
 
 

@@ -40,8 +40,16 @@ from repro.core.inverse import (
     _dense_inv_chol,
     factorization_residual,
 )
-from repro.core.schedule import SpgemmPlan, plan_stats
+from repro.core.schedule import plan_stats
 
+from .balance import (
+    LoadMonitor,
+    RebalancePolicy,
+    block_reference_weights,
+    map_block_weights,
+    measure_iteration_load,
+    peek_last_plan,
+)
 from .cache import PlanCache
 from .collectives import (
     dist_add,
@@ -80,6 +88,7 @@ class DistInverseStats:
     nnzb_history: list
     cache: dict  # PlanCache.stats() at exit
     per_iter: list
+    rebalances: int = 0  # re-layouts performed by the rebalance= policy
 
 
 def dist_inv_chol(
@@ -141,6 +150,7 @@ def dist_localized_inverse_factorization(
     leaf_blocks: int = 1,
     exchange: str = "p2p",
     impl: str = "ref",
+    rebalance: RebalancePolicy | None = None,
 ) -> tuple[DistBSMatrix, DistInverseStats]:
     """Divide-and-conquer inverse factorization, resident end to end.
 
@@ -161,8 +171,25 @@ def dist_localized_inverse_factorization(
     Convergence/divergence policy is the shared
     :class:`~repro.core.inverse.RefineMonitor`; the best iterate is
     returned resident with :class:`DistInverseStats`.
+
+    ``rebalance`` (a :class:`~repro.dist.balance.RebalancePolicy`) turns on
+    dynamic load balancing.  The pinned SPD operand ``a`` is the classic
+    skew trap — its layout never changes, so a skewed scatter makes one
+    worker ship its blocks every refinement multiply forever; when its
+    ownership imbalance exceeds the threshold it is re-laid out once,
+    up-front, on device.  The iterate Z is then measured and re-laid out
+    between iterations exactly like the SP2 driver, with ``imbalance`` /
+    ``imbalance_after`` / ``migrated_bytes`` per-iteration rows.
     """
     cache = cache if cache is not None else PlanCache()
+    lb = LoadMonitor(a.nparts, rebalance) if rebalance is not None else None
+    upfront_migrated = 0
+    if lb is not None:
+        # the pinned operand's layout is never revisited by the iteration:
+        # a skewed scatter would make one worker ship its store every
+        # refinement multiply forever — fix it once, up-front, on device
+        # (its bytes land in iteration 0's row)
+        a, upfront_migrated = lb.relayout_if_skewed(a, cache)
     nbr = -(-a.shape[0] // a.bs)
     if nbr <= leaf_blocks:
         host_a = a.gather()
@@ -193,8 +220,15 @@ def dist_localized_inverse_factorization(
     z_norms = None  # stack-order norm table of z, carried over from truncation
     for it in range(max_iter):
         snap, t0 = cache.snapshot(), time.perf_counter()
+        z_op = z  # the iterate the refinement multiplies read this iteration
         mult_err = 0.0
         norm_fetch_bytes = 0
+        # measured per-worker cost accumulates over BOTH residual multiplies
+        # — the (zt)a plan is where a pinned skewed operand shows up
+        leaf_w = (z_norms != 0.0).astype(np.float64) if z_norms is not None else None
+        a_leaf_w = (
+            (a_norms != 0.0).astype(np.float64) if a_norms is not None else None
+        )
         if spamm_tau > 0:
             zt = dist_transpose(z, cache)
             zt_norms = (
@@ -206,6 +240,9 @@ def dist_localized_inverse_factorization(
                 zt, a, spamm_tau, cache, exchange=exchange, impl=impl,
                 method=spamm_method, a_norms=zt_norms, b_norms=a_norms,
             )
+            load_zta = measure_iteration_load(
+                cache, peek_last_plan(cache), None, a_leaf_w
+            )
             zaz, e2 = dist_spamm(
                 za, z, spamm_tau, cache, exchange=exchange, impl=impl,
                 method=spamm_method, b_norms=z_norms,
@@ -214,14 +251,22 @@ def dist_localized_inverse_factorization(
         else:
             zt = dist_transpose(z, cache)
             za = dist_multiply(zt, a, cache, exchange=exchange, impl=impl)
+            load_zta = measure_iteration_load(
+                cache, peek_last_plan(cache), None, a_leaf_w
+            )
             zaz = dist_multiply(za, z, cache, exchange=exchange, impl=impl)
-        entry = (
-            cache.peek(cache.last_plan_key)
-            if cache.last_plan_key is not None
-            else None
-        )
-        plan = entry[0] if entry is not None else None
-        assert plan is None or isinstance(plan, SpgemmPlan)
+        plan = peek_last_plan(cache)  # the (za)z plan: recv stats + z weights
+        load = measure_iteration_load(cache, plan, None, leaf_w)
+        if load is None:
+            # the (za)z multiply built no plan (e.g. its full task list is
+            # empty): the (zt)a measurement still counts — a skewed pinned
+            # operand must not go unreported
+            load = load_zta
+        elif load_zta is not None:
+            load = load + load_zta
+        imb = None
+        if load is not None:
+            imb = lb.observe(load) if lb is not None else load.imbalance()
         delta = dist_add(eye, zaz, 1.0, -1.0, cache)
         r = dist_frobenius_norm(delta, cache)
         history.append(r)
@@ -251,6 +296,25 @@ def dist_localized_inverse_factorization(
                     z, trunc_tau, cache, norms=pre_norms, stats=info
                 )
                 z_norms = pre_norms[info["kept"]]
+        imb_after, migrated = None, upfront_migrated
+        upfront_migrated = 0
+        if (
+            lb is not None
+            and not stop
+            and load is not None
+            and lb.should_rebalance(load)
+            and plan is not None
+        ):
+            # measured per-block weights for the iterate: its reference
+            # counts as the b operand of the executed (za)z plan plus one
+            # unit of ownership, mapped onto the updated structure
+            _, wb = block_reference_weights(
+                plan.tasks, plan.a_owner.shape[0], z_op.nnzb
+            )
+            w = map_block_weights(z_op.coords, wb + 1.0, z.coords, default=1.0)
+            # z_norms is stack-ordered, so it survives the re-layout
+            z, moved, imb_after = lb.migrate(z, w, cache)
+            migrated += moved
         per_iter.append(
             dict(
                 iteration=it,
@@ -261,6 +325,9 @@ def dist_localized_inverse_factorization(
                     plan_stats(plan)["recv_bytes_mean"] if plan is not None else 0.0
                 ),
                 norm_fetch_bytes=norm_fetch_bytes,
+                imbalance=imb,
+                imbalance_after=imb_after,
+                migrated_bytes=migrated,
                 wall_s=time.perf_counter() - t0,
                 **cache.delta(snap),
             )
@@ -268,5 +335,6 @@ def dist_localized_inverse_factorization(
         if stop:
             break
     return best, DistInverseStats(
-        len(history), history, monitor.best_r, nnzbs, cache.stats(), per_iter
+        len(history), history, monitor.best_r, nnzbs, cache.stats(), per_iter,
+        rebalances=lb.rebalances if lb is not None else 0,
     )

@@ -36,9 +36,10 @@ from repro.core.distributed import (
 )
 from repro.core.quadtree import build_quadtree_index, quadtree_depth
 from repro.core.schedule import make_spgemm_plan, structure_fingerprint
-from repro.core.spgemm import spamm_symbolic
+from repro.core.spgemm import spamm_symbolic, spgemm_symbolic
 
 from .cache import PlanCache
+from .collectives import dist_repartition
 from .matrix import (
     DistBSMatrix,
     _store_sharding,
@@ -96,6 +97,44 @@ def _check_operands(a: DistBSMatrix, b: DistBSMatrix) -> None:
     assert a.shape[1] == b.shape[0] and a.bs == b.bs, (a.shape, b.shape)
 
 
+def _rebalance_operands(
+    a: DistBSMatrix, b: DistBSMatrix, cache: PlanCache | None, policy
+) -> tuple[DistBSMatrix, DistBSMatrix]:
+    """Opt-in operand re-layout before planning a multiply.
+
+    Weighs each operand's current owner map against its task-reference
+    counts in this multiply (plus one unit of ownership weight per block) —
+    the :mod:`repro.dist.balance` cost model at single-op granularity — and
+    re-slots skewed operands through :func:`~repro.dist.collectives.
+    dist_repartition` before the plan is built.  Everything is structural,
+    so the decision is deterministic per structure pair and repeated calls
+    are pure cache hits; iterative callers should instead hold the
+    repartitioned handle (the drivers' ``rebalance=`` loop does).
+    """
+    from .balance import LoadMonitor, block_reference_weights, owner_imbalance
+
+    key = (
+        "spgemm-tasks",
+        structure_fingerprint(a.codes(), b.codes(), a.bs),
+    )
+    build = lambda: spgemm_symbolic(a.coords, b.coords)
+    tasks = cache.get_or_build(key, build) if cache is not None else build()
+    wa, wb = block_reference_weights(tasks, a.nnzb, b.nnzb)
+    wa += 1.0
+    wb += 1.0
+    mon = LoadMonitor(a.nparts, policy)
+    same = b is a
+
+    def relayout(x, w):
+        if owner_imbalance(x.owner, w, x.nparts) <= policy.threshold:
+            return x
+        new_owner = mon.propose(x, w)
+        return x if new_owner is None else dist_repartition(x, new_owner, cache)
+
+    a = relayout(a, wa)
+    return (a, a) if same else (a, relayout(b, wb))
+
+
 def dist_multiply(
     a: DistBSMatrix,
     b: DistBSMatrix,
@@ -103,9 +142,17 @@ def dist_multiply(
     *,
     exchange: str = "p2p",
     impl: str = "ref",
+    rebalance=None,
 ) -> DistBSMatrix:
-    """C = A @ B with A, B, C device-resident.  Plan + executable cached."""
+    """C = A @ B with A, B, C device-resident.  Plan + executable cached.
+
+    ``rebalance`` (a :class:`repro.dist.balance.RebalancePolicy`) re-slots
+    skewed operand layouts on device before planning — see
+    :func:`_rebalance_operands`.
+    """
     _check_operands(a, b)
+    if rebalance is not None:
+        a, b = _rebalance_operands(a, b, cache, rebalance)
 
     def build():
         plan = make_spgemm_plan(
@@ -133,6 +180,7 @@ def dist_multiply(
     else:
         plan, exe = cache.get_or_build(key, build)
         cache.last_plan_key = key
+        cache.last_task_count = plan.task_count
     c_store = exe(a.store, b.store)
     return DistBSMatrix(
         shape=(a.shape[0], b.shape[1]),
@@ -200,6 +248,7 @@ def dist_spamm(
     method: str = "delta",
     a_norms: np.ndarray | None = None,
     b_norms: np.ndarray | None = None,
+    rebalance=None,
 ) -> tuple[DistBSMatrix, float]:
     """Sparse approximate multiply on resident operands: C ~= A @ B.
 
@@ -215,9 +264,17 @@ def dist_spamm(
     by structure alone, so prune-pattern fluctuation never misses.
     ``method="replan"`` threads the pruned task list into a per-pattern plan.
 
+    ``rebalance`` (a :class:`repro.dist.balance.RebalancePolicy`) re-slots
+    skewed operand layouts on device before planning
+    (:func:`_rebalance_operands`); note the stack-order norm tables are
+    layout-invariant, so prefetched ``a_norms`` / ``b_norms`` stay valid
+    across the re-layout.
+
     Returns ``(C, err_bound)`` with ``||A@B - C||_F <= err_bound <= tau``.
     """
     _check_operands(a, b)
+    if rebalance is not None:
+        a, b = _rebalance_operands(a, b, cache, rebalance)
     # norm fetches stay outside the symbolic timer: a miss on the fused norm
     # executable is timed into cache.build_s by get_or_build
     if a_norms is None:
@@ -286,6 +343,8 @@ def dist_spamm(
             task_on = keep_task[plan.task_gidx] & valid
         if cache is not None:
             cache.symbolic_s += time.perf_counter() - t1
+            # measured per-worker flop load: only unmasked tasks cost work
+            cache.last_task_count = task_on.sum(axis=1).astype(np.int64)
         c_store = exe(a.store, b.store, task_on)
         return (
             DistBSMatrix(
@@ -305,6 +364,7 @@ def dist_spamm(
     if tasks.num_tasks == 0:
         if cache is not None:
             cache.last_plan_key = None  # no plan ran; nothing to peek
+            cache.last_task_count = None
         return _empty_dist_result(a, b), err
 
     key = (
@@ -340,6 +400,7 @@ def dist_spamm(
     else:
         plan, exe = cache.get_or_build(key, build)
         cache.last_plan_key = key
+        cache.last_task_count = plan.task_count
     c_store = exe(a.store, b.store)
     return (
         DistBSMatrix(

@@ -28,6 +28,13 @@ from repro.core.matrix import BSMatrix
 from repro.core.purify import PurifyStats, Sp2Monitor, sp2_init_coeffs, sp2_should_square
 from repro.core.schedule import SpgemmPlan, plan_stats
 
+from .balance import (
+    LoadMonitor,
+    RebalancePolicy,
+    block_reference_weights,
+    map_block_weights,
+    measure_iteration_load,
+)
 from .cache import PlanCache
 from .collectives import (
     dist_add,
@@ -43,6 +50,7 @@ from .multiply import dist_multiply, dist_spamm
 __all__ = [
     "dist_sp2_purify",
     "DistPurifyStats",
+    "dist_lanczos_bounds",
     "dist_sqrt_inv_pipeline",
     "SqrtInvPipelineStats",
 ]
@@ -57,7 +65,10 @@ class DistPurifyStats:
     idempotency_history: list
     nnzb_history: list
     cache: dict  # PlanCache.stats() at exit
-    per_iter: list  # dicts: plan-cache hits/misses, recv bytes, nnzb
+    per_iter: list  # dicts: plan-cache hits/misses, recv bytes, nnzb,
+    # measured worker-load imbalance (always) and imbalance_after /
+    # migrated_bytes when a rebalance= policy re-laid the iterate out
+    rebalances: int = 0  # re-layouts performed by the rebalance= policy
 
     def as_purify_stats(self) -> PurifyStats:
         return PurifyStats(
@@ -85,6 +96,7 @@ def dist_sp2_purify(
     exchange: str = "p2p",
     cache: PlanCache | None = None,
     return_resident: bool = False,
+    rebalance: RebalancePolicy | None = None,
 ) -> tuple[BSMatrix | DistBSMatrix, DistPurifyStats]:
     """SP2 purification with every iterate resident on the worker mesh.
 
@@ -111,6 +123,18 @@ def dist_sp2_purify(
     ``return_resident=True`` skips the boundary gather and returns the best
     iterate as a :class:`~repro.dist.matrix.DistBSMatrix` — pipeline callers
     (:func:`dist_sqrt_inv_pipeline`) keep chaining resident operations on it.
+
+    ``rebalance`` (a :class:`~repro.dist.balance.RebalancePolicy`) turns on
+    dynamic load balancing: each iteration's multiply is measured into a
+    per-worker cost model (executed tasks, exchange bytes, owned leaves —
+    :func:`repro.dist.balance.worker_load`); when the combined max/mean
+    imbalance exceeds the policy threshold the iterate is re-laid out on
+    device (:func:`~repro.dist.collectives.dist_repartition`) along a
+    weighted, subtree-aligned Morton cut before the next iteration.  Every
+    per-iteration stats row carries the measured ``imbalance`` (also with
+    ``rebalance=None``, so static runs are comparable), plus
+    ``imbalance_after`` and ``migrated_bytes`` when a re-layout happened.
+    Values are bit-identical to the static run — only the schedule changes.
     """
     cache = cache if cache is not None else PlanCache()
     scale, shift = sp2_init_coeffs(lmin, lmax)
@@ -131,10 +155,18 @@ def dist_sp2_purify(
 
     traces, idems, nnzbs, per_iter = [], [], [], []
     monitor = Sp2Monitor(idem_tol)
+    lb = LoadMonitor(x.nparts, rebalance) if rebalance is not None else None
+    upfront_migrated = 0
+    if lb is not None:
+        # a skewed X0 (inherited from F's scatter) would pay one fully
+        # imbalanced iteration before the first measured re-layout; fix the
+        # ownership skew up-front (its bytes land in iteration 0's row)
+        x, upfront_migrated = lb.relayout_if_skewed(x, cache)
     best = x
     x_norms = None  # stack-order norm table of x, carried over from truncation
     for it in range(max_iter):
         snap, t0 = cache.snapshot(), time.perf_counter()
+        x_op = x  # the multiply operand: measured weights refer to its stack
         if spamm_tau > 0:
             x2, mult_err = dist_spamm(
                 x, x, spamm_tau, cache,
@@ -154,6 +186,13 @@ def dist_sp2_purify(
         )
         plan = entry[0] if entry is not None else None
         assert plan is None or isinstance(plan, SpgemmPlan)
+        # measured per-worker cost of the multiply just executed (reported in
+        # static runs too, so rebalanced and static trajectories compare)
+        leaf_w = (x_norms != 0.0).astype(np.float64) if x_norms is not None else None
+        load = measure_iteration_load(cache, plan, leaf_w, leaf_w)
+        imb = None
+        if load is not None:
+            imb = lb.observe(load) if lb is not None else load.imbalance()
         idem = dist_frobenius_norm(dist_add(x2, x, 1.0, -1.0, cache), cache)
         tr = dist_trace(x, cache)
         traces.append(tr)
@@ -184,6 +223,23 @@ def dist_sp2_purify(
                 else:
                     assert trunc_method == "leaf", trunc_method
                     x = dist_truncate(x, trunc_tau, cache)
+        imb_after, migrated = None, upfront_migrated
+        upfront_migrated = 0
+        if (
+            lb is not None
+            and not stop
+            and load is not None
+            and lb.should_rebalance(load)
+            and plan is not None
+        ):
+            # measured per-block weights: reads of each operand block in the
+            # executed task list plus one unit of ownership, mapped onto the
+            # updated iterate's structure by Morton code
+            wa, wb = block_reference_weights(plan.tasks, x_op.nnzb, x_op.nnzb)
+            w = map_block_weights(x_op.coords, wa + wb + 1.0, x.coords, default=1.0)
+            # x_norms is stack-ordered, so it survives the re-layout
+            x, moved, imb_after = lb.migrate(x, w, cache)
+            migrated += moved
         # appended after the update + truncation so each row carries its own
         # iteration's full cache/timing deltas (truncation included)
         per_iter.append(
@@ -196,6 +252,9 @@ def dist_sp2_purify(
                 recv_bytes_mean=(
                     plan_stats(plan)["recv_bytes_mean"] if plan is not None else 0.0
                 ),
+                imbalance=imb,
+                imbalance_after=imb_after,
+                migrated_bytes=migrated,
                 wall_s=time.perf_counter() - t0,
                 **cache.delta(snap),
             )
@@ -203,7 +262,8 @@ def dist_sp2_purify(
         if stop:
             break
     return (best if return_resident else best.gather()), DistPurifyStats(
-        len(traces), traces, idems, nnzbs, cache.stats(), per_iter
+        len(traces), traces, idems, nnzbs, cache.stats(), per_iter,
+        rebalances=lb.rebalances if lb is not None else 0,
     )
 
 
@@ -249,6 +309,65 @@ def _spectral_bounds_from_norms(coords, norms) -> tuple[float, float]:
     return -b, b
 
 
+def dist_lanczos_bounds(
+    f: DistBSMatrix,
+    cache: PlanCache | None = None,
+    *,
+    steps: int = 10,
+    seed: int = 0,
+) -> tuple[float, float]:
+    """Ritz-value estimate of spec(F) from a few resident Lanczos steps.
+
+    Tightens the block-Gershgorin enclosure
+    (:func:`_spectral_bounds_from_norms`) without gathering F: the Lanczos
+    vector lives on the mesh as an ``(n, bs)`` block-column matrix whose
+    first column carries the vector, so every step is existing resident
+    collectives — ``dist_multiply`` for F@v, transpose+multiply+``dist_trace``
+    for the dot products, ``dist_add`` for the three-term recurrence and
+    ``dist_frobenius_norm`` for the normalization.  All structures repeat
+    across steps, so after the first step the plan cache is all-hit.
+
+    Returns ``(lo, hi)`` — the extreme Ritz values widened by each pair's
+    residual bound ``beta_k * |s_k|`` (the exact residual norm of the Ritz
+    pair).  This is a sharp *estimate*, not a rigorous enclosure of the full
+    spectrum; callers intersect it with the Gershgorin interval (so bounds
+    never widen) and rely on SP2's divergence monitor as the backstop for a
+    rare under-estimate.
+    """
+    n, bs = f.shape[0], f.bs
+    assert f.shape[0] == f.shape[1], "spectral bounds need a square operand"
+    rng = np.random.default_rng(seed)
+    v0 = rng.standard_normal(n)
+    v0 /= np.linalg.norm(v0)
+    col = np.zeros((n, bs), dtype=f.dtype)
+    col[:, 0] = v0
+    vcur = scatter(BSMatrix.from_dense(col, bs), f.mesh)
+    vprev = None
+    beta = 0.0
+    alphas: list[float] = []
+    betas: list[float] = []
+    for _ in range(max(int(steps), 1)):
+        w = dist_multiply(f, vcur, cache)
+        vt = dist_transpose(vcur, cache)
+        alpha = dist_trace(dist_multiply(vt, w, cache), cache)
+        w = dist_add(w, vcur, 1.0, -alpha, cache)
+        if vprev is not None:
+            w = dist_add(w, vprev, 1.0, -beta, cache)
+        alphas.append(alpha)
+        beta = dist_frobenius_norm(w, cache)
+        betas.append(beta)
+        if beta <= 1e-12 * max(abs(alpha), 1.0):
+            break  # invariant subspace: Ritz values are exact eigenvalues
+        vprev, vcur = vcur, w.scale(1.0 / beta)
+    k = len(alphas)
+    t = np.diag(np.asarray(alphas, dtype=np.float64))
+    for i in range(k - 1):
+        t[i, i + 1] = t[i + 1, i] = betas[i]
+    theta, s = np.linalg.eigh(t)
+    eta = abs(betas[k - 1]) * np.abs(s[k - 1, :])
+    return float((theta - eta).min()), float((theta + eta).max())
+
+
 def dist_sqrt_inv_pipeline(
     s: BSMatrix | DistBSMatrix,
     h: BSMatrix | DistBSMatrix,
@@ -267,6 +386,8 @@ def dist_sqrt_inv_pipeline(
     exchange: str = "p2p",
     cache: PlanCache | None = None,
     transform_back: bool = True,
+    rebalance: RebalancePolicy | None = None,
+    lanczos_steps: int = 0,
 ) -> tuple[BSMatrix, SqrtInvPipelineStats]:
     """The paper's full electronic-structure workflow, resident end to end.
 
@@ -282,7 +403,16 @@ def dist_sqrt_inv_pipeline(
 
     When ``lmin`` / ``lmax`` are omitted, the SP2 eigenvalue interval is
     estimated from F's resident norm table (block Gershgorin row sums — no
-    block data leaves the mesh for it).
+    block data leaves the mesh for it); ``lanczos_steps > 0`` refines that
+    interval with a few resident Lanczos steps (:func:`dist_lanczos_bounds`),
+    intersected with the Gershgorin enclosure so it can only tighten — a
+    loose row-sum bound costs SP2 iterations, and the refinement buys them
+    back without gathering F.
+
+    ``rebalance`` (a :class:`~repro.dist.balance.RebalancePolicy`) enables
+    dynamic load balancing in both iterative stages — the inverse refinement
+    loop and SP2 — re-laying iterates out on device when the measured
+    per-worker cost model reports imbalance above the policy threshold.
     """
     from .inverse import dist_localized_inverse_factorization
 
@@ -308,7 +438,7 @@ def dist_sqrt_inv_pipeline(
     z, inv_stats = dist_localized_inverse_factorization(
         ds, cache, tol=tol, max_iter=max_iter, trunc_tau=trunc_tau,
         spamm_tau=spamm_tau, leaf_blocks=leaf_blocks, exchange=exchange,
-        impl=impl,
+        impl=impl, rebalance=rebalance,
     )
 
     snap, t0 = cache.snapshot(), time.perf_counter()
@@ -323,6 +453,12 @@ def dist_sqrt_inv_pipeline(
         lo, hi = _spectral_bounds_from_norms(
             f_ortho.coords, resident_block_norms(f_ortho, cache)
         )
+        if lanczos_steps > 0:
+            llo, lhi = dist_lanczos_bounds(f_ortho, cache, steps=lanczos_steps)
+            # intersect with the Gershgorin enclosure: refinement can only
+            # tighten the interval, never widen it
+            if max(lo, llo) < min(hi, lhi):
+                lo, hi = max(lo, llo), min(hi, lhi)
         lmin = lo if lmin is None else lmin
         lmax = hi if lmax is None else lmax
 
@@ -330,6 +466,7 @@ def dist_sqrt_inv_pipeline(
         f_ortho, n_occ, lmin, lmax, max_iter=max_iter, idem_tol=idem_tol,
         trunc_tau=trunc_tau, spamm_tau=spamm_tau, impl=impl,
         exchange=exchange, cache=cache, return_resident=True,
+        rebalance=rebalance,
     )
 
     back = None

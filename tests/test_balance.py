@@ -1,0 +1,392 @@
+"""Dynamic load-balancing subsystem tests (repro.dist.balance).
+
+Property tests for the weighted Morton partitioner and the cost-model
+helpers run in-process (no devices).  The resident behaviour — repartition
+round-trip, the measured-imbalance acceptance criterion on the
+random-offdiag sequence, bit-identical results, zero-miss steady state —
+runs in a subprocess with 8 fake CPU devices, mirroring tests/test_dist.py.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.schedule import partition_morton, subtree_boundaries
+from repro.dist.balance import (
+    RebalancePolicy,
+    WorkerLoad,
+    map_block_weights,
+    owner_imbalance,
+)
+
+from helpers import random_block_matrix
+
+
+# -- partition_morton(weights=...) properties --------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=200),
+    st.integers(min_value=1, max_value=12),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_partition_morton_weighted_overshoot_bound(nblocks, nparts, seed):
+    # greedy prefix-sum placement: every part's weight stays within one
+    # block's weight of the ideal target (the static balance bound)
+    rng = np.random.default_rng(seed)
+    w = rng.random(nblocks) * rng.choice([1.0, 10.0, 100.0], size=nblocks)
+    owner = partition_morton(nblocks, nparts, w)
+    assert owner.shape == (nblocks,)
+    assert np.all(np.diff(owner) >= 0)  # contiguous Morton ranges
+    assert owner.min() >= 0 and owner.max() < nparts
+    w_eff = np.maximum(w, 1e-12)  # the partitioner's zero-weight clamp
+    loads = np.bincount(owner, weights=w_eff, minlength=nparts)
+    assert loads.max() <= w_eff.sum() / nparts + w_eff.max() + 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=100),
+    st.integers(min_value=1, max_value=8),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_partition_morton_zero_weight_blocks(nblocks, nparts, seed):
+    # zero (and all-zero) weights must not divide by zero or stall a cut;
+    # the owner map stays a valid contiguous range partition
+    rng = np.random.default_rng(seed)
+    w = rng.random(nblocks)
+    w[rng.random(nblocks) < 0.5] = 0.0
+    for weights in (w, np.zeros(nblocks)):
+        owner = partition_morton(nblocks, nparts, weights)
+        assert owner.shape == (nblocks,)
+        assert np.all(np.diff(owner) >= 0)
+        assert owner.min() >= 0 and owner.max() < nparts
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=6),
+    st.integers(min_value=7, max_value=32),
+)
+def test_partition_morton_more_parts_than_blocks(nblocks, nparts):
+    owner = partition_morton(nblocks, nparts)
+    assert owner.shape == (nblocks,)
+    assert np.all(np.diff(owner) >= 0)
+    assert owner.max() < nparts
+    # at most one block per part when parts outnumber blocks
+    assert np.bincount(owner, minlength=nparts).max() <= 1 + (nblocks > nparts)
+
+
+def test_partition_morton_empty():
+    assert partition_morton(0, 4).shape == (0,)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(min_value=2, max_value=6),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_partition_morton_align_snapping_edges(nparts, seed):
+    # snapping must keep cuts monotone and inside [0, nblocks] even with
+    # pathological candidate sets (duplicates, out-of-range, endpoints only)
+    rng = np.random.default_rng(seed)
+    nblocks = 64
+    w = rng.random(nblocks) * 10
+    for align in (
+        np.array([0, 0, 64, 64, 200, -3]),  # duplicates + out of range
+        np.array([32]),  # single interior candidate
+        np.arange(0, 65),  # every position: cuts snap freely within slack
+    ):
+        owner = partition_morton(nblocks, nparts, w, align=align, slack=0.25)
+        assert np.all(np.diff(owner) >= 0)
+        assert owner.min() >= 0 and owner.max() < nparts
+        loads = np.bincount(owner, weights=np.maximum(w, 1e-12), minlength=nparts)
+        # slack-bounded: each part within target + slack budget + one block
+        target = w.sum() / nparts
+        assert loads.max() <= target + 0.25 * target + w.max() + 1e-9
+
+
+def test_partition_morton_aligned_cuts_land_on_boundaries():
+    a = random_block_matrix(64, 8, 1.0, 0)
+    align = subtree_boundaries(a.coords)
+    w = np.random.default_rng(3).random(a.nnzb) + 0.5
+    owner = partition_morton(a.nnzb, 4, w, align=align)
+    cuts = np.nonzero(np.diff(owner))[0] + 1
+    assert np.all(np.isin(cuts, align))
+
+
+# -- cost-model helpers ------------------------------------------------------
+
+
+def test_worker_load_imbalance_uniform_is_one():
+    P = 4
+    ld = WorkerLoad(
+        nparts=P,
+        bs=16,
+        tasks=np.full(P, 10.0),
+        recv_bytes=np.full(P, 1024.0),
+        send_bytes=np.full(P, 1024.0),
+        blocks=np.full(P, 5.0),
+    )
+    assert ld.imbalance() == pytest.approx(1.0)
+    skewed = WorkerLoad(
+        nparts=P,
+        bs=16,
+        tasks=np.array([40.0, 0.0, 0.0, 0.0]),
+        recv_bytes=np.zeros(P),
+        send_bytes=np.zeros(P),
+        blocks=np.zeros(P),
+    )
+    assert skewed.imbalance() == pytest.approx(4.0)
+    both = ld + skewed
+    assert both.tasks[0] == 50.0 and both.tasks[1] == 10.0
+
+
+def test_owner_imbalance_and_policy_gating():
+    owner = np.zeros(8, dtype=np.int32)
+    assert owner_imbalance(owner, np.ones(8), 4) == pytest.approx(4.0)
+    balanced = np.repeat(np.arange(4), 2).astype(np.int32)
+    assert owner_imbalance(balanced, np.ones(8), 4) == pytest.approx(1.0)
+    with pytest.raises(AssertionError):
+        RebalancePolicy(threshold=0.5)
+
+
+def test_map_block_weights_join_semantics():
+    src = np.array([[0, 0], [1, 1], [2, 2]])
+    dst = np.array([[0, 0], [2, 2], [3, 3]])
+    w = map_block_weights(src, np.array([5.0, 7.0, 9.0]), dst, default=1.5)
+    assert w.tolist() == [5.0, 9.0, 1.5]
+    assert map_block_weights(src, np.ones(3), np.zeros((0, 2), np.int64)).shape == (0,)
+    assert map_block_weights(
+        np.zeros((0, 2), np.int64), np.zeros(0), dst, default=2.0
+    ).tolist() == [2.0, 2.0, 2.0]
+
+
+# -- resident behaviour (8-device subprocess) --------------------------------
+
+_SCRIPT = r"""
+import numpy as np, jax, json
+from repro.core import BSMatrix
+from repro.core.distributed import make_worker_mesh
+from repro.dist import (scatter, PlanCache, dist_repartition, dist_multiply,
+                        dist_sp2_purify, dist_localized_inverse_factorization,
+                        resident_block_norms, rebalanced_owner, RebalancePolicy,
+                        owner_imbalance)
+from repro.dist.collectives import RepartitionExecutable
+
+assert jax.device_count() == 8, jax.device_count()
+out = {}
+
+def random_offdiag(n, density, bs, seed=2):
+    # the paper-style random-offdiag sequence (benchmarks/spamm_sequences.py):
+    # strong diagonal + sparse off-diagonal blocks of widely varying size
+    rng = np.random.default_rng(seed)
+    nb = n // bs
+    a = np.zeros((n, n), dtype=np.float32)
+    for b in range(nb):
+        a[b*bs:(b+1)*bs, b*bs:(b+1)*bs] = rng.standard_normal((bs, bs))
+    mask = rng.random((nb, nb)) < density
+    np.fill_diagonal(mask, False)
+    for i, j in zip(*np.nonzero(mask)):
+        scale = 10.0 ** rng.uniform(-4, 0)
+        a[i*bs:(i+1)*bs, j*bs:(j+1)*bs] = scale * rng.standard_normal((bs, bs))
+    return a
+
+mesh = make_worker_mesh(8)
+n, bs, nocc = 256, 16, 80
+h = random_offdiag(n, 0.08, bs)
+h = 0.2 * (h + h.T) / 2 + np.diag(np.linspace(-1, 1, n))
+f = BSMatrix.from_dense(h.astype(np.float32), bs)
+w = np.linalg.eigvalsh(h.astype(np.float64))
+lmin, lmax = float(w.min()) - 0.05, float(w.max()) + 0.05
+skew = np.zeros(f.nnzb, dtype=np.int32)  # skewed initial layout: all on worker 0
+
+# --- dist_repartition round-trip on the skewed layout -----------------------
+cache = PlanCache()
+dA = scatter(f, mesh, owner=skew)
+new_owner = rebalanced_owner(dA.coords, np.ones(dA.nnzb), 8)
+info = {}
+dB = dist_repartition(dA, new_owner, cache, stats=info)
+out["rp_owner_honored"] = bool(np.array_equal(dB.owner, new_owner))
+out["rp_coords_same"] = bool(np.array_equal(dB.coords, dA.coords))
+out["rp_gather_identical"] = bool(np.array_equal(
+    np.asarray(dA.gather().data), np.asarray(dB.gather().data)))
+out["rp_norms_invariant"] = bool(np.array_equal(
+    resident_block_norms(dA), resident_block_norms(dB)))
+# only migrating block payloads are planned into the rounds: blocks whose
+# owner is unchanged are never in any send list (no host round-trip either —
+# the executable's mapped body is the only data motion)
+exe = RepartitionExecutable(dA, new_owner)
+out["rp_migrated"] = [int(info["migrated_blocks"]),
+                      int(np.count_nonzero(new_owner != dA.owner))]
+out["rp_sent_total"] = [int(exe.sent_blocks.sum()), int(exe.migrated_blocks)]
+out["rp_bytes"] = int(info["migrated_bytes"])
+# round-trip back to the original layout: stores bit-identical
+dC = dist_repartition(dB, dA.owner, cache)
+out["rp_roundtrip_store"] = bool(np.array_equal(
+    np.asarray(dC.store), np.asarray(dA.store)))
+# no-op map returns the same object without touching the cache
+h0, m0 = cache.hits, cache.misses
+dD = dist_repartition(dB, dB.owner, cache)
+out["rp_noop"] = [dD is dB, cache.hits - h0, cache.misses - m0]
+
+# --- acceptance: SP2 on random-offdiag, skewed layout, static vs rebalanced -
+runs = {}
+for name, pol in (("static", None), ("rebalanced", RebalancePolicy())):
+    df = scatter(f, mesh, owner=skew)
+    d, st = dist_sp2_purify(df, nocc, lmin, lmax, idem_tol=1e-5,
+                            trunc_tau=1e-5, spamm_tau=1e-6,
+                            cache=PlanCache(), rebalance=pol)
+    imbs = [pi["imbalance"] for pi in st.per_iter if pi["imbalance"] is not None]
+    runs[name] = (d, st, imbs)
+d_s, st_s, imb_s = runs["static"]
+d_r, st_r, imb_r = runs["rebalanced"]
+out["sp2_iters"] = [st_s.iterations, st_r.iterations]
+out["sp2_rebalances"] = st_r.rebalances
+out["sp2_imb_static"] = imb_s
+out["sp2_imb_rebalanced"] = imb_r
+out["sp2_bit_identical"] = bool(np.array_equal(
+    np.asarray(d_s.to_dense()), np.asarray(d_r.to_dense())))
+out["sp2_migrated"] = [int(pi["migrated_bytes"]) for pi in st_r.per_iter]
+out["sp2_tail_misses"] = [pi["cache_misses"] for pi in st_r.per_iter[-3:]]
+out["sp2_tail_hits"] = [pi["cache_hits"] for pi in st_r.per_iter[-3:]]
+
+# --- inverse refinement: skewed pinned SPD operand --------------------------
+spd = random_offdiag(n, 0.08, bs, seed=5)
+spd = (spd + spd.T) / 2 * 0.05
+spd += np.diag(1.0 + 0.5 * np.random.default_rng(7).random(n))
+A = BSMatrix.from_dense(spd.astype(np.float32), bs)
+inv_runs = {}
+for name, pol in (("static", None), ("rebalanced", RebalancePolicy())):
+    da = scatter(A, mesh, owner=np.zeros(A.nnzb, dtype=np.int32))
+    z, st = dist_localized_inverse_factorization(
+        da, PlanCache(), tol=1e-7, trunc_tau=1e-7, spamm_tau=1e-8,
+        rebalance=pol)
+    imbs = [pi["imbalance"] for pi in st.per_iter if pi["imbalance"] is not None]
+    inv_runs[name] = (z, st, imbs)
+z_s, ist_s, iimb_s = inv_runs["static"]
+z_r, ist_r, iimb_r = inv_runs["rebalanced"]
+out["inv_iters"] = [ist_s.iterations, ist_r.iterations]
+out["inv_rebalances"] = ist_r.rebalances
+out["inv_imb_static"] = iimb_s
+out["inv_imb_rebalanced"] = iimb_r
+out["inv_bit_identical"] = bool(np.array_equal(
+    np.asarray(z_s.gather().to_dense()), np.asarray(z_r.gather().to_dense())))
+out["inv_tail_misses"] = [pi["cache_misses"] for pi in ist_r.per_iter[-3:]]
+out["inv_residuals"] = [ist_s.factorization_residual, ist_r.factorization_residual]
+
+# --- dist_multiply / dist_spamm rebalance knob ------------------------------
+cache2 = PlanCache()
+dskew = scatter(f, mesh, owner=skew)
+c_static = dist_multiply(dskew, dskew, cache2)
+c_reb = dist_multiply(dskew, dskew, cache2, rebalance=RebalancePolicy())
+out["knob_bit_identical"] = bool(np.array_equal(
+    np.asarray(c_static.gather().to_dense()), np.asarray(c_reb.gather().to_dense())))
+# second rebalanced call: repartition + plan are pure cache hits
+h0, m0 = cache2.hits, cache2.misses
+dist_multiply(dskew, dskew, cache2, rebalance=RebalancePolicy())
+out["knob_second_call"] = [cache2.hits - h0, cache2.misses - m0]
+
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def balance_results():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _SCRIPT],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=900,
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][0]
+    return json.loads(line[len("RESULT ") :])
+
+
+def test_repartition_owner_map_honored(balance_results):
+    assert balance_results["rp_owner_honored"]
+    assert balance_results["rp_coords_same"]  # Morton stack order preserved
+
+
+def test_repartition_gather_bit_identical(balance_results):
+    assert balance_results["rp_gather_identical"]
+    assert balance_results["rp_roundtrip_store"]
+
+
+def test_repartition_norm_table_invariant(balance_results):
+    assert balance_results["rp_norms_invariant"]
+
+
+def test_repartition_moves_only_migrating_blocks(balance_results):
+    migrated, expected = balance_results["rp_migrated"]
+    assert migrated == expected > 0
+    sent_total, migrated_blocks = balance_results["rp_sent_total"]
+    # the planned rounds ship exactly the blocks that change owner
+    assert sent_total == migrated_blocks
+    assert balance_results["rp_bytes"] == migrated_blocks * 16 * 16 * 4
+    is_same, hits, misses = balance_results["rp_noop"]
+    assert is_same and hits == 0 and misses == 0
+
+
+def test_sp2_rebalancing_reduces_imbalance_2x(balance_results):
+    # the acceptance criterion: on the random-offdiag sequence with a skewed
+    # initial layout, the measured max/mean worker-load imbalance drops by
+    # >= 2x versus static partitioning
+    imb_s = balance_results["sp2_imb_static"]
+    imb_r = balance_results["sp2_imb_rebalanced"]
+    assert max(imb_s) >= 2.0 * max(imb_r)
+    assert balance_results["sp2_rebalances"] >= 1
+
+
+def test_sp2_rebalanced_results_bit_identical(balance_results):
+    # re-layouts change the schedule, never the math
+    assert balance_results["sp2_bit_identical"]
+    it_s, it_r = balance_results["sp2_iters"]
+    assert it_s == it_r
+
+
+def test_sp2_rebalanced_zero_miss_steady_state(balance_results):
+    # once the layout (and sparsity pattern) stabilizes, iterations return
+    # to pure cache hits despite the re-layouts earlier in the run
+    assert all(m == 0 for m in balance_results["sp2_tail_misses"])
+    assert all(h > 0 for h in balance_results["sp2_tail_hits"])
+
+
+def test_sp2_migrated_bytes_reported(balance_results):
+    # the up-front re-layout of the skewed X0 moved real payload, and its
+    # bytes are accounted in the rebalanced run's stats rows
+    assert sum(balance_results["sp2_migrated"]) > 0
+    assert len(balance_results["sp2_imb_rebalanced"]) > 0
+
+
+def test_inverse_rebalanced_pinned_operand(balance_results):
+    # the pinned SPD operand's skew is fixed up-front; the refinement
+    # trajectory is measurably more balanced and bit-identical
+    assert balance_results["inv_rebalances"] >= 1
+    assert balance_results["inv_bit_identical"]
+    imb_s = balance_results["inv_imb_static"]
+    imb_r = balance_results["inv_imb_rebalanced"]
+    assert np.mean(imb_r) <= np.mean(imb_s)
+    assert all(m == 0 for m in balance_results["inv_tail_misses"])
+    r_s, r_r = balance_results["inv_residuals"]
+    assert r_s == r_r
+
+
+def test_multiply_rebalance_knob(balance_results):
+    assert balance_results["knob_bit_identical"]
+    hits, misses = balance_results["knob_second_call"]
+    # repeated call on the same skewed operands: repartition executable and
+    # the rebalanced plan are both cache hits, nothing re-plans
+    assert misses == 0 and hits >= 2

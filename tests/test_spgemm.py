@@ -294,3 +294,96 @@ def test_syrk_empty():
     s = syrk(z)
     assert s.shape == (40, 40) and s.nnzb == 0
     assert np.allclose(s.to_dense(), 0.0)
+
+
+# -- satellite: leaf-level inner sparsity tightens SpAMM bounds --------------
+
+
+def _inner_strip_matrix(n, bs, kind, seed=0):
+    """Leaves with one nonzero inner half: 'cols' keeps the left inner
+    column strip [:, :bs//2], 'rows' keeps the bottom inner row strip."""
+    rng = np.random.default_rng(seed)
+    nb = n // bs
+    a = np.zeros((n, n), dtype=np.float32)
+    for i in range(nb):
+        for j in range(nb):
+            blk = np.zeros((bs, bs), np.float32)
+            if kind == "cols":
+                blk[:, : bs // 2] = rng.standard_normal((bs, bs // 2))
+            else:
+                blk[bs // 2 :, :] = rng.standard_normal((bs // 2, bs))
+            a[i * bs : (i + 1) * bs, j * bs : (j + 1) * bs] = blk
+    return BSMatrix.from_dense(a, bs)
+
+
+def test_spamm_dense_leaf_spec_bit_identical():
+    # kind="dense": the inner block IS the leaf, the refined bound
+    # degenerates to the descent's own — results must match today's exactly
+    from repro.core.leaf import LeafSpec
+
+    a = banded_matrix(96, 10, 16, seed=3)
+    for tau in (0.0, 1e-1, 5.0):
+        c0, e0 = spamm(a, a, tau)
+        c1, e1 = spamm(a, a, tau, leaf_spec=LeafSpec("dense"))
+        assert e0 == e1
+        assert np.array_equal(c0.coords, c1.coords)
+        assert np.array_equal(np.asarray(c0.data), np.asarray(c1.data))
+
+
+def test_spamm_inner_sparsity_prunes_disjoint_leaves():
+    # A's leaves live in the left inner column strip, B's in the bottom inner
+    # row strip: every leaf product is exactly zero (A[:, :h] @ B_zero_top),
+    # the inner-norm bound ||Na @ Nb||_F sees it and prunes every task for
+    # free, while the flat leaf bound ||A|| * ||B|| keeps them all
+    from repro.core.leaf import LeafSpec
+
+    n, bs = 64, 16
+    a = _inner_strip_matrix(n, bs, "cols", seed=1)
+    b = _inner_strip_matrix(n, bs, "rows", seed=2)
+    tau = 1e-3
+    c_plain, e_plain = spamm(a, b, tau)
+    spec = LeafSpec("block_sparse", inner_bs=bs // 2)
+    c_inner, e_inner = spamm(a, b, tau, leaf_spec=spec)
+    assert c_plain.nnzb > 0  # flat bound keeps the (numerically zero) tasks
+    assert c_inner.nnzb == 0  # inner bound proves them all zero
+    assert e_inner <= tau + 1e-12
+    # the products really are zero: pruning them costs no error at all
+    ref = np.asarray(a.to_dense(), np.float64) @ np.asarray(b.to_dense(), np.float64)
+    assert np.abs(ref).max() < 1e-4
+
+
+def test_spamm_inner_sparsity_error_bound_holds():
+    from repro.core.leaf import LeafSpec
+
+    rng = np.random.default_rng(9)
+    n, bs = 64, 16
+    dense = rng.standard_normal((n, n)).astype(np.float32)
+    dense[np.abs(dense) < 1.2] = 0.0  # sparse inside leaves
+    a = BSMatrix.from_dense(dense, bs)
+    spec = LeafSpec("block_sparse", inner_bs=8)
+    for tau in (1e-2, 1.0, 10.0):
+        c_plain, e_plain = spamm(a, a, tau)
+        c_inner, e_inner = spamm(a, a, tau, leaf_spec=spec)
+        assert e_inner <= tau + 1e-9
+        # tighter bounds can only prune more, never less
+        assert c_inner.nnzb <= c_plain.nnzb
+        ref = np.asarray(a.to_dense(), np.float64) @ np.asarray(a.to_dense(), np.float64)
+        err = float(np.linalg.norm(np.asarray(c_inner.to_dense(), np.float64) - ref))
+        assert err <= e_inner + 1e-2
+
+
+def test_block_frobenius_norms_inner_layout():
+    from repro.core.matrix import block_frobenius_norms
+
+    rng = np.random.default_rng(4)
+    d = rng.standard_normal((3, 16, 16)).astype(np.float32)
+    flat = np.asarray(block_frobenius_norms(d))
+    inner = np.asarray(block_frobenius_norms(d, inner=8))
+    assert inner.shape == (3, 2, 2)
+    # inner squares sum back to the leaf square, and the layout is
+    # (row tile, col tile): zeroing the right half kills column tile 1
+    assert np.allclose(np.sqrt((inner.astype(np.float64) ** 2).sum(axis=(1, 2))), flat, rtol=1e-5)
+    d2 = d.copy()
+    d2[:, :, 8:] = 0
+    inner2 = np.asarray(block_frobenius_norms(d2, inner=8))
+    assert np.all(inner2[:, :, 1] == 0) and np.all(inner2[:, :, 0] > 0)
