@@ -99,6 +99,7 @@ def run_mode(f, nocc, lmin, lmax, mesh, policy, max_iter):
         plan_misses_total=int(sum(misses)),
         plan_misses_tail=[int(m) for m in misses[-3:]],
         cache=dict(hits=st.cache["hits"], misses=st.cache["misses"]),
+        calibration=st.calibration,
     )
 
 
@@ -136,6 +137,13 @@ def main() -> None:
         ratio = row["static"]["imbalance_max"] / row["rebalanced"]["imbalance_max"]
         row["peak_imbalance_reduction"] = float(ratio)
         print(f"  peak imbalance reduction: {ratio:.2f}x")
+        cal = row["rebalanced"].get("calibration")
+        if cal and cal.get("fitted"):
+            print(f"  wall-clock calibration: task {cal['task_s']*1e6:.1f} us  "
+                  f"recv {cal['recv_cost']:.3f} send {cal['send_cost']:.3f} "
+                  f"block {cal['block_cost']:.3f} "
+                  f"(rms resid {cal['rms_resid_s']*1e3:.2f} ms, "
+                  f"{cal['samples']} samples)")
         results[name] = row
 
     payload = dict(

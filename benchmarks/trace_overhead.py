@@ -1,0 +1,191 @@
+"""Tracing overhead + utilization cap for the full resident pipeline.
+
+Runs ``dist_sqrt_inv_pipeline`` (S -> Z -> Z^T H Z -> SP2 -> Z D Z^T) on an
+8-worker CPU mesh from a deliberately skewed initial layout (so re-layout
+migrations appear in the trace), three ways:
+
+* warm-cache repeats with tracing **off** (the pre-PR fast path);
+* warm-cache repeats with tracing **on** (fresh ``Tracer(sync=False)`` per
+  repeat on the same plan cache) — the overhead gate: median traced vs
+  untraced wall time must stay under the acceptance cap, and the density
+  matrix must be **bit-identical** either way.  ``sync=False`` measures the
+  recording machinery itself; ``Tracer(sync=True)`` additionally blocks on
+  device values inside dispatch spans so span durations measure execution
+  rather than async dispatch — that serializes the host/device overlap the
+  untraced path enjoys, so its (larger) cost is reported separately as
+  ``overhead_sync_pct``, not gated;
+* one **cold** traced run (``sync=True``, execution-true spans) on a fresh
+  cache, so the exported Chrome trace also carries the plan-build spans,
+  and the per-worker utilization report is derived from it.
+
+Results go to ``BENCH_trace.json`` at the repo root (overhead %, span
+counts by category, counters, per-worker busy/idle fractions, timeline
+imbalance vs the per-iteration cost-model imbalance); the Perfetto-loadable
+trace itself is written next to it as ``trace_pipeline.json``.
+
+Run:   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+       PYTHONPATH=src python benchmarks/trace_overhead.py [--smoke]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import sys
+import time
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import BSMatrix  # noqa: E402
+from repro.core.distributed import make_worker_mesh  # noqa: E402
+from repro.dist import (  # noqa: E402
+    PlanCache,
+    RebalancePolicy,
+    dist_sqrt_inv_pipeline,
+    scatter,
+)
+from repro.obs import (  # noqa: E402
+    Tracer,
+    utilization_table,
+    worker_utilization,
+    write_chrome_trace,
+)
+
+P = 8
+BS = 16
+TOL, IDEM_TOL, TRUNC_TAU, SPAMM_TAU = 1e-6, 1e-5, 1e-6, 1e-7
+OVERHEAD_CAP_PCT = 2.0
+ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+OUT_PATH = os.path.join(ROOT, "BENCH_trace.json")
+TRACE_PATH = os.path.join(ROOT, "trace_pipeline.json")
+
+
+def problem(n: int) -> tuple[BSMatrix, BSMatrix, int]:
+    """Banded SPD overlap S + symmetric Hamiltonian H, SP2-ready."""
+    rng = np.random.default_rng(11)
+    b = np.zeros((n, n), dtype=np.float32)
+    h = 12
+    for i in range(n):
+        lo, hi = max(0, i - h), min(n, i + h + 1)
+        b[i, lo:hi] = rng.standard_normal(hi - lo)
+    s = (b @ b.T / n + np.eye(n)).astype(np.float32)
+    hm = 0.2 * rng.standard_normal((n, n)).astype(np.float32)
+    ham = ((hm + hm.T) / 2 + np.diag(np.linspace(-1.0, 1.0, n))).astype(
+        np.float32
+    )
+    return (
+        BSMatrix.from_dense(s, BS),
+        BSMatrix.from_dense(ham, BS),
+        int(0.3 * n),
+    )
+
+
+def run_once(dS, dH, nocc, mesh, cache, tracer=None):
+    d, st = dist_sqrt_inv_pipeline(
+        dS, dH, nocc, mesh, tol=TOL, idem_tol=IDEM_TOL,
+        trunc_tau=TRUNC_TAU, spamm_tau=SPAMM_TAU, cache=cache,
+        rebalance=RebalancePolicy(), tracer=tracer,
+    )
+    return np.asarray(d.to_dense()), st
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv
+    n, repeats = (128, 2) if smoke else (256, 5)
+    assert jax.device_count() == P, f"need {P} devices, got {jax.device_count()}"
+    mesh = make_worker_mesh(P)
+
+    s, ham, nocc = problem(n)
+    skew = np.zeros(s.nnzb, dtype=np.int32)  # everything on worker 0
+    dS = scatter(s, mesh, owner=skew)
+    dH = scatter(ham, mesh, owner=np.zeros(ham.nnzb, dtype=np.int32))
+    print(f"pipeline: n={n} bs={BS} nnzb(S)={s.nnzb} workers={P} "
+          f"(skewed initial layout, rebalancing on)")
+
+    # -- warm the plan cache + compile, untraced reference density ----------
+    cache = PlanCache()
+    d_ref, _ = run_once(dS, dH, nocc, mesh, cache)
+
+    # -- warm-cache medians: tracing off vs on ------------------------------
+    def timed_runs(tracer_factory):
+        walls = []
+        for _ in range(repeats):
+            cache.tracer = None
+            t0 = time.perf_counter()
+            d, _ = run_once(dS, dH, nocc, mesh, cache,
+                            tracer=tracer_factory() if tracer_factory else None)
+            walls.append(time.perf_counter() - t0)
+            assert np.array_equal(d, d_ref), "repeat diverged from reference"
+        return walls
+
+    off_s = timed_runs(None)
+    on_s = timed_runs(lambda: Tracer(sync=False))
+    sync_s = timed_runs(lambda: Tracer(sync=True))
+    med_off = statistics.median(off_s)
+    med_on = statistics.median(on_s)
+    med_sync = statistics.median(sync_s)
+    overhead_pct = (med_on - med_off) / med_off * 100.0
+    overhead_sync_pct = (med_sync - med_off) / med_off * 100.0
+    print(f"warm wall: untraced {med_off*1e3:.1f} ms  "
+          f"traced {med_on*1e3:.1f} ms  overhead {overhead_pct:+.2f}%  "
+          f"(sync spans {med_sync*1e3:.1f} ms, {overhead_sync_pct:+.2f}%)  "
+          f"bit-identical: True")
+    if not smoke:
+        assert overhead_pct < OVERHEAD_CAP_PCT, (
+            f"tracing overhead {overhead_pct:.2f}% exceeds "
+            f"{OVERHEAD_CAP_PCT}% cap")
+
+    # -- cold traced run -> exported trace + utilization report -------------
+    tracer = Tracer()
+    d_cold, st = run_once(dS, dH, nocc, mesh, PlanCache(tracer=tracer),
+                          tracer=tracer)
+    assert np.array_equal(d_cold, d_ref), "cold traced run diverged"
+    summary = write_chrome_trace(tracer, TRACE_PATH)
+    util = worker_utilization(tracer)
+    print(f"\nwrote {os.path.abspath(TRACE_PATH)} "
+          f"({summary['events']} events, {summary['host_spans']} host spans, "
+          f"{summary['workers']} worker tracks)")
+    print(utilization_table(util))
+
+    cats: dict[str, int] = {}
+    for sp in tracer.spans:
+        cats[sp.cat or "?"] = cats.get(sp.cat or "?", 0) + 1
+    imbs = [pi["imbalance"] for pi in
+            st.purify.per_iter + st.inverse.per_iter
+            if pi.get("imbalance") is not None]
+
+    payload = dict(
+        meta=dict(n=n, bs=BS, workers=P, smoke=smoke, repeats=repeats,
+                  tol=TOL, idem_tol=IDEM_TOL, trunc_tau=TRUNC_TAU,
+                  spamm_tau=SPAMM_TAU, overhead_cap_pct=OVERHEAD_CAP_PCT,
+                  initial_layout="all blocks on worker 0"),
+        overhead=dict(
+            untraced_s=[float(t) for t in off_s],
+            traced_s=[float(t) for t in on_s],
+            traced_sync_s=[float(t) for t in sync_s],
+            median_untraced_s=float(med_off),
+            median_traced_s=float(med_on),
+            median_traced_sync_s=float(med_sync),
+            overhead_pct=float(overhead_pct),
+            overhead_sync_pct=float(overhead_sync_pct),
+            bit_identical=True,
+        ),
+        trace=dict(path=os.path.basename(TRACE_PATH), summary=summary,
+                   spans_by_cat=cats, counter_totals=tracer.metrics_flat()),
+        utilization=util,
+        per_iter_imbalance_mean=float(np.mean(imbs)) if imbs else None,
+        per_iter_imbalance_max=float(np.max(imbs)) if imbs else None,
+    )
+    with open(OUT_PATH, "w") as fh:
+        json.dump(payload, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    print(f"\nwrote {os.path.abspath(OUT_PATH)}")
+
+
+if __name__ == "__main__":
+    main()

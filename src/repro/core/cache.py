@@ -16,8 +16,10 @@ Hit/miss counters are surfaced via :meth:`SymbolicCache.stats`.
 from __future__ import annotations
 
 import collections
-import time
 from typing import Any, Callable, Hashable
+
+from ..obs.timing import timed_into
+from ..obs.tracer import NULL_TRACER
 
 __all__ = ["SymbolicCache"]
 
@@ -31,8 +33,9 @@ class SymbolicCache:
     path, a (plan, executable) pair on the distributed path.
     """
 
-    def __init__(self, max_entries: int = 128):
+    def __init__(self, max_entries: int = 128, tracer=None):
         self.max_entries = max_entries
+        self.tracer = tracer
         self._entries: collections.OrderedDict[Hashable, Any] = (
             collections.OrderedDict()
         )
@@ -54,17 +57,34 @@ class SymbolicCache:
         self.build_s = 0.0
         self.symbolic_s = 0.0
 
+    # the tracer rides on the cache: the cache is already threaded through
+    # every resident collective and driver, so instrumented call sites read
+    # it back via repro.obs.tracer_of(cache); assigning None disables tracing
+    @property
+    def tracer(self):
+        return self._tracer
+
+    @tracer.setter
+    def tracer(self, tracer) -> None:
+        self._tracer = tracer if tracer is not None else NULL_TRACER
+
     def get_or_build(self, key: Hashable, builder: Callable[[], Any]) -> Any:
+        kind = key[0] if isinstance(key, tuple) else "?"
+        tr = self.tracer
         if key in self._entries:
             self.hits += 1
-            self._by_kind[(key[0] if isinstance(key, tuple) else "?", "hit")] += 1
+            self._by_kind[(kind, "hit")] += 1
+            if tr.enabled:
+                tr.counter("plan_hits").add()
             self._entries.move_to_end(key)
             return self._entries[key]
         self.misses += 1
-        self._by_kind[(key[0] if isinstance(key, tuple) else "?", "miss")] += 1
-        t0 = time.perf_counter()
-        value = builder()
-        self.build_s += time.perf_counter() - t0
+        self._by_kind[(kind, "miss")] += 1
+        if tr.enabled:
+            tr.counter("plan_misses").add()
+        with timed_into(self, "build_s", tr, "plan_build", cat="plan",
+                        kind=str(kind)):
+            value = builder()
         self._entries[key] = value
         while len(self._entries) > self.max_entries:
             self._entries.popitem(last=False)

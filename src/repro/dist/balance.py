@@ -55,6 +55,7 @@ __all__ = [
     "WorkerLoad",
     "LoadMonitor",
     "worker_load",
+    "calibrate_policy",
     "measure_iteration_load",
     "peek_last_plan",
     "block_reference_weights",
@@ -105,6 +106,11 @@ class WorkerLoad:
     mask); ``recv_bytes`` / ``send_bytes`` are the true (unpadded) operand
     bytes of the planned exchange rounds; ``blocks`` is the (optionally
     norm-weighted) count of resident operand leaves the worker owns.
+
+    ``wall_s``, when set (the drivers thread the measured iteration span
+    duration in via :meth:`LoadMonitor.note_wall`), is the wall-clock
+    seconds of the step this load was measured from — the feedback signal
+    :func:`calibrate_policy` fits the policy's cost coefficients against.
     """
 
     nparts: int
@@ -113,6 +119,7 @@ class WorkerLoad:
     recv_bytes: np.ndarray
     send_bytes: np.ndarray
     blocks: np.ndarray
+    wall_s: float | None = None
 
     def flops(self) -> np.ndarray:
         return 2.0 * self.tasks * float(self.bs) ** 3
@@ -120,6 +127,11 @@ class WorkerLoad:
     def __add__(self, other: "WorkerLoad") -> "WorkerLoad":
         """Accumulate loads of several multiplies (one driver iteration)."""
         assert self.nparts == other.nparts and self.bs == other.bs
+        wall = (
+            None
+            if self.wall_s is None and other.wall_s is None
+            else (self.wall_s or 0.0) + (other.wall_s or 0.0)
+        )
         return WorkerLoad(
             nparts=self.nparts,
             bs=self.bs,
@@ -127,6 +139,7 @@ class WorkerLoad:
             recv_bytes=self.recv_bytes + other.recv_bytes,
             send_bytes=self.send_bytes + other.send_bytes,
             blocks=self.blocks + other.blocks,
+            wall_s=wall,
         )
 
     def combined(self, policy: RebalancePolicy) -> np.ndarray:
@@ -185,6 +198,72 @@ def worker_load(
         send_bytes=send,
         blocks=blocks.astype(np.float64),
     )
+
+
+def calibrate_policy(
+    loads: list[WorkerLoad], base: RebalancePolicy | None = None
+) -> tuple[RebalancePolicy, dict]:
+    """Fit the policy's cost coefficients from measured wall-clock feedback.
+
+    An SPMD step's wall time is set by its slowest worker, so each observed
+    load with a :attr:`WorkerLoad.wall_s` contributes one sample of
+
+        wall  ~=  k_t * max(tasks) + k_r * max(recv)/blk
+                + k_s * max(send)/blk + k_b * max(blocks)
+
+    solved by least squares (coefficients clipped at zero).  ``k_t`` is the
+    seconds-per-task unit; the returned policy carries the measured ratios
+    ``recv_cost = k_r / k_t`` etc. in the usual task-equivalent units —
+    closing the loop the static defaults (0.5 / 0.5 / 0.25) only guessed at.
+    Falls back to ``base`` unchanged (``fitted=False`` in the report) when
+    there are fewer samples than coefficients or the fit degenerates.
+    """
+    base = base if base is not None else RebalancePolicy()
+    samples = [ld for ld in loads if ld.wall_s is not None and ld.wall_s > 0]
+    report = dict(
+        samples=len(samples),
+        fitted=False,
+        task_s=None,
+        recv_cost=base.recv_cost,
+        send_cost=base.send_cost,
+        block_cost=base.block_cost,
+        rms_resid_s=None,
+    )
+    if len(samples) < 4:
+        return base, report
+    blk = float(samples[0].bs * samples[0].bs * 4)
+    X = np.array(
+        [
+            [
+                ld.tasks.max(),
+                ld.recv_bytes.max() / blk,
+                ld.send_bytes.max() / blk,
+                ld.blocks.max(),
+            ]
+            for ld in samples
+        ],
+        dtype=np.float64,
+    )
+    y = np.array([ld.wall_s for ld in samples], dtype=np.float64)
+    k, *_ = np.linalg.lstsq(X, y, rcond=None)
+    k = np.clip(k, 0.0, None)
+    if k[0] <= 0.0:
+        return base, report
+    policy = dataclasses.replace(
+        base,
+        recv_cost=float(k[1] / k[0]),
+        send_cost=float(k[2] / k[0]),
+        block_cost=float(k[3] / k[0]),
+    )
+    report.update(
+        fitted=True,
+        task_s=float(k[0]),
+        recv_cost=policy.recv_cost,
+        send_cost=policy.send_cost,
+        block_cost=policy.block_cost,
+        rms_resid_s=float(np.sqrt(np.mean((X @ k - y) ** 2))),
+    )
+    return policy, report
 
 
 def peek_last_plan(cache) -> SpgemmPlan | None:
@@ -332,6 +411,22 @@ class LoadMonitor:
     def observe(self, load: WorkerLoad) -> float:
         self.loads.append(load)
         return load.imbalance(self.policy)
+
+    def note_wall(self, wall_s: float) -> None:
+        """Attach a measured step wall time to the latest observed load.
+
+        The drivers call this with the iteration span's duration right after
+        :meth:`observe` — the wall-clock feedback :func:`calibrate_policy`
+        fits the policy coefficients against.
+        """
+        if self.loads and wall_s > 0:
+            self.loads[-1] = dataclasses.replace(
+                self.loads[-1], wall_s=float(wall_s)
+            )
+
+    def calibration(self) -> tuple[RebalancePolicy, dict]:
+        """Wall-clock-calibrated policy + fit report from the observed loads."""
+        return calibrate_policy(self.loads, self.policy)
 
     def should_rebalance(self, load: WorkerLoad) -> bool:
         return load.imbalance(self.policy) > self.policy.threshold

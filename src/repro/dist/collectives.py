@@ -26,7 +26,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import time
 
 import jax
 import jax.numpy as jnp
@@ -48,6 +47,8 @@ from repro.core.schedule import (
     structure_fingerprint,
 )
 from repro.jax_compat import shard_map
+from repro.obs.timing import timed_into
+from repro.obs.tracer import tracer_of
 
 from .cache import PlanCache
 from .matrix import DistBSMatrix, mesh_key, resident_block_norms
@@ -221,12 +222,21 @@ def dist_add(
 ) -> DistBSMatrix:
     """C = alpha*A + beta*B on resident stores; structure-union plan cached."""
     assert a.shape == b.shape and a.bs == b.bs, (a.shape, b.shape, a.bs, b.bs)
+    tr = tracer_of(cache)
     key = ("add", _structure_key(a), _structure_key(b))
     build = lambda: AddExecutable(a, b)
-    exe = cache.get_or_build(key, build) if cache is not None else build()
-    store = exe(a.store, b.store, alpha, beta).astype(
-        jnp.result_type(a.dtype, b.dtype)
-    )
+    with tr.span("dist_add", cat="collective", nnzb_a=a.nnzb, nnzb_b=b.nnzb):
+        exe = cache.get_or_build(key, build) if cache is not None else build()
+        with tr.span("dispatch", cat="kernel", op="add") as sp:
+            store = tr.sync(
+                exe(a.store, b.store, alpha, beta).astype(
+                    jnp.result_type(a.dtype, b.dtype)
+                )
+            )
+            if tr.enabled:
+                sp.worker_costs = np.bincount(
+                    exe.c_owner, minlength=a.nparts
+                ).astype(np.float64)
     return DistBSMatrix(
         shape=tuple(a.shape),
         bs=a.bs,
@@ -291,9 +301,11 @@ def dist_trace(a: DistBSMatrix, cache: PlanCache | None = None) -> float:
         mask[a.owner[diag], a.slot[diag]] = 1.0
         return _ReduceExecutable(a, _mapped_masked_trace, mask)
 
-    key = ("trace", _structure_key(a))
-    exe = cache.get_or_build(key, build) if cache is not None else build()
-    return float(exe(a.store))
+    tr = tracer_of(cache)
+    with tr.span("dist_trace", cat="collective", nnzb=a.nnzb):
+        key = ("trace", _structure_key(a))
+        exe = cache.get_or_build(key, build) if cache is not None else build()
+        return float(exe(a.store))
 
 
 def dist_frobenius_norm(a: DistBSMatrix, cache: PlanCache | None = None) -> float:
@@ -301,9 +313,11 @@ def dist_frobenius_norm(a: DistBSMatrix, cache: PlanCache | None = None) -> floa
     def build():
         return _ReduceExecutable(a, _mapped_masked_sumsq, _valid_mask(a))
 
-    key = ("fro", _structure_key(a))
-    exe = cache.get_or_build(key, build) if cache is not None else build()
-    return float(np.sqrt(exe(a.store)))
+    tr = tracer_of(cache)
+    with tr.span("dist_fro", cat="collective", nnzb=a.nnzb):
+        key = ("fro", _structure_key(a))
+        exe = cache.get_or_build(key, build) if cache is not None else build()
+        return float(np.sqrt(exe(a.store)))
 
 
 # --------------------------------------------------------------------------
@@ -396,14 +410,18 @@ def dist_truncate(
     """
     if a.nnzb == 0 or tau <= 0:
         return a
-    t0 = time.perf_counter()
+    tr = tracer_of(cache)
+    # device fetch stays OUTSIDE the symbolic account (same rule as the
+    # hierarchical path, which times only the descent)
     norms_sq = np.asarray(_block_norms_sq(a.store))  # [P, cap] -> host (small)
-    n_sq = norms_sq[a.owner, a.slot].astype(np.float64)
-    order = np.argsort(n_sq)
-    csum = np.sqrt(np.cumsum(n_sq[order]))
-    ndrop = int(np.searchsorted(csum, tau, side="right"))
-    if cache is not None:
-        cache.symbolic_s += time.perf_counter() - t0
+    if tr.enabled:
+        tr.counter("norm_fetch_bytes").add(a.nnzb * 4)
+    with timed_into(cache, "symbolic_s", tr, "truncate_select",
+                    cat="symbolic", nnzb=a.nnzb):
+        n_sq = norms_sq[a.owner, a.slot].astype(np.float64)
+        order = np.argsort(n_sq)
+        csum = np.sqrt(np.cumsum(n_sq[order]))
+        ndrop = int(np.searchsorted(csum, tau, side="right"))
     if ndrop == 0:
         return a
     keep = np.ones(a.nnzb, dtype=bool)
@@ -486,9 +504,13 @@ class TransposeExecutable:
         nparts, mesh = a.nparts, a.mesh
         src = transpose_permutation(a.coords)  # out stack pos -> a stack idx
         out_owner = partition_morton(a.nnzb, nparts)
-        out_slot, out_cap, offsets, send, _, gidx, gval = _relayout_gather_plan(
-            a, out_owner, src
+        out_slot, out_cap, offsets, send, send_cnt, gidx, gval = (
+            _relayout_gather_plan(a, out_owner, src)
         )
+        # per-source true send counts (stats/trace attribution)
+        self.sent_blocks = np.zeros(nparts, dtype=np.int64)
+        for d in offsets:
+            self.sent_blocks += send_cnt[d]
 
         self.src = src
         self.out_coords = a.coords[src][:, ::-1]
@@ -523,9 +545,21 @@ def dist_transpose(
     downstream multiply plans see the canonical Morton placement; blocks
     transpose in place on their destination device.
     """
+    tr = tracer_of(cache)
     key = ("transpose", _structure_key(a))
     build = lambda: TransposeExecutable(a)
-    exe = cache.get_or_build(key, build) if cache is not None else build()
+    with tr.span("dist_transpose", cat="collective", nnzb=a.nnzb):
+        exe = cache.get_or_build(key, build) if cache is not None else build()
+        with tr.span("dispatch", cat="kernel", op="transpose") as sp:
+            store = tr.sync(exe(a.store))
+            if tr.enabled:
+                blk = a.bs * a.bs * a.store.dtype.itemsize
+                shipped = int(exe.sent_blocks.sum())
+                sp.args.update(sent_blocks=shipped)
+                tr.counter("send_bytes").add(shipped * blk)
+                tr.counter("recv_bytes").add(shipped * blk)
+                # cost share: blocks each source ships, plus the local gather
+                sp.worker_costs = exe.sent_blocks.astype(np.float64) + 1.0
     return DistBSMatrix(
         shape=(a.shape[1], a.shape[0]),
         bs=a.bs,
@@ -533,7 +567,7 @@ def dist_transpose(
         owner=exe.out_owner,
         slot=exe.out_slot,
         cap=exe.out_cap,
-        store=exe(a.store),
+        store=store,
         mesh=a.mesh,
     )
 
@@ -633,18 +667,27 @@ def dist_repartition(
             stats["migrated_bytes"] = 0
             stats["sent_blocks_per_worker"] = np.zeros(x.nparts, dtype=np.int64)
         return x
+    tr = tracer_of(cache)
     key = (
         "repartition",
         _structure_key(x),
         structure_fingerprint(new_owner),
     )
     build = lambda: RepartitionExecutable(x, new_owner)
-    exe = cache.get_or_build(key, build) if cache is not None else build()
-    if stats is not None:
-        blk = x.bs * x.bs * x.store.dtype.itemsize
-        stats["migrated_blocks"] = exe.migrated_blocks
-        stats["migrated_bytes"] = exe.migrated_blocks * blk
-        stats["sent_blocks_per_worker"] = exe.sent_blocks.copy()
+    blk = x.bs * x.bs * x.store.dtype.itemsize
+    with tr.span("dist_repartition", cat="migration", nnzb=x.nnzb) as msp:
+        exe = cache.get_or_build(key, build) if cache is not None else build()
+        if stats is not None:
+            stats["migrated_blocks"] = exe.migrated_blocks
+            stats["migrated_bytes"] = exe.migrated_blocks * blk
+            stats["sent_blocks_per_worker"] = exe.sent_blocks.copy()
+        with tr.span("dispatch", cat="kernel", op="repartition") as sp:
+            store = tr.sync(exe(x.store))
+            if tr.enabled:
+                msp.args.update(migrated_blocks=exe.migrated_blocks)
+                tr.counter("migrated_bytes").add(exe.migrated_blocks * blk)
+                # cost share: blocks each source ships, plus the local gather
+                sp.worker_costs = exe.sent_blocks.astype(np.float64) + 1.0
     return DistBSMatrix(
         shape=tuple(x.shape),
         bs=x.bs,
@@ -652,7 +695,7 @@ def dist_repartition(
         owner=exe.new_owner,
         slot=exe.new_slot,
         cap=exe.new_cap,
-        store=exe(x.store),
+        store=store,
         mesh=x.mesh,
     )
 
@@ -837,12 +880,11 @@ def dist_truncate_hierarchical(
         # outside the symbolic timer: a miss on the fused norm executable is
         # timed into cache.build_s by get_or_build
         norms = resident_block_norms(a, cache)
-    t0 = time.perf_counter()
-    depth = quadtree_depth(-(-a.shape[0] // a.bs), -(-a.shape[1] // a.bs))
-    qt = build_quadtree_index(a.coords, norms, depth=depth)
-    keep, visited = hierarchical_drop_mask(qt, tau)
-    if cache is not None:
-        cache.symbolic_s += time.perf_counter() - t0
+    with timed_into(cache, "symbolic_s", tracer_of(cache), "hierarchical_drop",
+                    cat="symbolic", nnzb=a.nnzb):
+        depth = quadtree_depth(-(-a.shape[0] // a.bs), -(-a.shape[1] // a.bs))
+        qt = build_quadtree_index(a.coords, norms, depth=depth)
+        keep, visited = hierarchical_drop_mask(qt, tau)
     if stats is not None:
         stats["nodes_visited"] = visited
     if keep.all():

@@ -30,7 +30,6 @@ with the host driver, so both stop on the identical criterion.
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import numpy as np
 
@@ -41,6 +40,8 @@ from repro.core.inverse import (
     factorization_residual,
 )
 from repro.core.schedule import plan_stats
+from repro.obs.timing import IterationScope
+from repro.obs.tracer import run_metrics, tracer_of
 
 from .balance import (
     LoadMonitor,
@@ -86,9 +87,14 @@ class DistInverseStats:
     residual_history: list
     factorization_residual: float
     nnzb_history: list
-    cache: dict  # PlanCache.stats() at exit
-    per_iter: list
+    cache: dict  # run_metrics(cache) at exit: PlanCache.stats() keys plus
+    # every tracer counter/gauge when tracing was enabled
+    per_iter: list  # shared-schema rows (repro.obs.timing.SHARED_ITER_KEYS
+    # plus the refinement residual)
     rebalances: int = 0  # re-layouts performed by the rebalance= policy
+    # wall-clock calibration of the rebalance policy's cost coefficients
+    # (repro.dist.balance.calibrate_policy report); None without rebalance=
+    calibration: dict | None = None
 
 
 def dist_inv_chol(
@@ -112,30 +118,35 @@ def dist_inv_chol(
     nbr = -(-a.shape[0] // a.bs)
     if nbr <= leaf_blocks:
         return scatter(_dense_inv_chol(a.gather()), a.mesh)
-    depth = int(np.ceil(np.log2(nbr)))
-    split = 1 << (depth - 1)
-    a00 = dist_submatrix(a, 0, split, 0, split, cache)
-    a01 = dist_submatrix(a, 0, split, split, nbr, cache)
-    a11 = dist_submatrix(a, split, nbr, split, nbr, cache)
-    z00 = dist_inv_chol(a00, cache, leaf_blocks=leaf_blocks, exchange=exchange, impl=impl)
-    w = dist_multiply(
-        dist_transpose(a01, cache), z00, cache, exchange=exchange, impl=impl
-    )  # [n1, n0]
-    wt = dist_transpose(w, cache)  # shared by the Schur and coupling steps
-    s = dist_add(
-        a11, dist_multiply(w, wt, cache, exchange=exchange, impl=impl), 1.0, -1.0,
-        cache,
-    )
-    z11 = dist_inv_chol(s, cache, leaf_blocks=leaf_blocks, exchange=exchange, impl=impl)
-    z01 = dist_multiply(
-        dist_multiply(z00, wt, cache, exchange=exchange, impl=impl),
-        z11,
-        cache,
-        exchange=exchange,
-        impl=impl,
-    ).scale(-1.0)
-    zero = dist_zeros((a11.shape[0], a00.shape[1]), a.bs, a.mesh, a.dtype)
-    return dist_assemble2x2(z00, z01, zero, z11, split, cache)
+    with tracer_of(cache).span("inv_chol", cat="collective", nbr=int(nbr)):
+        depth = int(np.ceil(np.log2(nbr)))
+        split = 1 << (depth - 1)
+        a00 = dist_submatrix(a, 0, split, 0, split, cache)
+        a01 = dist_submatrix(a, 0, split, split, nbr, cache)
+        a11 = dist_submatrix(a, split, nbr, split, nbr, cache)
+        z00 = dist_inv_chol(
+            a00, cache, leaf_blocks=leaf_blocks, exchange=exchange, impl=impl
+        )
+        w = dist_multiply(
+            dist_transpose(a01, cache), z00, cache, exchange=exchange, impl=impl
+        )  # [n1, n0]
+        wt = dist_transpose(w, cache)  # shared by Schur and coupling steps
+        s = dist_add(
+            a11, dist_multiply(w, wt, cache, exchange=exchange, impl=impl),
+            1.0, -1.0, cache,
+        )
+        z11 = dist_inv_chol(
+            s, cache, leaf_blocks=leaf_blocks, exchange=exchange, impl=impl
+        )
+        z01 = dist_multiply(
+            dist_multiply(z00, wt, cache, exchange=exchange, impl=impl),
+            z11,
+            cache,
+            exchange=exchange,
+            impl=impl,
+        ).scale(-1.0)
+        zero = dist_zeros((a11.shape[0], a00.shape[1]), a.bs, a.mesh, a.dtype)
+        return dist_assemble2x2(z00, z01, zero, z11, split, cache)
 
 
 def dist_localized_inverse_factorization(
@@ -151,6 +162,7 @@ def dist_localized_inverse_factorization(
     exchange: str = "p2p",
     impl: str = "ref",
     rebalance: RebalancePolicy | None = None,
+    tracer=None,
 ) -> tuple[DistBSMatrix, DistInverseStats]:
     """Divide-and-conquer inverse factorization, resident end to end.
 
@@ -182,159 +194,182 @@ def dist_localized_inverse_factorization(
     ``imbalance_after`` / ``migrated_bytes`` per-iteration rows.
     """
     cache = cache if cache is not None else PlanCache()
-    lb = LoadMonitor(a.nparts, rebalance) if rebalance is not None else None
-    upfront_migrated = 0
-    if lb is not None:
-        # the pinned operand's layout is never revisited by the iteration:
-        # a skewed scatter would make one worker ship its store every
-        # refinement multiply forever — fix it once, up-front, on device
-        # (its bytes land in iteration 0's row)
-        a, upfront_migrated = lb.relayout_if_skewed(a, cache)
-    nbr = -(-a.shape[0] // a.bs)
-    if nbr <= leaf_blocks:
-        host_a = a.gather()
-        z_host = _dense_inv_chol(host_a)
-        return scatter(z_host, a.mesh), DistInverseStats(
-            0, [], factorization_residual(host_a, z_host, impl="ref"),
-            [z_host.nnzb], cache.stats(), [],
-        )
-    depth = int(np.ceil(np.log2(nbr)))
-    split = 1 << (depth - 1)
-    a00 = dist_submatrix(a, 0, split, 0, split, cache)
-    a11 = dist_submatrix(a, split, nbr, split, nbr, cache)
-    kw = dict(leaf_blocks=leaf_blocks, exchange=exchange, impl=impl)
-    z00 = dist_inv_chol(a00, cache, **kw)
-    z11 = dist_inv_chol(a11, cache, **kw)
-    zero01 = dist_zeros((z00.shape[0], z11.shape[1]), a.bs, a.mesh, a.dtype)
-    zero10 = dist_zeros((z11.shape[0], z00.shape[1]), a.bs, a.mesh, a.dtype)
-    z = dist_assemble2x2(z00, zero01, zero10, z11, split, cache)
-
-    eye = scatter(identity(a.shape[0], a.bs, a.dtype), a.mesh)
-    # the SPD operand's norms never change: one fetch serves every iteration
-    a_norms = resident_block_norms(a, cache) if spamm_tau > 0 else None
-    monitor = RefineMonitor(tol)
-    best = z
-    history: list[float] = []
-    nnzbs: list[int] = []
-    per_iter: list[dict] = []
-    z_norms = None  # stack-order norm table of z, carried over from truncation
-    for it in range(max_iter):
-        snap, t0 = cache.snapshot(), time.perf_counter()
-        z_op = z  # the iterate the refinement multiplies read this iteration
-        mult_err = 0.0
-        norm_fetch_bytes = 0
-        # measured per-worker cost accumulates over BOTH residual multiplies
-        # — the (zt)a plan is where a pinned skewed operand shows up
-        leaf_w = (z_norms != 0.0).astype(np.float64) if z_norms is not None else None
-        a_leaf_w = (
-            (a_norms != 0.0).astype(np.float64) if a_norms is not None else None
-        )
-        if spamm_tau > 0:
-            zt = dist_transpose(z, cache)
-            zt_norms = (
-                z_norms[transpose_permutation(z.coords)]
-                if z_norms is not None
-                else None
-            )
-            za, e1 = dist_spamm(
-                zt, a, spamm_tau, cache, exchange=exchange, impl=impl,
-                method=spamm_method, a_norms=zt_norms, b_norms=a_norms,
-            )
-            load_zta = measure_iteration_load(
-                cache, peek_last_plan(cache), None, a_leaf_w
-            )
-            zaz, e2 = dist_spamm(
-                za, z, spamm_tau, cache, exchange=exchange, impl=impl,
-                method=spamm_method, b_norms=z_norms,
-            )
-            mult_err = max(e1, e2)
-        else:
-            zt = dist_transpose(z, cache)
-            za = dist_multiply(zt, a, cache, exchange=exchange, impl=impl)
-            load_zta = measure_iteration_load(
-                cache, peek_last_plan(cache), None, a_leaf_w
-            )
-            zaz = dist_multiply(za, z, cache, exchange=exchange, impl=impl)
-        plan = peek_last_plan(cache)  # the (za)z plan: recv stats + z weights
-        load = measure_iteration_load(cache, plan, None, leaf_w)
-        if load is None:
-            # the (za)z multiply built no plan (e.g. its full task list is
-            # empty): the (zt)a measurement still counts — a skewed pinned
-            # operand must not go unreported
-            load = load_zta
-        elif load_zta is not None:
-            load = load + load_zta
-        imb = None
-        if load is not None:
-            imb = lb.observe(load) if lb is not None else load.imbalance()
-        delta = dist_add(eye, zaz, 1.0, -1.0, cache)
-        r = dist_frobenius_norm(delta, cache)
-        history.append(r)
-        nnzbs.append(z.nnzb)
-        nnzb_it = z.nnzb
-        stop = monitor.update(it, r)
-        if monitor.improved:
-            best = z
-        if not stop:
-            step = dist_add(eye, delta, 1.0, 0.5, cache)  # I + delta/2
-            if spamm_tau > 0:
-                z, e3 = dist_spamm(
-                    z, step, spamm_tau, cache, exchange=exchange, impl=impl,
-                    method=spamm_method, a_norms=z_norms,
-                )
-                mult_err = max(mult_err, e3)
-            else:
-                z = dist_multiply(z, step, cache, exchange=exchange, impl=impl)
-            z_norms = None
-            if trunc_tau > 0:
-                # one norm-table fetch serves the truncation descent and the
-                # next iteration's SpAMM (both orientations of Z)
-                pre_norms = resident_block_norms(z, cache)
-                norm_fetch_bytes = pre_norms.shape[0] * 4
-                info: dict = {}
-                z = dist_truncate_hierarchical(
-                    z, trunc_tau, cache, norms=pre_norms, stats=info
-                )
-                z_norms = pre_norms[info["kept"]]
-        imb_after, migrated = None, upfront_migrated
+    if tracer is not None:
+        cache.tracer = tracer
+    trc = tracer_of(cache)
+    with trc.span("inverse_factorization", cat="phase", n=int(a.shape[0])):
+        lb = LoadMonitor(a.nparts, rebalance) if rebalance is not None else None
         upfront_migrated = 0
-        if (
-            lb is not None
-            and not stop
-            and load is not None
-            and lb.should_rebalance(load)
-            and plan is not None
-        ):
-            # measured per-block weights for the iterate: its reference
-            # counts as the b operand of the executed (za)z plan plus one
-            # unit of ownership, mapped onto the updated structure
-            _, wb = block_reference_weights(
-                plan.tasks, plan.a_owner.shape[0], z_op.nnzb
+        if lb is not None:
+            # the pinned operand's layout is never revisited by the
+            # iteration: a skewed scatter would make one worker ship its
+            # store every refinement multiply forever — fix it once,
+            # up-front, on device (its bytes land in iteration 0's row)
+            a, upfront_migrated = lb.relayout_if_skewed(a, cache)
+        nbr = -(-a.shape[0] // a.bs)
+        if nbr <= leaf_blocks:
+            host_a = a.gather()
+            z_host = _dense_inv_chol(host_a)
+            return scatter(z_host, a.mesh), DistInverseStats(
+                0, [], factorization_residual(host_a, z_host, impl="ref"),
+                [z_host.nnzb], run_metrics(cache), [],
             )
-            w = map_block_weights(z_op.coords, wb + 1.0, z.coords, default=1.0)
-            # z_norms is stack-ordered, so it survives the re-layout
-            z, moved, imb_after = lb.migrate(z, w, cache)
-            migrated += moved
-        per_iter.append(
-            dict(
-                iteration=it,
-                nnzb=nnzb_it,
-                residual=r,
-                spamm_err=mult_err,
-                recv_bytes_mean=(
-                    plan_stats(plan)["recv_bytes_mean"] if plan is not None else 0.0
-                ),
-                norm_fetch_bytes=norm_fetch_bytes,
-                imbalance=imb,
-                imbalance_after=imb_after,
-                migrated_bytes=migrated,
-                wall_s=time.perf_counter() - t0,
-                **cache.delta(snap),
-            )
-        )
-        if stop:
-            break
+        depth = int(np.ceil(np.log2(nbr)))
+        split = 1 << (depth - 1)
+        a00 = dist_submatrix(a, 0, split, 0, split, cache)
+        a11 = dist_submatrix(a, split, nbr, split, nbr, cache)
+        kw = dict(leaf_blocks=leaf_blocks, exchange=exchange, impl=impl)
+        z00 = dist_inv_chol(a00, cache, **kw)
+        z11 = dist_inv_chol(a11, cache, **kw)
+        zero01 = dist_zeros((z00.shape[0], z11.shape[1]), a.bs, a.mesh, a.dtype)
+        zero10 = dist_zeros((z11.shape[0], z00.shape[1]), a.bs, a.mesh, a.dtype)
+        z = dist_assemble2x2(z00, zero01, zero10, z11, split, cache)
+
+        eye = scatter(identity(a.shape[0], a.bs, a.dtype), a.mesh)
+        # the SPD operand's norms never change: one fetch serves all
+        # iterations
+        a_norms = resident_block_norms(a, cache) if spamm_tau > 0 else None
+        monitor = RefineMonitor(tol)
+        best = z
+        history: list[float] = []
+        nnzbs: list[int] = []
+        per_iter: list[dict] = []
+        z_norms = None  # stack-order norm table of z, carried from truncation
+        for it in range(max_iter):
+            with IterationScope(cache, it, trc, name="inv_iteration") as scope:
+                z_op = z  # the iterate the refinement multiplies read
+                mult_err = 0.0
+                norm_fetch_bytes = 0
+                # measured per-worker cost accumulates over BOTH residual
+                # multiplies — the (zt)a plan is where a pinned skewed
+                # operand shows up
+                leaf_w = (
+                    (z_norms != 0.0).astype(np.float64)
+                    if z_norms is not None
+                    else None
+                )
+                a_leaf_w = (
+                    (a_norms != 0.0).astype(np.float64)
+                    if a_norms is not None
+                    else None
+                )
+                if spamm_tau > 0:
+                    zt = dist_transpose(z, cache)
+                    zt_norms = (
+                        z_norms[transpose_permutation(z.coords)]
+                        if z_norms is not None
+                        else None
+                    )
+                    za, e1 = dist_spamm(
+                        zt, a, spamm_tau, cache, exchange=exchange, impl=impl,
+                        method=spamm_method, a_norms=zt_norms, b_norms=a_norms,
+                    )
+                    load_zta = measure_iteration_load(
+                        cache, peek_last_plan(cache), None, a_leaf_w
+                    )
+                    zaz, e2 = dist_spamm(
+                        za, z, spamm_tau, cache, exchange=exchange, impl=impl,
+                        method=spamm_method, b_norms=z_norms,
+                    )
+                    mult_err = max(e1, e2)
+                else:
+                    zt = dist_transpose(z, cache)
+                    za = dist_multiply(zt, a, cache, exchange=exchange, impl=impl)
+                    load_zta = measure_iteration_load(
+                        cache, peek_last_plan(cache), None, a_leaf_w
+                    )
+                    zaz = dist_multiply(za, z, cache, exchange=exchange, impl=impl)
+                plan = peek_last_plan(cache)  # (za)z plan: recv stats + z weights
+                load = measure_iteration_load(cache, plan, None, leaf_w)
+                if load is None:
+                    # the (za)z multiply built no plan (e.g. its full task
+                    # list is empty): the (zt)a measurement still counts — a
+                    # skewed pinned operand must not go unreported
+                    load = load_zta
+                elif load_zta is not None:
+                    load = load + load_zta
+                imb = None
+                if load is not None:
+                    imb = lb.observe(load) if lb is not None else load.imbalance()
+                delta = dist_add(eye, zaz, 1.0, -1.0, cache)
+                r = dist_frobenius_norm(delta, cache)
+                history.append(r)
+                nnzbs.append(z.nnzb)
+                nnzb_it = z.nnzb
+                stop = monitor.update(it, r)
+                if monitor.improved:
+                    best = z
+                if not stop:
+                    step = dist_add(eye, delta, 1.0, 0.5, cache)  # I + delta/2
+                    if spamm_tau > 0:
+                        z, e3 = dist_spamm(
+                            z, step, spamm_tau, cache,
+                            exchange=exchange, impl=impl,
+                            method=spamm_method, a_norms=z_norms,
+                        )
+                        mult_err = max(mult_err, e3)
+                    else:
+                        z = dist_multiply(
+                            z, step, cache, exchange=exchange, impl=impl
+                        )
+                    z_norms = None
+                    if trunc_tau > 0:
+                        # one norm-table fetch serves the truncation descent
+                        # and the next iteration's SpAMM (both orientations
+                        # of Z)
+                        pre_norms = resident_block_norms(z, cache)
+                        norm_fetch_bytes = pre_norms.shape[0] * 4
+                        info: dict = {}
+                        z = dist_truncate_hierarchical(
+                            z, trunc_tau, cache, norms=pre_norms, stats=info
+                        )
+                        z_norms = pre_norms[info["kept"]]
+                imb_after, migrated = None, upfront_migrated
+                upfront_migrated = 0
+                if (
+                    lb is not None
+                    and not stop
+                    and load is not None
+                    and lb.should_rebalance(load)
+                    and plan is not None
+                ):
+                    # measured per-block weights for the iterate: its
+                    # reference counts as the b operand of the executed (za)z
+                    # plan plus one unit of ownership, mapped onto the
+                    # updated structure
+                    _, wb = block_reference_weights(
+                        plan.tasks, plan.a_owner.shape[0], z_op.nnzb
+                    )
+                    w = map_block_weights(
+                        z_op.coords, wb + 1.0, z.coords, default=1.0
+                    )
+                    # z_norms is stack-ordered, so it survives the re-layout
+                    z, moved, imb_after = lb.migrate(z, w, cache)
+                    migrated += moved
+                row = scope.row(
+                    nnzb=nnzb_it,
+                    residual=r,
+                    spamm_err=mult_err,
+                    recv_bytes_mean=(
+                        plan_stats(plan)["recv_bytes_mean"]
+                        if plan is not None
+                        else 0.0
+                    ),
+                    norm_fetch_bytes=norm_fetch_bytes,
+                    imbalance=imb,
+                    imbalance_after=imb_after,
+                    migrated_bytes=migrated,
+                )
+                per_iter.append(row)
+                if lb is not None and load is not None:
+                    # wall-clock feedback: the measured iteration time
+                    # calibrates the policy's cost coefficients
+                    lb.note_wall(row["wall_s"])
+            if stop:
+                break
     return best, DistInverseStats(
-        len(history), history, monitor.best_r, nnzbs, cache.stats(), per_iter,
+        len(history), history, monitor.best_r, nnzbs, run_metrics(cache),
+        per_iter,
         rebalances=lb.rebalances if lb is not None else 0,
+        calibration=lb.calibration()[1] if lb is not None else None,
     )

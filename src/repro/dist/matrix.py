@@ -194,16 +194,22 @@ def resident_block_norms(x: DistBSMatrix, cache=None) -> np.ndarray:
     """
     if x.nnzb == 0:
         return np.zeros((0,), dtype=np.float64)
-    if cache is not None:
-        key = (
-            "norms",
-            structure_fingerprint(x.codes(), x.owner, x.nparts, x.bs),
-            mesh_key(x.mesh),
-        )
-        exe = cache.get_or_build(key, lambda: NormTableExecutable(x))
-        return exe(x.store).astype(np.float64)
-    table = np.asarray(block_frobenius_norms(x.store))  # [P, cap] -> host
-    return table[x.owner, x.slot].astype(np.float64)
+    from repro.obs.tracer import tracer_of
+
+    tr = tracer_of(cache)
+    with tr.span("norm_fetch", cat="collective", nnzb=x.nnzb):
+        if tr.enabled:
+            tr.counter("norm_fetch_bytes").add(x.nnzb * 4)
+        if cache is not None:
+            key = (
+                "norms",
+                structure_fingerprint(x.codes(), x.owner, x.nparts, x.bs),
+                mesh_key(x.mesh),
+            )
+            exe = cache.get_or_build(key, lambda: NormTableExecutable(x))
+            return exe(x.store).astype(np.float64)
+        table = np.asarray(block_frobenius_norms(x.store))  # [P, cap] -> host
+        return table[x.owner, x.slot].astype(np.float64)
 
 
 def dist_zeros(

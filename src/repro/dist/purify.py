@@ -17,7 +17,6 @@ convergence / divergence monitor) with the single-host driver via
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import numpy as np
 from jax.sharding import Mesh
@@ -27,6 +26,8 @@ from repro.core.distributed import make_worker_mesh
 from repro.core.matrix import BSMatrix
 from repro.core.purify import PurifyStats, Sp2Monitor, sp2_init_coeffs, sp2_should_square
 from repro.core.schedule import SpgemmPlan, plan_stats
+from repro.obs.timing import IterationScope
+from repro.obs.tracer import run_metrics, tracer_of
 
 from .balance import (
     LoadMonitor,
@@ -64,11 +65,16 @@ class DistPurifyStats:
     trace_history: list
     idempotency_history: list
     nnzb_history: list
-    cache: dict  # PlanCache.stats() at exit
-    per_iter: list  # dicts: plan-cache hits/misses, recv bytes, nnzb,
-    # measured worker-load imbalance (always) and imbalance_after /
-    # migrated_bytes when a rebalance= policy re-laid the iterate out
+    cache: dict  # run_metrics(cache) at exit: PlanCache.stats() keys plus
+    # every tracer counter/gauge when tracing was enabled
+    per_iter: list  # shared-schema rows (repro.obs.timing.SHARED_ITER_KEYS
+    # plus SP2 extras): plan-cache hits/misses, recv bytes, nnzb, measured
+    # worker-load imbalance (always) and imbalance_after / migrated_bytes
+    # when a rebalance= policy re-laid the iterate out
     rebalances: int = 0  # re-layouts performed by the rebalance= policy
+    # wall-clock calibration of the rebalance policy's cost coefficients
+    # (repro.dist.balance.calibrate_policy report); None without rebalance=
+    calibration: dict | None = None
 
     def as_purify_stats(self) -> PurifyStats:
         return PurifyStats(
@@ -97,6 +103,7 @@ def dist_sp2_purify(
     cache: PlanCache | None = None,
     return_resident: bool = False,
     rebalance: RebalancePolicy | None = None,
+    tracer=None,
 ) -> tuple[BSMatrix | DistBSMatrix, DistPurifyStats]:
     """SP2 purification with every iterate resident on the worker mesh.
 
@@ -135,135 +142,163 @@ def dist_sp2_purify(
     ``rebalance=None``, so static runs are comparable), plus
     ``imbalance_after`` and ``migrated_bytes`` when a re-layout happened.
     Values are bit-identical to the static run — only the schedule changes.
+
+    ``tracer`` (a :class:`repro.obs.Tracer`) turns on span tracing for the
+    whole run: it is attached to the plan cache, so every collective,
+    kernel dispatch and plan build records nested spans under one
+    ``sp2_purify`` phase.  Tracing never touches numerics — results are
+    bit-identical with it on, off, or NULL.
     """
     cache = cache if cache is not None else PlanCache()
-    scale, shift = sp2_init_coeffs(lmin, lmax)
-    if isinstance(f, DistBSMatrix):
-        assert mesh is None or mesh is f.mesh, (
-            "resident F already lives on a mesh; drop the mesh argument or "
-            "pass the one it was scattered onto"
-        )
-        mesh = f.mesh
-        # X0 = scale*F + shift*I, built resident: only the diagonal identity
-        # enters through scatter; F's store never leaves the mesh
-        eye = scatter(identity(f.shape[0], f.bs, f.dtype), mesh)
-        x = dist_add(f, eye, scale, shift, cache)
-    else:
-        mesh = mesh or make_worker_mesh()
-        x0 = add_scaled_identity(f.scale(scale), shift)
-        x = scatter(x0, mesh)
-
-    traces, idems, nnzbs, per_iter = [], [], [], []
-    monitor = Sp2Monitor(idem_tol)
-    lb = LoadMonitor(x.nparts, rebalance) if rebalance is not None else None
-    upfront_migrated = 0
-    if lb is not None:
-        # a skewed X0 (inherited from F's scatter) would pay one fully
-        # imbalanced iteration before the first measured re-layout; fix the
-        # ownership skew up-front (its bytes land in iteration 0's row)
-        x, upfront_migrated = lb.relayout_if_skewed(x, cache)
-    best = x
-    x_norms = None  # stack-order norm table of x, carried over from truncation
-    for it in range(max_iter):
-        snap, t0 = cache.snapshot(), time.perf_counter()
-        x_op = x  # the multiply operand: measured weights refer to its stack
-        if spamm_tau > 0:
-            x2, mult_err = dist_spamm(
-                x, x, spamm_tau, cache,
-                exchange=exchange, impl=impl,
-                method=spamm_method, a_norms=x_norms,
+    if tracer is not None:
+        cache.tracer = tracer
+    trc = tracer_of(cache)
+    with trc.span("sp2_purify", cat="phase", n=int(f.shape[0])):
+        scale, shift = sp2_init_coeffs(lmin, lmax)
+        if isinstance(f, DistBSMatrix):
+            assert mesh is None or mesh is f.mesh, (
+                "resident F already lives on a mesh; drop the mesh argument "
+                "or pass the one it was scattered onto"
             )
+            mesh = f.mesh
+            # X0 = scale*F + shift*I, built resident: only the diagonal
+            # identity enters through scatter; F's store never leaves the mesh
+            eye = scatter(identity(f.shape[0], f.bs, f.dtype), mesh)
+            x = dist_add(f, eye, scale, shift, cache)
         else:
-            x2 = dist_multiply(x, x, cache, exchange=exchange, impl=impl)
-            mult_err = 0.0
-        # peek the plan the multiply actually used (exact, SpAMM-replan or
-        # SpAMM-delta — last_plan_key tracks all three), so recv-bytes stats
-        # stay truthful for every multiply mode
-        entry = (
-            cache.peek(cache.last_plan_key)
-            if cache.last_plan_key is not None
-            else None
-        )
-        plan = entry[0] if entry is not None else None
-        assert plan is None or isinstance(plan, SpgemmPlan)
-        # measured per-worker cost of the multiply just executed (reported in
-        # static runs too, so rebalanced and static trajectories compare)
-        leaf_w = (x_norms != 0.0).astype(np.float64) if x_norms is not None else None
-        load = measure_iteration_load(cache, plan, leaf_w, leaf_w)
-        imb = None
-        if load is not None:
-            imb = lb.observe(load) if lb is not None else load.imbalance()
-        idem = dist_frobenius_norm(dist_add(x2, x, 1.0, -1.0, cache), cache)
-        tr = dist_trace(x, cache)
-        traces.append(tr)
-        idems.append(idem)
-        nnzbs.append(x.nnzb)
-        nnzb_it = x.nnzb
-        stop = monitor.update(it, idem)
-        if monitor.improved:
-            best = x
-        if not stop:
-            if sp2_should_square(tr, n_occ):
-                x = x2
-            else:
-                x = dist_add(x, x2, 2.0, -1.0, cache)
-            x_norms = None
-            if trunc_tau > 0:
-                if trunc_method == "hierarchical":
-                    # one norm-table fetch serves both the truncation descent
-                    # and the next iteration's SpAMM: compaction keeps block
-                    # values, so the kept subset of the table is the
-                    # truncated matrix's
-                    pre_norms = resident_block_norms(x, cache)
-                    info: dict = {}
-                    x = dist_truncate_hierarchical(
-                        x, trunc_tau, cache, norms=pre_norms, stats=info
-                    )
-                    x_norms = pre_norms[info["kept"]]
-                else:
-                    assert trunc_method == "leaf", trunc_method
-                    x = dist_truncate(x, trunc_tau, cache)
-        imb_after, migrated = None, upfront_migrated
+            mesh = mesh or make_worker_mesh()
+            x0 = add_scaled_identity(f.scale(scale), shift)
+            x = scatter(x0, mesh)
+
+        traces, idems, nnzbs, per_iter = [], [], [], []
+        monitor = Sp2Monitor(idem_tol)
+        lb = LoadMonitor(x.nparts, rebalance) if rebalance is not None else None
         upfront_migrated = 0
-        if (
-            lb is not None
-            and not stop
-            and load is not None
-            and lb.should_rebalance(load)
-            and plan is not None
-        ):
-            # measured per-block weights: reads of each operand block in the
-            # executed task list plus one unit of ownership, mapped onto the
-            # updated iterate's structure by Morton code
-            wa, wb = block_reference_weights(plan.tasks, x_op.nnzb, x_op.nnzb)
-            w = map_block_weights(x_op.coords, wa + wb + 1.0, x.coords, default=1.0)
-            # x_norms is stack-ordered, so it survives the re-layout
-            x, moved, imb_after = lb.migrate(x, w, cache)
-            migrated += moved
-        # appended after the update + truncation so each row carries its own
-        # iteration's full cache/timing deltas (truncation included)
-        per_iter.append(
-            dict(
-                iteration=it,
-                nnzb=nnzb_it,
-                idem=idem,
-                trace=tr,
-                spamm_err=mult_err,
-                recv_bytes_mean=(
-                    plan_stats(plan)["recv_bytes_mean"] if plan is not None else 0.0
-                ),
-                imbalance=imb,
-                imbalance_after=imb_after,
-                migrated_bytes=migrated,
-                wall_s=time.perf_counter() - t0,
-                **cache.delta(snap),
-            )
-        )
-        if stop:
-            break
+        if lb is not None:
+            # a skewed X0 (inherited from F's scatter) would pay one fully
+            # imbalanced iteration before the first measured re-layout; fix
+            # the ownership skew up-front (its bytes land in iteration 0's
+            # row)
+            x, upfront_migrated = lb.relayout_if_skewed(x, cache)
+        best = x
+        x_norms = None  # stack-order norm table of x, carried from truncation
+        for it in range(max_iter):
+            with IterationScope(cache, it, trc, name="sp2_iteration") as scope:
+                x_op = x  # multiply operand: measured weights refer to it
+                if spamm_tau > 0:
+                    x2, mult_err = dist_spamm(
+                        x, x, spamm_tau, cache,
+                        exchange=exchange, impl=impl,
+                        method=spamm_method, a_norms=x_norms,
+                    )
+                else:
+                    x2 = dist_multiply(x, x, cache, exchange=exchange, impl=impl)
+                    mult_err = 0.0
+                # peek the plan the multiply actually used (exact,
+                # SpAMM-replan or SpAMM-delta — last_plan_key tracks all
+                # three), so recv-bytes stats stay truthful for every mode
+                entry = (
+                    cache.peek(cache.last_plan_key)
+                    if cache.last_plan_key is not None
+                    else None
+                )
+                plan = entry[0] if entry is not None else None
+                assert plan is None or isinstance(plan, SpgemmPlan)
+                # measured per-worker cost of the multiply just executed
+                # (reported in static runs too, so rebalanced and static
+                # trajectories compare)
+                leaf_w = (
+                    (x_norms != 0.0).astype(np.float64)
+                    if x_norms is not None
+                    else None
+                )
+                load = measure_iteration_load(cache, plan, leaf_w, leaf_w)
+                imb = None
+                if load is not None:
+                    imb = lb.observe(load) if lb is not None else load.imbalance()
+                idem = dist_frobenius_norm(dist_add(x2, x, 1.0, -1.0, cache), cache)
+                tr = dist_trace(x, cache)
+                traces.append(tr)
+                idems.append(idem)
+                nnzbs.append(x.nnzb)
+                nnzb_it = x.nnzb
+                stop = monitor.update(it, idem)
+                if monitor.improved:
+                    best = x
+                nfb = 0
+                if not stop:
+                    if sp2_should_square(tr, n_occ):
+                        x = x2
+                    else:
+                        x = dist_add(x, x2, 2.0, -1.0, cache)
+                    x_norms = None
+                    if trunc_tau > 0:
+                        if trunc_method == "hierarchical":
+                            # one norm-table fetch serves both the truncation
+                            # descent and the next iteration's SpAMM:
+                            # compaction keeps block values, so the kept
+                            # subset of the table is the truncated matrix's
+                            pre_norms = resident_block_norms(x, cache)
+                            nfb = pre_norms.shape[0] * 4
+                            info: dict = {}
+                            x = dist_truncate_hierarchical(
+                                x, trunc_tau, cache, norms=pre_norms, stats=info
+                            )
+                            x_norms = pre_norms[info["kept"]]
+                        else:
+                            assert trunc_method == "leaf", trunc_method
+                            x = dist_truncate(x, trunc_tau, cache)
+                imb_after, migrated = None, upfront_migrated
+                upfront_migrated = 0
+                if (
+                    lb is not None
+                    and not stop
+                    and load is not None
+                    and lb.should_rebalance(load)
+                    and plan is not None
+                ):
+                    # measured per-block weights: reads of each operand block
+                    # in the executed task list plus one unit of ownership,
+                    # mapped onto the updated iterate's structure by Morton
+                    # code
+                    wa, wb = block_reference_weights(
+                        plan.tasks, x_op.nnzb, x_op.nnzb
+                    )
+                    w = map_block_weights(
+                        x_op.coords, wa + wb + 1.0, x.coords, default=1.0
+                    )
+                    # x_norms is stack-ordered, so it survives the re-layout
+                    x, moved, imb_after = lb.migrate(x, w, cache)
+                    migrated += moved
+                # built after the update + truncation so each row carries its
+                # own iteration's full cache/timing deltas (truncation
+                # included)
+                row = scope.row(
+                    nnzb=nnzb_it,
+                    idem=idem,
+                    trace=tr,
+                    spamm_err=mult_err,
+                    recv_bytes_mean=(
+                        plan_stats(plan)["recv_bytes_mean"]
+                        if plan is not None
+                        else 0.0
+                    ),
+                    norm_fetch_bytes=nfb,
+                    imbalance=imb,
+                    imbalance_after=imb_after,
+                    migrated_bytes=migrated,
+                )
+                per_iter.append(row)
+                if lb is not None and load is not None:
+                    # wall-clock feedback: the measured iteration time
+                    # calibrates the policy's cost coefficients
+                    lb.note_wall(row["wall_s"])
+            if stop:
+                break
     return (best if return_resident else best.gather()), DistPurifyStats(
-        len(traces), traces, idems, nnzbs, cache.stats(), per_iter,
+        len(traces), traces, idems, nnzbs, run_metrics(cache), per_iter,
         rebalances=lb.rebalances if lb is not None else 0,
+        calibration=lb.calibration()[1] if lb is not None else None,
     )
 
 
@@ -388,6 +423,7 @@ def dist_sqrt_inv_pipeline(
     transform_back: bool = True,
     rebalance: RebalancePolicy | None = None,
     lanczos_steps: int = 0,
+    tracer=None,
 ) -> tuple[BSMatrix, SqrtInvPipelineStats]:
     """The paper's full electronic-structure workflow, resident end to end.
 
@@ -413,10 +449,19 @@ def dist_sqrt_inv_pipeline(
     dynamic load balancing in both iterative stages — the inverse refinement
     loop and SP2 — re-laying iterates out on device when the measured
     per-worker cost model reports imbalance above the policy threshold.
+
+    ``tracer`` (a :class:`repro.obs.Tracer`) records the whole workflow as
+    one span timeline: inverse / congruence / spectral-bounds / SP2 /
+    back-transform phases with every collective, plan build and kernel
+    dispatch nested beneath — export with
+    :func:`repro.obs.write_chrome_trace`.
     """
     from .inverse import dist_localized_inverse_factorization
 
     cache = cache if cache is not None else PlanCache()
+    if tracer is not None:
+        cache.tracer = tracer
+    trc = tracer_of(cache)
     if isinstance(s, DistBSMatrix):
         assert mesh is None or list(mesh.devices.flat) == list(
             s.mesh.devices.flat
@@ -441,24 +486,27 @@ def dist_sqrt_inv_pipeline(
         impl=impl, rebalance=rebalance,
     )
 
-    snap, t0 = cache.snapshot(), time.perf_counter()
-    zt = dist_transpose(z, cache)
-    f_ortho = dist_multiply(
-        dist_multiply(zt, dh, cache, exchange=exchange, impl=impl),
-        z, cache, exchange=exchange, impl=impl,
-    )
-    congruence = dict(wall_s=time.perf_counter() - t0, **cache.delta(snap))
+    with IterationScope(cache, None, trc, name="congruence", cat="phase") as sc:
+        zt = dist_transpose(z, cache)
+        f_ortho = dist_multiply(
+            dist_multiply(zt, dh, cache, exchange=exchange, impl=impl),
+            z, cache, exchange=exchange, impl=impl,
+        )
+        congruence = sc.delta()
 
     if lmin is None or lmax is None:
-        lo, hi = _spectral_bounds_from_norms(
-            f_ortho.coords, resident_block_norms(f_ortho, cache)
-        )
-        if lanczos_steps > 0:
-            llo, lhi = dist_lanczos_bounds(f_ortho, cache, steps=lanczos_steps)
-            # intersect with the Gershgorin enclosure: refinement can only
-            # tighten the interval, never widen it
-            if max(lo, llo) < min(hi, lhi):
-                lo, hi = max(lo, llo), min(hi, lhi)
+        with trc.span("spectral_bounds", cat="phase", lanczos=lanczos_steps):
+            lo, hi = _spectral_bounds_from_norms(
+                f_ortho.coords, resident_block_norms(f_ortho, cache)
+            )
+            if lanczos_steps > 0:
+                llo, lhi = dist_lanczos_bounds(
+                    f_ortho, cache, steps=lanczos_steps
+                )
+                # intersect with the Gershgorin enclosure: refinement can
+                # only tighten the interval, never widen it
+                if max(lo, llo) < min(hi, lhi):
+                    lo, hi = max(lo, llo), min(hi, lhi)
         lmin = lo if lmin is None else lmin
         lmax = hi if lmax is None else lmax
 
@@ -471,15 +519,18 @@ def dist_sqrt_inv_pipeline(
 
     back = None
     if transform_back:
-        snap, t0 = cache.snapshot(), time.perf_counter()
-        d = dist_multiply(
-            dist_multiply(z, d_ortho, cache, exchange=exchange, impl=impl),
-            zt, cache, exchange=exchange, impl=impl,
-        )
-        back = dict(wall_s=time.perf_counter() - t0, **cache.delta(snap))
+        with IterationScope(
+            cache, None, trc, name="back_transform", cat="phase"
+        ) as sb:
+            d = dist_multiply(
+                dist_multiply(z, d_ortho, cache, exchange=exchange, impl=impl),
+                zt, cache, exchange=exchange, impl=impl,
+            )
+            back = sb.delta()
         result = d.gather()
     else:
         result = d_ortho.gather()
     return result, SqrtInvPipelineStats(
-        inv_stats, purify_stats, congruence, back, (lmin, lmax), cache.stats()
+        inv_stats, purify_stats, congruence, back, (lmin, lmax),
+        run_metrics(cache),
     )

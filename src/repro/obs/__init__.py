@@ -1,0 +1,56 @@
+"""Runtime observability — span tracing, metrics, Perfetto export, reports.
+
+The telemetry layer of the resident runtime (the CHT papers' task/chunk
+accounting and per-process execution timelines, reproduced as a runtime
+service):
+
+* :class:`Tracer` / :data:`NULL_TRACER` (:mod:`repro.obs.tracer`) — nested
+  spans with per-worker cost attribution, plus counters/gauges registered
+  once; the disabled tracer is an allocation-free no-op.  The tracer rides
+  on the plan cache (``PlanCache(tracer=...)``), which is already threaded
+  through every resident collective and driver.
+* :mod:`repro.obs.timing` — the shared timing idioms (``timed_into``,
+  ``IterationScope``) that replace the scattered ``perf_counter`` pairs and
+  give both iterative drivers one per-iteration row schema.
+* :mod:`repro.obs.export` — Chrome trace-event JSON loadable in Perfetto:
+  a host track with the full span tree and one utilization track per
+  worker; :func:`validate_chrome_trace` is the CI schema check.
+* :mod:`repro.obs.report` — per-worker busy/idle utilization summary from a
+  live tracer or a written trace file (``python -m repro.obs.report``).
+* :func:`run_metrics` — the flat metrics dict (cache + tracer counters) the
+  driver stats dataclasses wrap.
+"""
+
+from .export import chrome_trace_events, validate_chrome_trace, write_chrome_trace
+from .report import utilization_from_file, utilization_table, worker_utilization
+from .timing import SHARED_ITER_KEYS, IterationScope, timed_into
+from .tracer import (
+    NULL_TRACER,
+    Counter,
+    Gauge,
+    NullTracer,
+    Span,
+    Tracer,
+    run_metrics,
+    tracer_of,
+)
+
+__all__ = [
+    "Tracer",
+    "NullTracer",
+    "NULL_TRACER",
+    "Span",
+    "Counter",
+    "Gauge",
+    "tracer_of",
+    "run_metrics",
+    "timed_into",
+    "IterationScope",
+    "SHARED_ITER_KEYS",
+    "chrome_trace_events",
+    "write_chrome_trace",
+    "validate_chrome_trace",
+    "worker_utilization",
+    "utilization_from_file",
+    "utilization_table",
+]

@@ -1,0 +1,152 @@
+"""Per-worker utilization report — the measured counterpart of the load
+balancer's imbalance numbers.
+
+Derives, from a live :class:`~repro.obs.tracer.Tracer` or from a written
+Chrome trace file, each worker's busy seconds (sum of its attributed busy
+intervals), busy/idle fractions of the traced window, and the timeline
+imbalance ``max busy / mean busy`` — directly comparable to the
+``max/mean`` combined-cost imbalance the rebalancing cost model reports
+(``BENCH_balance.json``): for a single step both reduce to the same ratio,
+and across a run the timeline number is the duration-weighted aggregate.
+
+Render with :func:`utilization_table`, or from a trace file::
+
+    python -m repro.obs.report trace_sqrt_inv.json
+"""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from .export import WORKER_PID, _attributed_leaves
+from .tracer import Tracer
+
+__all__ = ["worker_utilization", "utilization_from_file", "utilization_table"]
+
+
+def _summarize(busy: np.ndarray, window: float) -> dict:
+    window = max(window, 1e-12)
+    frac = busy / window
+    mean_busy = busy.mean() if busy.size else 0.0
+    return dict(
+        nparts=int(busy.size),
+        window_s=float(window),
+        busy_s=[float(b) for b in busy],
+        busy_frac=[float(f) for f in frac],
+        idle_frac=[float(1.0 - f) for f in frac],
+        mean_busy_frac=float(frac.mean()) if busy.size else 0.0,
+        min_busy_frac=float(frac.min()) if busy.size else 0.0,
+        max_busy_frac=float(frac.max()) if busy.size else 0.0,
+        timeline_imbalance=(
+            float(busy.max() / mean_busy) if mean_busy > 0 else 1.0
+        ),
+    )
+
+
+def worker_utilization(tracer: Tracer) -> dict:
+    """Busy/idle fractions per worker from a live tracer's attributed spans.
+
+    The window is the total duration of attributed steps (an SPMD step's
+    wall time is its slowest worker's time, so the heaviest worker per step
+    is busy for the whole step); worker ``p`` is busy for
+    ``dur * cost_p / max_q cost_q`` of each step.
+    """
+    leaves = _attributed_leaves(tracer)
+    nparts = max((len(tracer.spans[i].worker_costs) for i in leaves), default=0)
+    busy = np.zeros(nparts, dtype=np.float64)
+    window = 0.0
+    for i in leaves:
+        sp = tracer.spans[i]
+        costs = np.asarray(sp.worker_costs, dtype=np.float64)
+        cmax = costs.max() if costs.size else 0.0
+        if cmax <= 0.0:
+            continue
+        window += sp.dur
+        busy[: costs.shape[0]] += sp.dur * costs / cmax
+    return _summarize(busy, window)
+
+
+def utilization_from_file(path: str) -> dict:
+    """Same report computed back from a written Chrome trace file.
+
+    Reads the worker tracks' ``B``/``E`` pairs, so it validates that the
+    exported file carries the full utilization picture on its own.
+    """
+    with open(path) as fh:
+        trace = json.load(fh)
+    events = trace["traceEvents"] if isinstance(trace, dict) else trace
+    tids = set()
+    opens: dict[tuple, float] = {}
+    busy: dict[int, float] = {}
+    intervals: list[tuple[float, float]] = []
+    for e in events:
+        if e.get("pid") != WORKER_PID:
+            continue
+        if e["ph"] == "M":
+            if e["name"] == "thread_name":
+                tids.add(e["tid"])
+            continue
+        if e["ph"] == "B":
+            opens[(e["tid"], e["name"], e["ts"])] = e["ts"]
+        elif e["ph"] == "E":
+            # match the oldest open B on this tid (pairs are emitted B,E)
+            key = next(k for k in opens if k[0] == e["tid"])
+            t0 = opens.pop(key)
+            busy[e["tid"]] = busy.get(e["tid"], 0.0) + (e["ts"] - t0) * 1e-6
+            intervals.append((t0 * 1e-6, e["ts"] * 1e-6))
+    nparts = (max(tids) + 1) if tids else 0
+    busy_v = np.array([busy.get(p, 0.0) for p in range(nparts)])
+    # window: union length of the busiest worker's view is not recoverable
+    # exactly; use the per-step convention — the heaviest worker spans the
+    # whole step — i.e. the maximum single-track busy time per step summed,
+    # which equals the merged interval length of all busy intervals
+    window, end = 0.0, None
+    for lo, hi in sorted(intervals):
+        if end is None or lo >= end:
+            window += hi - lo
+            end = hi
+        elif hi > end:
+            window += hi - end
+            end = hi
+    return _summarize(busy_v, window)
+
+
+def utilization_table(util: dict) -> str:
+    """Human-readable per-worker utilization summary table."""
+    lines = [
+        f"traced window: {util['window_s'] * 1e3:.1f} ms over "
+        f"{util['nparts']} workers   "
+        f"timeline imbalance (max/mean busy): "
+        f"{util['timeline_imbalance']:.2f}",
+        f"{'worker':>6}  {'busy ms':>10}  {'busy %':>7}  {'idle %':>7}",
+    ]
+    for p in range(util["nparts"]):
+        lines.append(
+            f"{p:>6}  {util['busy_s'][p] * 1e3:>10.1f}  "
+            f"{util['busy_frac'][p] * 100:>6.1f}%  "
+            f"{util['idle_frac'][p] * 100:>6.1f}%"
+        )
+    lines.append(
+        f"{'mean':>6}  {np.mean(util['busy_s']) * 1e3:>10.1f}  "
+        f"{util['mean_busy_frac'] * 100:>6.1f}%  "
+        f"{(1 - util['mean_busy_frac']) * 100:>6.1f}%"
+    )
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    import sys
+
+    argv = sys.argv[1:] if argv is None else argv
+    if len(argv) != 1:
+        print("usage: python -m repro.obs.report <chrome-trace.json>")
+        return 2
+    util = utilization_from_file(argv[0])
+    print(utilization_table(util))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
