@@ -26,6 +26,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.jax_compat import shard_map
+from repro.kernels.precision import FP32, Precision
 
 from .matrix import BSMatrix
 from .schedule import SpgemmPlan
@@ -39,6 +40,10 @@ __all__ = [
     "SpgemmExecutable",
     "make_masked_spgemm_executable",
     "MaskedSpgemmExecutable",
+    "make_fused_spgemm_executable",
+    "FusedSpgemmExecutable",
+    "make_masked_fused_spgemm_executable",
+    "MaskedFusedSpgemmExecutable",
 ]
 
 AXIS = "worker"
@@ -98,6 +103,132 @@ def _block_spmm_fn(impl: str):
     return kref.block_spmm_ref
 
 
+def _exchange_stack(store, offsets, send_pads, nparts, keeps=None, live=None):
+    """Planned ppermute rounds -> stacked receive buffers [R, capU, bs, bs].
+
+    Unlike :func:`_exchange_bufs` the device's own store is NOT copied into
+    an operand buffer — the fused kernel reads it in place — and each round's
+    receive buffer is padded to the uniform ``capU`` so the stack is one
+    array the kernel indexes by ``(round, row)``.  Padding happens locally,
+    *after* the ppermute: the wire payload stays the round's true capacity.
+
+    ``keeps``: optional per-round ``[1, cap_d]`` bool — send slots whose
+    block no live task references ship zeros (delta-plan exchange pruning).
+    ``live``: optional collection of round indices to run at all; dead
+    rounds (every slot masked) produce zeros with no collective.
+    """
+    shape = store.shape[-2:]
+    if len(offsets) == 0:
+        # dummy stack: the kernel's recv branch prefetches row (0, 0) and the
+        # select discards it (src is all-zero when there are no rounds)
+        return jnp.zeros((1, 1) + shape, store.dtype)
+    capU = max(send.shape[1] for send in send_pads)
+    bufs = []
+    for r, (d, send) in enumerate(zip(offsets, send_pads)):
+        if live is not None and r not in live:
+            bufs.append(jnp.zeros((capU,) + shape, store.dtype))
+            continue
+        payload = store[send[0]]  # [cap_d, bs, bs]
+        if keeps is not None:
+            payload = payload * keeps[r][0][:, None, None].astype(store.dtype)
+        perm = [(p, (p + d) % nparts) for p in range(nparts)]
+        recv = jax.lax.ppermute(payload, AXIS, perm=perm)
+        pad = capU - recv.shape[0]
+        if pad:
+            recv = jnp.pad(recv, ((0, pad), (0, 0), (0, 0)))
+        bufs.append(recv)
+    return jnp.stack(bufs, axis=0)
+
+
+def _fused_spmm_fn(impl: str):
+    from repro.kernels import ops as kops
+
+    if impl == "fused-interpret":  # force the Pallas interpreter (tests)
+        return functools.partial(kops.fused_block_spmm, interpret=True)
+    assert impl == "fused", impl
+    return kops.fused_block_spmm
+
+
+def _mapped_multiply_fused(
+    a_store,
+    b_store,
+    a_src_t,
+    a_off_t,
+    b_src_t,
+    b_off_t,
+    task_c,
+    *a_and_b_sends,
+    plan: SpgemmPlan,
+    impl: str,
+    precision: Precision,
+):
+    """Fused per-device body: exchange -> one fused unpack+GEMM+accumulate
+    dispatch over (own store | stacked receive buffers).  No concatenated
+    operand buffer is materialized."""
+    na = len(plan.a_offsets)
+    a_sends, b_sends = a_and_b_sends[:na], a_and_b_sends[na:]
+    a_own, b_own = a_store[0], b_store[0]
+    if precision.mode == "bf16":
+        # cast before the exchange: halves the ppermute payload bytes too
+        a_own = a_own.astype(jnp.bfloat16)
+        b_own = b_own.astype(jnp.bfloat16)
+    a_recv = _exchange_stack(a_own, plan.a_offsets, a_sends, plan.nparts)
+    b_recv = _exchange_stack(b_own, plan.b_offsets, b_sends, plan.nparts)
+    c = _fused_spmm_fn(impl)(
+        a_own, a_recv, b_own, b_recv,
+        a_src_t[0], a_off_t[0], b_src_t[0], b_off_t[0], task_c[0],
+        plan.c_cap + 1,
+    )
+    return c[None, : plan.c_cap]
+
+
+def _mapped_multiply_fused_masked(
+    a_store,
+    b_store,
+    a_src_t,
+    a_off_t,
+    b_src_t,
+    b_off_t,
+    task_c,
+    task_on,
+    task_low,
+    *keeps_and_sends,
+    plan: SpgemmPlan,
+    impl: str,
+    precision: Precision,
+    live_a: tuple[int, ...],
+    live_b: tuple[int, ...],
+):
+    """Masked fused body: off tasks go to the trash row, send slots feeding
+    only off tasks ship zeros, and rounds with every slot masked skip their
+    collective entirely.  ``task_low`` drives adaptive per-task rounding."""
+    na, nb = len(plan.a_offsets), len(plan.b_offsets)
+    a_keeps = keeps_and_sends[:na]
+    b_keeps = keeps_and_sends[na : na + nb]
+    a_sends = keeps_and_sends[na + nb : 2 * na + nb]
+    b_sends = keeps_and_sends[2 * na + nb :]
+    a_own, b_own = a_store[0], b_store[0]
+    if precision.mode == "bf16":
+        a_own = a_own.astype(jnp.bfloat16)
+        b_own = b_own.astype(jnp.bfloat16)
+    a_recv = _exchange_stack(
+        a_own, plan.a_offsets, a_sends, plan.nparts, keeps=a_keeps, live=live_a
+    )
+    b_recv = _exchange_stack(
+        b_own, plan.b_offsets, b_sends, plan.nparts, keeps=b_keeps, live=live_b
+    )
+    tc = jnp.where(task_on[0], task_c[0], plan.c_cap)
+    adaptive = precision.mode == "adaptive"
+    c = _fused_spmm_fn(impl)(
+        a_own, a_recv, b_own, b_recv,
+        a_src_t[0], a_off_t[0], b_src_t[0], b_off_t[0], tc,
+        plan.c_cap + 1,
+        low=task_low[0] if adaptive else None,
+        adaptive=adaptive,
+    )
+    return c[None, : plan.c_cap]
+
+
 def _mapped_multiply(
     a_store,
     b_store,
@@ -152,28 +283,44 @@ class SpgemmExecutable:
     _body = staticmethod(_mapped_multiply)
     _n_runtime_args = 0
 
-    def __init__(self, plan: SpgemmPlan, mesh: Mesh, *, impl: str = "ref"):
+    def __init__(
+        self, plan: SpgemmPlan, mesh: Mesh, *, impl: str = "ref", **body_kwargs
+    ):
         assert mesh.devices.size == plan.nparts, (mesh.devices.size, plan.nparts)
         self.plan = plan
         self.mesh = mesh
         self.impl = impl
+        self._body_kwargs = body_kwargs
         self._sh = NamedSharding(mesh, P(AXIS))
         put = lambda x: jax.device_put(jnp.asarray(x), self._sh)
-        self._idx_args = [
-            put(plan.task_a),
-            put(plan.task_b),
-            put(plan.task_c),
-        ]
+        self._idx_args = [put(x) for x in self._plan_index_arrays(plan)]
         self._send_args = [put(plan.a_send[d]) for d in plan.a_offsets]
         self._send_args += [put(plan.b_send[d]) for d in plan.b_offsets]
-        fn = functools.partial(type(self)._body, plan=plan, impl=impl)
-        nargs = (
-            2 + len(self._idx_args) + self._n_runtime_args + len(self._send_args)
+        self._mapped = self._build_program()
+
+    @staticmethod
+    def _plan_index_arrays(plan: SpgemmPlan) -> list[np.ndarray]:
+        return [plan.task_a, plan.task_b, plan.task_c]
+
+    def _n_runtime(self, plan: SpgemmPlan) -> int:
+        return self._n_runtime_args
+
+    def _build_program(self, **extra):
+        """Jit the shard_mapped body; subclasses pass per-program statics
+        (e.g. the live-round sets of a pruned exchange) via ``extra``."""
+        fn = functools.partial(
+            type(self)._body,
+            plan=self.plan,
+            impl=self.impl,
+            **{**self._body_kwargs, **extra},
         )
-        self._mapped = jax.jit(
+        nargs = (
+            2 + len(self._idx_args) + self._n_runtime(self.plan) + len(self._send_args)
+        )
+        return jax.jit(
             shard_map(
                 fn,
-                mesh=mesh,
+                mesh=self.mesh,
                 in_specs=tuple(P(AXIS) for _ in range(nargs)),
                 out_specs=P(AXIS),
                 check_vma=False,
@@ -222,6 +369,251 @@ def make_masked_spgemm_executable(
     plan: SpgemmPlan, mesh: Mesh | None = None, *, impl: str = "ref"
 ) -> MaskedSpgemmExecutable:
     return MaskedSpgemmExecutable(plan, mesh or make_worker_mesh(plan.nparts), impl=impl)
+
+
+class FusedSpgemmExecutable(SpgemmExecutable):
+    """The planned multiply through the fused leaf engine.
+
+    Ships the plan's ``(src, off)`` task operand decomposition instead of
+    concatenated-buffer indices; the mapped body runs the exchange into a
+    stacked receive buffer and one fused unpack+GEMM+accumulate dispatch.
+    ``precision`` selects the storage/exchange dtype policy (``fp32`` |
+    ``bf16``); ``adaptive`` needs a per-task mask and lives on the masked
+    variant.
+    """
+
+    _body = staticmethod(_mapped_multiply_fused)
+
+    def __init__(
+        self,
+        plan: SpgemmPlan,
+        mesh: Mesh,
+        *,
+        impl: str = "fused",
+        precision: Precision = FP32,
+    ):
+        assert plan.task_a_src is not None, (
+            "fused engine needs a p2p plan with (src, off) task decomposition"
+        )
+        assert precision.mode != "adaptive", (
+            "adaptive precision needs the masked fused executable"
+        )
+        self.precision = precision
+        super().__init__(plan, mesh, impl=impl, precision=precision)
+
+    @staticmethod
+    def _plan_index_arrays(plan: SpgemmPlan) -> list[np.ndarray]:
+        return [
+            plan.task_a_src,
+            plan.task_a_off,
+            plan.task_b_src,
+            plan.task_b_off,
+            plan.task_c,
+        ]
+
+
+def make_fused_spgemm_executable(
+    plan: SpgemmPlan,
+    mesh: Mesh | None = None,
+    *,
+    impl: str = "fused",
+    precision: Precision = FP32,
+) -> FusedSpgemmExecutable:
+    return FusedSpgemmExecutable(
+        plan, mesh or make_worker_mesh(plan.nparts), impl=impl, precision=precision
+    )
+
+
+def _send_task_spans(plan: SpgemmPlan):
+    """Per (operand, round) CSR map: send slot ``(src, pos)`` -> the global
+    task ids that read the delivered block.  Host-side, memoized on the plan
+    (same pattern as the obs statics) — this is what lets the masked fused
+    executable decide per call which send slots still matter."""
+    maps = getattr(plan, "_send_task_spans", None)
+    if maps is not None:
+        return maps
+    nparts = plan.nparts
+    t_owner = plan.c_owner[plan.tasks.c_idx]
+    tasks_of = [np.nonzero(t_owner == p)[0] for p in range(nparts)]
+    maps = {}
+    for name, offsets, send, send_cnt, store_idx, x_idx in (
+        ("a", plan.a_offsets, plan.a_send, plan.a_send_count,
+         plan.a_store_idx, plan.tasks.a_idx),
+        ("b", plan.b_offsets, plan.b_send, plan.b_send_count,
+         plan.b_store_idx, plan.tasks.b_idx),
+    ):
+        for d in offsets:
+            cap_d = send[d].shape[1]
+            starts = np.zeros(nparts * cap_d + 1, np.int64)
+            cat = []
+            for src in range(nparts):
+                dst = (src + d) % nparts
+                cnt = int(send_cnt[d][src])
+                t_dst = tasks_of[dst]
+                refs = x_idx[t_dst]
+                order = np.argsort(refs, kind="stable")
+                sorted_refs = refs[order]
+                blocks = store_idx[src][send[d][src, :cnt]]
+                lo = np.searchsorted(sorted_refs, blocks, "left")
+                hi = np.searchsorted(sorted_refs, blocks, "right")
+                base = src * cap_d
+                for pos in range(cap_d):
+                    if pos < cnt:
+                        ids = t_dst[order[lo[pos] : hi[pos]]]
+                        cat.append(ids)
+                        starts[base + pos + 1] = starts[base + pos] + ids.size
+                    else:
+                        starts[base + pos + 1] = starts[base + pos]
+            maps[(name, d)] = (
+                starts,
+                np.concatenate(cat) if cat else np.zeros(0, np.int64),
+            )
+    object.__setattr__(plan, "_send_task_spans", maps)
+    return maps
+
+
+def _exchange_keep_masks(plan: SpgemmPlan, keep_task: np.ndarray):
+    """Per-round send keep masks + live round sets from a global kept-task
+    mask.  Returns ``(a_keeps, b_keeps, live_a, live_b, stats)`` where each
+    keeps entry is ``[P, cap_d]`` bool and stats counts pruned payload."""
+    maps = _send_task_spans(plan)
+    nparts = plan.nparts
+    keeps_by, live_by = {}, {}
+    stats = {"send_blocks": 0, "kept_blocks": 0, "dropped_rounds": 0}
+    for name, offsets, send, send_cnt in (
+        ("a", plan.a_offsets, plan.a_send, plan.a_send_count),
+        ("b", plan.b_offsets, plan.b_send, plan.b_send_count),
+    ):
+        keeps, live = [], []
+        for r, d in enumerate(offsets):
+            starts, cat = maps[(name, d)]
+            kt = keep_task[cat].astype(np.int64)
+            cs = np.concatenate([[0], np.cumsum(kt)])
+            keep = (cs[starts[1:]] - cs[starts[:-1]]) > 0
+            keep = keep.reshape(nparts, send[d].shape[1])
+            stats["send_blocks"] += int(np.asarray(send_cnt[d]).sum())
+            stats["kept_blocks"] += int(keep.sum())
+            if keep.any():
+                live.append(r)
+            else:
+                stats["dropped_rounds"] += 1
+            keeps.append(keep)
+        keeps_by[name] = keeps
+        live_by[name] = tuple(live)
+    return keeps_by["a"], keeps_by["b"], live_by["a"], live_by["b"], stats
+
+
+class MaskedFusedSpgemmExecutable(FusedSpgemmExecutable):
+    """Delta-plan SpAMM through the fused engine, with exchange pruning.
+
+    Like :class:`MaskedSpgemmExecutable`, one full-structure program serves
+    every prune pattern — but here the mask also reaches the exchange: send
+    slots referenced only by masked-out tasks ship zero payload, and rounds
+    whose every slot is masked skip their ppermute entirely (a distinct
+    jitted program per live-round pattern, memoized — ring plans have few
+    rounds, so the program set stays tiny).  ``task_low`` feeds the adaptive
+    precision mask.  ``last_exchange`` records the pruning stats of the most
+    recent call.
+    """
+
+    _body = staticmethod(_mapped_multiply_fused_masked)
+
+    def __init__(
+        self,
+        plan: SpgemmPlan,
+        mesh: Mesh,
+        *,
+        impl: str = "fused",
+        precision: Precision = FP32,
+        prune_exchange: bool = True,
+    ):
+        assert plan.task_a_src is not None, (
+            "fused engine needs a p2p plan with (src, off) task decomposition"
+        )
+        self.precision = precision
+        self.prune_exchange = prune_exchange
+        self.last_exchange: dict | None = None
+        all_a = tuple(range(len(plan.a_offsets)))
+        all_b = tuple(range(len(plan.b_offsets)))
+        self._all_keeps = None  # built lazily for the unpruned path
+        SpgemmExecutable.__init__(
+            self, plan, mesh, impl=impl,
+            precision=precision, live_a=all_a, live_b=all_b,
+        )
+        self._programs = {(all_a, all_b): self._mapped}
+
+    def _n_runtime(self, plan: SpgemmPlan) -> int:
+        # task_on, task_low, then one keep mask per exchange round
+        return 2 + len(plan.a_offsets) + len(plan.b_offsets)
+
+    def _keep_task_from_mask(self, task_on: np.ndarray) -> np.ndarray:
+        plan = self.plan
+        valid = np.arange(plan.t_cap)[None, :] < plan.task_count[:, None]
+        keep_task = np.zeros(max(plan.tasks.num_tasks, 1), dtype=bool)
+        keep_task[plan.task_gidx[task_on & valid]] = True
+        return keep_task
+
+    def __call__(
+        self,
+        a_store: jax.Array,
+        b_store: jax.Array,
+        task_on: np.ndarray,
+        task_low: np.ndarray | None = None,
+    ) -> jax.Array:
+        plan = self.plan
+        task_on = np.asarray(task_on, dtype=bool)
+        if task_low is None:
+            task_low = np.zeros(task_on.shape, dtype=np.int32)
+        if self.prune_exchange and (plan.a_offsets or plan.b_offsets):
+            keep_task = self._keep_task_from_mask(task_on)
+            a_keeps, b_keeps, live_a, live_b, stats = _exchange_keep_masks(
+                plan, keep_task
+            )
+            self.last_exchange = stats
+        else:
+            if self._all_keeps is None:
+                self._all_keeps = (
+                    [np.ones((plan.nparts, plan.a_send[d].shape[1]), bool)
+                     for d in plan.a_offsets],
+                    [np.ones((plan.nparts, plan.b_send[d].shape[1]), bool)
+                     for d in plan.b_offsets],
+                )
+            a_keeps, b_keeps = self._all_keeps
+            live_a = tuple(range(len(plan.a_offsets)))
+            live_b = tuple(range(len(plan.b_offsets)))
+            self.last_exchange = None
+        program = self._programs.get((live_a, live_b))
+        if program is None:
+            program = self._build_program(live_a=live_a, live_b=live_b)
+            self._programs[(live_a, live_b)] = program
+        put = lambda x: jax.device_put(jnp.asarray(x), self._sh)
+        return program(
+            a_store,
+            b_store,
+            *self._idx_args,
+            put(task_on),
+            put(np.asarray(task_low, np.int32)),
+            *[put(k) for k in a_keeps],
+            *[put(k) for k in b_keeps],
+            *self._send_args,
+        )
+
+
+def make_masked_fused_spgemm_executable(
+    plan: SpgemmPlan,
+    mesh: Mesh | None = None,
+    *,
+    impl: str = "fused",
+    precision: Precision = FP32,
+    prune_exchange: bool = True,
+) -> MaskedFusedSpgemmExecutable:
+    return MaskedFusedSpgemmExecutable(
+        plan,
+        mesh or make_worker_mesh(plan.nparts),
+        impl=impl,
+        precision=precision,
+        prune_exchange=prune_exchange,
+    )
 
 
 def dist_spgemm(

@@ -41,6 +41,7 @@ __all__ = [
     "structure_fingerprint",
     "plan_fetch",
     "local_fetch_index",
+    "split_local_indices",
     "subtree_boundaries",
 ]
 
@@ -179,6 +180,15 @@ class SpgemmPlan:
     # over the global task list be relaid into the device task layout without
     # re-planning (delta-plan SpAMM, repro.dist.multiply)
     task_gidx: np.ndarray | None = None
+    # fused-engine operand addressing (p2p plans only; None for allgather):
+    # task_a == (src == 0 ? off : a_cap + sum(round caps before src-1) + off),
+    # decomposed so the fused kernel can gather tiles from the own store
+    # (src == 0) or receive buffer src-1 without the concatenated buffer —
+    # see repro.kernels.fused_leaf
+    task_a_src: np.ndarray | None = None  # [P, t_cap] int32
+    task_a_off: np.ndarray | None = None
+    task_b_src: np.ndarray | None = None
+    task_b_off: np.ndarray | None = None
 
     @property
     def shapes(self):
@@ -237,6 +247,24 @@ def local_fetch_index(
             break
         base += send_pad[dd].shape[1]
     return base + pos
+
+
+def split_local_indices(
+    idx: np.ndarray, cap: int, round_caps: list[int]
+) -> tuple[np.ndarray, np.ndarray]:
+    """Decompose p2p buffer indices into fused-engine ``(src, off)`` pairs.
+
+    The staged layout is ``[own store (cap) | recv per offset, in offset
+    order]``; ``src == 0`` addresses the own store at row ``off`` and
+    ``src == r+1`` addresses receive buffer ``r`` (padded round capacity
+    ``round_caps[r]``) at row ``off``.  Vectorized over any index array.
+    """
+    idx = np.asarray(idx, dtype=np.int64)
+    bounds = np.concatenate([[cap], cap + np.cumsum(round_caps)]).astype(np.int64)
+    src = np.searchsorted(bounds, idx, side="right").astype(np.int32)
+    starts = np.concatenate([[0], bounds[:-1]]).astype(np.int64)
+    off = (idx - starts[src]).astype(np.int32)
+    return src, off
 
 
 def _owner_slots(owner: np.ndarray, nparts: int):
@@ -365,7 +393,10 @@ def make_spgemm_plan(
     task_a_l, task_b_l, task_c_l, task_g_l = [], [], [], []
     for p in range(nparts):
         sel = np.nonzero(t_owner == p)[0]
-        # keep tasks sorted by local C slot for kernel-friendly accumulation
+        # keep tasks sorted by local C slot for kernel-friendly accumulation;
+        # the stable sort keeps global (symbolic) task order within a C
+        # block, so fp32 accumulation order — and hence the result bits —
+        # is invariant under owner re-layout (rebalancing stays bit-exact)
         order = np.argsort(c_slot[tasks.c_idx[sel]], kind="stable")
         sel = sel[order]
         task_g_l.append(sel.astype(np.int32))
@@ -393,6 +424,16 @@ def make_spgemm_plan(
     task_b = _pad_ragged(task_b_l, 0)
     task_c = _pad_ragged(task_c_l, c_cap)  # trash row
     task_gidx = _pad_ragged(task_g_l, 0)
+    # fused-engine addressing (padded slots decompose to (0, 0): store row 0,
+    # discarded via the trash row)
+    task_a_src = task_a_off = task_b_src = task_b_off = None
+    if exchange == "p2p":
+        task_a_src, task_a_off = split_local_indices(
+            task_a, a_cap, [a_send[d].shape[1] for d in a_offsets]
+        )
+        task_b_src, task_b_off = split_local_indices(
+            task_b, b_cap, [b_send[d].shape[1] for d in b_offsets]
+        )
 
     return SpgemmPlan(
         nparts=nparts,
@@ -427,6 +468,10 @@ def make_spgemm_plan(
         c_store_valid=c_store_valid,
         tasks=tasks,
         task_gidx=task_gidx,
+        task_a_src=task_a_src,
+        task_a_off=task_a_off,
+        task_b_src=task_b_src,
+        task_b_off=task_b_off,
     )
 
 

@@ -37,9 +37,13 @@ from repro.core.add import identity
 from repro.core.inverse import (
     RefineMonitor,
     _dense_inv_chol,
+    assemble2x2,
     factorization_residual,
+    submatrix,
 )
+from repro.core.matrix import BSMatrix
 from repro.core.schedule import plan_stats
+from repro.kernels.precision import Precision
 from repro.obs.timing import IterationScope
 from repro.obs.tracer import run_metrics, tracer_of
 
@@ -97,13 +101,89 @@ class DistInverseStats:
     calibration: dict | None = None
 
 
+def _leaf_ranges(nbr: int, leaf_blocks: int, base: int = 0) -> list[tuple[int, int]]:
+    """Block-row ranges the inv_chol recursion's leaves cover, in descent
+    order (power-of-2 split, same as the recursion itself)."""
+    if nbr <= leaf_blocks:
+        return [(base, base + nbr)]
+    split = 1 << (int(np.ceil(np.log2(nbr))) - 1)
+    return _leaf_ranges(split, leaf_blocks, base) + _leaf_ranges(
+        nbr - split, leaf_blocks, base + split
+    )
+
+
+def _leaf_block_diagonal(coords: np.ndarray, ranges: list[tuple[int, int]]) -> bool:
+    """True when every nonzero block lies inside some diagonal leaf square —
+    then all inv_chol leaves are independent and can factorize as one batch."""
+    if coords.shape[0] == 0:
+        return True
+    starts = np.array([lo for lo, _ in ranges] + [ranges[-1][1]], dtype=np.int64)
+    leaf = np.searchsorted(starts, coords[:, 0], side="right") - 1
+    return bool(
+        np.all(
+            (coords[:, 1] >= starts[leaf]) & (coords[:, 1] < starts[leaf + 1])
+        )
+    )
+
+
+def _batched_leaf_inv_chol(
+    a: DistBSMatrix, ranges: list[tuple[int, int]], leaf_blocks: int, cache
+) -> DistBSMatrix:
+    """All leaves independent: ONE gather, size-grouped batched dense
+    factorizations, ONE scatter — instead of the recursion's per-leaf
+    gather/factorize/scatter Python loop.
+
+    numpy's stacked ``cholesky`` / ``solve`` run the same lapack routine per
+    matrix in the batch, so each leaf's factor is bit-identical to what the
+    per-leaf :func:`~repro.core.inverse._dense_inv_chol` produces.
+    """
+    host = a.gather()
+    out_dtype = np.asarray(host.data).dtype if host.nnzb else np.float32
+    leaves = [submatrix(host, lo, hi, lo, hi) for lo, hi in ranges]
+    denses = [np.asarray(lf.to_dense(), dtype=np.float64) for lf in leaves]
+    z_dense: list[np.ndarray | None] = [None] * len(leaves)
+    by_shape: dict[tuple, list[int]] = {}
+    for i, d in enumerate(denses):
+        by_shape.setdefault(d.shape, []).append(i)
+    for shape, idxs in by_shape.items():
+        stack = np.stack([denses[i] for i in idxs])
+        L = np.linalg.cholesky(stack)
+        eye = np.broadcast_to(np.eye(shape[0]), stack.shape)
+        z = np.linalg.solve(np.swapaxes(L, -1, -2), eye)  # L^{-T}, batched
+        for j, i in enumerate(idxs):
+            z_dense[i] = z[j]
+    leaf_z = [
+        BSMatrix.from_dense(z.astype(out_dtype), a.bs) for z in z_dense
+    ]
+    # rebuild the recursion's assemble2x2 nesting over the precomputed
+    # leaves so the result's block structure matches the unbatched path
+    ptr = [0]
+
+    def nest(lo: int, hi: int) -> BSMatrix:
+        nbr = hi - lo
+        if nbr <= leaf_blocks:
+            z = leaf_z[ptr[0]]
+            ptr[0] += 1
+            return z
+        split = 1 << (int(np.ceil(np.log2(nbr))) - 1)
+        z00 = nest(lo, lo + split)
+        z11 = nest(lo + split, hi)
+        zero01 = BSMatrix.zeros((z00.shape[0], z11.shape[1]), a.bs, out_dtype)
+        zero10 = BSMatrix.zeros((z11.shape[0], z00.shape[1]), a.bs, out_dtype)
+        return assemble2x2(z00, zero01, zero10, z11, split)
+
+    return scatter(nest(0, -(-a.shape[0] // a.bs)), a.mesh)
+
+
 def dist_inv_chol(
     a: DistBSMatrix,
     cache: PlanCache | None = None,
     *,
     leaf_blocks: int = 1,
     exchange: str = "p2p",
-    impl: str = "ref",
+    impl: str = "fused",
+    precision: Precision | None = None,
+    batch_leaves: bool = True,
 ) -> DistBSMatrix:
     """Recursive inverse Cholesky on the resident store.  Z^T A Z = I.
 
@@ -114,36 +194,60 @@ def dist_inv_chol(
     with every step a resident collective.  Leaves (<= ``leaf_blocks`` block
     rows) gather to the host for the dense lapack factorization and scatter
     straight back — the only boundary crossings, same as the host path.
+
+    Two structural fast paths (both value-preserving):
+
+    * an empty coupling quadrant A01 skips the W / Schur multiplies outright
+      (S = A11, Z01 = 0) instead of multiplying empty structures;
+    * ``batch_leaves`` (default on): when every nonzero block of the current
+      submatrix lies inside a diagonal leaf square, the remaining descent
+      is pure bookkeeping — the leaves gather in ONE boundary crossing,
+      factorize as size-grouped *batched* dense cholesky/solve calls, and
+      scatter back in one crossing, replacing the per-leaf Python loop.
     """
     nbr = -(-a.shape[0] // a.bs)
     if nbr <= leaf_blocks:
         return scatter(_dense_inv_chol(a.gather()), a.mesh)
+    if batch_leaves:
+        ranges = _leaf_ranges(nbr, leaf_blocks)
+        if len(ranges) > 1 and _leaf_block_diagonal(a.coords, ranges):
+            with tracer_of(cache).span(
+                "inv_chol_batched_leaves", cat="collective",
+                nbr=int(nbr), leaves=len(ranges),
+            ):
+                return _batched_leaf_inv_chol(a, ranges, leaf_blocks, cache)
+    kw = dict(
+        leaf_blocks=leaf_blocks, exchange=exchange, impl=impl,
+        precision=precision, batch_leaves=batch_leaves,
+    )
+    mkw = dict(exchange=exchange, impl=impl, precision=precision)
     with tracer_of(cache).span("inv_chol", cat="collective", nbr=int(nbr)):
         depth = int(np.ceil(np.log2(nbr)))
         split = 1 << (depth - 1)
         a00 = dist_submatrix(a, 0, split, 0, split, cache)
         a01 = dist_submatrix(a, 0, split, split, nbr, cache)
         a11 = dist_submatrix(a, split, nbr, split, nbr, cache)
-        z00 = dist_inv_chol(
-            a00, cache, leaf_blocks=leaf_blocks, exchange=exchange, impl=impl
-        )
+        z00 = dist_inv_chol(a00, cache, **kw)
+        if a01.nnzb == 0:
+            # no coupling between the quadrants: S = A11 and Z01 = 0 exactly
+            z11 = dist_inv_chol(a11, cache, **kw)
+            zero01 = dist_zeros(
+                (a00.shape[0], a11.shape[1]), a.bs, a.mesh, a.dtype
+            )
+            zero10 = dist_zeros(
+                (a11.shape[0], a00.shape[1]), a.bs, a.mesh, a.dtype
+            )
+            return dist_assemble2x2(z00, zero01, zero10, z11, split, cache)
         w = dist_multiply(
-            dist_transpose(a01, cache), z00, cache, exchange=exchange, impl=impl
+            dist_transpose(a01, cache), z00, cache, **mkw
         )  # [n1, n0]
         wt = dist_transpose(w, cache)  # shared by Schur and coupling steps
         s = dist_add(
-            a11, dist_multiply(w, wt, cache, exchange=exchange, impl=impl),
-            1.0, -1.0, cache,
+            a11, dist_multiply(w, wt, cache, **mkw), 1.0, -1.0, cache,
         )
-        z11 = dist_inv_chol(
-            s, cache, leaf_blocks=leaf_blocks, exchange=exchange, impl=impl
-        )
+        z11 = dist_inv_chol(s, cache, **kw)
         z01 = dist_multiply(
-            dist_multiply(z00, wt, cache, exchange=exchange, impl=impl),
-            z11,
-            cache,
-            exchange=exchange,
-            impl=impl,
+            dist_multiply(z00, wt, cache, **mkw), z11, cache, **mkw
         ).scale(-1.0)
         zero = dist_zeros((a11.shape[0], a00.shape[1]), a.bs, a.mesh, a.dtype)
         return dist_assemble2x2(z00, z01, zero, z11, split, cache)
@@ -160,7 +264,9 @@ def dist_localized_inverse_factorization(
     spamm_method: str = "delta",
     leaf_blocks: int = 1,
     exchange: str = "p2p",
-    impl: str = "ref",
+    impl: str = "fused",
+    precision: Precision | None = None,
+    batch_leaves: bool = True,
     rebalance: RebalancePolicy | None = None,
     tracer=None,
 ) -> tuple[DistBSMatrix, DistInverseStats]:
@@ -218,7 +324,10 @@ def dist_localized_inverse_factorization(
         split = 1 << (depth - 1)
         a00 = dist_submatrix(a, 0, split, 0, split, cache)
         a11 = dist_submatrix(a, split, nbr, split, nbr, cache)
-        kw = dict(leaf_blocks=leaf_blocks, exchange=exchange, impl=impl)
+        kw = dict(
+            leaf_blocks=leaf_blocks, exchange=exchange, impl=impl,
+            precision=precision, batch_leaves=batch_leaves,
+        )
         z00 = dist_inv_chol(a00, cache, **kw)
         z11 = dist_inv_chol(a11, cache, **kw)
         zero01 = dist_zeros((z00.shape[0], z11.shape[1]), a.bs, a.mesh, a.dtype)
@@ -262,23 +371,31 @@ def dist_localized_inverse_factorization(
                     )
                     za, e1 = dist_spamm(
                         zt, a, spamm_tau, cache, exchange=exchange, impl=impl,
-                        method=spamm_method, a_norms=zt_norms, b_norms=a_norms,
+                        method=spamm_method, precision=precision,
+                        a_norms=zt_norms, b_norms=a_norms,
                     )
                     load_zta = measure_iteration_load(
                         cache, peek_last_plan(cache), None, a_leaf_w
                     )
                     zaz, e2 = dist_spamm(
                         za, z, spamm_tau, cache, exchange=exchange, impl=impl,
-                        method=spamm_method, b_norms=z_norms,
+                        method=spamm_method, precision=precision,
+                        b_norms=z_norms,
                     )
                     mult_err = max(e1, e2)
                 else:
                     zt = dist_transpose(z, cache)
-                    za = dist_multiply(zt, a, cache, exchange=exchange, impl=impl)
+                    za = dist_multiply(
+                        zt, a, cache, exchange=exchange, impl=impl,
+                        precision=precision,
+                    )
                     load_zta = measure_iteration_load(
                         cache, peek_last_plan(cache), None, a_leaf_w
                     )
-                    zaz = dist_multiply(za, z, cache, exchange=exchange, impl=impl)
+                    zaz = dist_multiply(
+                        za, z, cache, exchange=exchange, impl=impl,
+                        precision=precision,
+                    )
                 plan = peek_last_plan(cache)  # (za)z plan: recv stats + z weights
                 load = measure_iteration_load(cache, plan, None, leaf_w)
                 if load is None:
@@ -305,12 +422,14 @@ def dist_localized_inverse_factorization(
                         z, e3 = dist_spamm(
                             z, step, spamm_tau, cache,
                             exchange=exchange, impl=impl,
-                            method=spamm_method, a_norms=z_norms,
+                            method=spamm_method, precision=precision,
+                            a_norms=z_norms,
                         )
                         mult_err = max(mult_err, e3)
                     else:
                         z = dist_multiply(
-                            z, step, cache, exchange=exchange, impl=impl
+                            z, step, cache, exchange=exchange, impl=impl,
+                            precision=precision,
                         )
                     z_norms = None
                     if trunc_tau > 0:

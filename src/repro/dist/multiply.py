@@ -29,6 +29,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.distributed import (
+    make_fused_spgemm_executable,
+    make_masked_fused_spgemm_executable,
     make_masked_spgemm_executable,
     make_spgemm_executable,
 )
@@ -38,6 +40,7 @@ from repro.core.schedule import (
     structure_fingerprint,
 )
 from repro.core.spgemm import spamm_symbolic, spgemm_symbolic
+from repro.kernels.precision import FP32, Precision, low_precision_task_mask
 from repro.obs.timing import timed_into
 from repro.obs.tracer import tracer_of
 
@@ -62,10 +65,22 @@ __all__ = [
 _resident_block_norms = resident_block_norms
 
 
+_FUSED_IMPLS = ("fused", "fused-interpret")
+
+
 def multiply_plan_key(
-    a: DistBSMatrix, b: DistBSMatrix, *, exchange: str, impl: str
+    a: DistBSMatrix,
+    b: DistBSMatrix,
+    *,
+    exchange: str,
+    impl: str,
+    precision: Precision = FP32,
 ) -> tuple:
-    """Cache key: A/B Morton codes + owner maps + mesh + mode knobs."""
+    """Cache key: A/B Morton codes + owner maps + mesh + mode knobs.
+
+    Operand dtypes and the precision policy are part of the key — a bf16 or
+    adaptive program is a different compiled artifact than the fp32 one.
+    """
     return (
         "spgemm",
         structure_fingerprint(
@@ -74,11 +89,19 @@ def multiply_plan_key(
         mesh_key(a.mesh),
         exchange,
         impl,
+        str(a.dtype),
+        str(b.dtype),
+        precision.key(),
     )
 
 
 def spamm_delta_plan_key(
-    a: DistBSMatrix, b: DistBSMatrix, *, exchange: str, impl: str
+    a: DistBSMatrix,
+    b: DistBSMatrix,
+    *,
+    exchange: str,
+    impl: str,
+    precision: Precision = FP32,
 ) -> tuple:
     """Delta-plan SpAMM cache key — structure only, independent of the per-call
     prune pattern, so every call on a stable structure is a hit."""
@@ -90,6 +113,9 @@ def spamm_delta_plan_key(
         mesh_key(a.mesh),
         exchange,
         impl,
+        str(a.dtype),
+        str(b.dtype),
+        precision.key(),
     )
 
 
@@ -130,12 +156,33 @@ def _plan_obs_static(plan) -> dict:
     return st
 
 
-def _annotate_spgemm_dispatch(tr, sp, plan, task_count) -> None:
+def _annotate_spgemm_dispatch(
+    tr, sp, plan, task_count, precision: Precision | None = None, exe=None
+) -> None:
     """Per-worker attribution + byte/task counters on an executed multiply
     dispatch span.  Callers guard on ``tr.enabled`` — this does real work
     (plan byte accounting, cost-model evaluation) that must cost nothing
     with tracing off.
     """
+    if precision is not None:
+        from repro.kernels.autotune import pick_tiles
+
+        dtype = "bfloat16" if precision.mode == "bf16" else "float32"
+        sp.args.update(
+            precision=precision.mode,
+            dtype=dtype,
+            tiles=list(pick_tiles(plan.bs, plan.bs, plan.bs, dtype)),
+        )
+    ex = getattr(exe, "last_exchange", None)
+    if ex is not None:
+        sp.args.update(
+            send_blocks=ex["send_blocks"],
+            kept_send_blocks=ex["kept_blocks"],
+            dropped_rounds=ex["dropped_rounds"],
+        )
+        tr.counter("pruned_send_blocks").add(
+            float(ex["send_blocks"] - ex["kept_blocks"])
+        )
     st = _plan_obs_static(plan)
     tc = np.asarray(plan.task_count if task_count is None else task_count)
     # the same combined task-equivalent cost the rebalancer weighs, so the
@@ -199,6 +246,39 @@ def _rebalance_operands(
     return (a, a) if same else (a, relayout(b, wb))
 
 
+def _precision_of(precision, impl: str, exchange: str = "p2p") -> Precision:
+    precision = FP32 if precision is None else precision
+    if precision.is_mixed:
+        assert impl in _FUSED_IMPLS, (
+            "mixed precision needs the fused leaf engine (impl='fused')"
+        )
+        assert exchange == "p2p", (
+            "mixed precision needs the p2p exchange (allgather plans have no "
+            "(src, off) task decomposition)"
+        )
+    return precision
+
+
+def _use_fused(impl: str, exchange: str) -> bool:
+    """Fused engine needs the p2p (src, off) decomposition; an allgather
+    plan falls back to the staged reference path."""
+    return impl in _FUSED_IMPLS and exchange == "p2p"
+
+
+def _valid_task_slots(plan) -> np.ndarray:
+    return (
+        np.arange(plan.task_gidx.shape[1])[None, :] < plan.task_count[:, None]
+    )
+
+
+def _adaptive_low_table(plan, low_task: np.ndarray) -> np.ndarray:
+    """Map a global per-task low-precision mask onto [P, t_cap] int32."""
+    if low_task.shape[0] == 0:  # no tasks: gidx pads with 0, don't index
+        return np.zeros(plan.task_gidx.shape, np.int32)
+    valid = _valid_task_slots(plan)
+    return (low_task[plan.task_gidx] & valid).astype(np.int32)
+
+
 def dist_multiply(
     a: DistBSMatrix,
     b: DistBSMatrix,
@@ -206,15 +286,26 @@ def dist_multiply(
     *,
     exchange: str = "p2p",
     impl: str = "ref",
+    precision: Precision | None = None,
     rebalance=None,
 ) -> DistBSMatrix:
     """C = A @ B with A, B, C device-resident.  Plan + executable cached.
+
+    ``impl="fused"`` routes through the fused leaf engine (one
+    unpack+GEMM+accumulate dispatch, no concatenated operand buffer);
+    ``precision`` selects its dtype policy (:class:`Precision` — ``fp32`` |
+    ``bf16`` | ``adaptive``; adaptive spends a rounding-error budget of
+    ``precision.tau`` using the resident norm tables).  Staged impls
+    (``ref`` / ``kernel``) are fp32-only.
 
     ``rebalance`` (a :class:`repro.dist.balance.RebalancePolicy`) re-slots
     skewed operand layouts on device before planning — see
     :func:`_rebalance_operands`.
     """
     _check_operands(a, b)
+    precision = _precision_of(precision, impl, exchange)
+    fused = _use_fused(impl, exchange)
+    adaptive = precision.mode == "adaptive"
     tr = tracer_of(cache)
     with tr.span("dist_multiply", cat="collective",
                  nnzb_a=a.nnzb, nnzb_b=b.nnzb):
@@ -239,20 +330,49 @@ def dist_multiply(
                 plan.b_cap,
                 b.cap,
             )
-            exe = make_spgemm_executable(plan, a.mesh, impl=impl)
+            if fused and adaptive:
+                # adaptive needs the per-task low mask -> masked executable;
+                # no pruning here (all tasks run), so keep the exchange full
+                exe = make_masked_fused_spgemm_executable(
+                    plan, a.mesh, impl=impl, precision=precision,
+                    prune_exchange=False,
+                )
+            elif fused:
+                exe = make_fused_spgemm_executable(
+                    plan, a.mesh, impl=impl, precision=precision
+                )
+            else:
+                staged = "ref" if impl in _FUSED_IMPLS else impl
+                exe = make_spgemm_executable(plan, a.mesh, impl=staged)
             return plan, exe
 
-        key = multiply_plan_key(a, b, exchange=exchange, impl=impl)
+        key = multiply_plan_key(
+            a, b, exchange=exchange, impl=impl, precision=precision
+        )
         if cache is None:
             plan, exe = build()
         else:
             plan, exe = cache.get_or_build(key, build)
             cache.last_plan_key = key
             cache.last_task_count = plan.task_count
+        if adaptive:
+            a_norms = resident_block_norms(a, cache)
+            b_norms = a_norms if b is a else resident_block_norms(b, cache)
+            full = plan.tasks
+            low_task, _ = low_precision_task_mask(
+                a_norms, b_norms, full.a_idx, full.b_idx, precision.tau
+            )
+            task_on = _valid_task_slots(plan)
+            task_low = _adaptive_low_table(plan, low_task)
         with tr.span("dispatch", cat="kernel", op="spgemm") as sp:
-            c_store = tr.sync(exe(a.store, b.store))
+            if adaptive:
+                c_store = tr.sync(exe(a.store, b.store, task_on, task_low))
+            else:
+                c_store = tr.sync(exe(a.store, b.store))
             if tr.enabled:
-                _annotate_spgemm_dispatch(tr, sp, plan, plan.task_count)
+                _annotate_spgemm_dispatch(
+                    tr, sp, plan, plan.task_count, precision, exe
+                )
     return DistBSMatrix(
         shape=(a.shape[0], b.shape[1]),
         bs=a.bs,
@@ -317,6 +437,7 @@ def dist_spamm(
     exchange: str = "p2p",
     impl: str = "ref",
     method: str = "delta",
+    precision: Precision | None = None,
     a_norms: np.ndarray | None = None,
     b_norms: np.ndarray | None = None,
     rebalance=None,
@@ -341,23 +462,33 @@ def dist_spamm(
     layout-invariant, so prefetched ``a_norms`` / ``b_norms`` stay valid
     across the re-layout.
 
-    Returns ``(C, err_bound)`` with ``||A@B - C||_F <= err_bound <= tau``.
+    ``precision`` (fused impl only) selects the leaf engine's dtype policy;
+    ``adaptive`` rounds the smallest-bound kept tasks to bf16 under a budget
+    of ``precision.budget(tau)`` — the returned bound then includes the
+    rounding spend, so ``||A@B - C||_F <= err_bound`` still holds.
+
+    Returns ``(C, err_bound)`` with ``||A@B - C||_F <= err_bound``; for pure
+    pruning (fp32/bf16 storage aside) the bound is ``<= tau``.
     """
     _check_operands(a, b)
+    precision = _precision_of(precision, impl, exchange)
+    if precision.mode == "adaptive":
+        assert method == "delta", "adaptive precision rides the delta plan"
     tr = tracer_of(cache)
     with tr.span("dist_spamm", cat="collective",
                  nnzb_a=a.nnzb, nnzb_b=b.nnzb, tau=float(tau)):
         return _dist_spamm_impl(
             a, b, tau, cache, tr,
-            exchange=exchange, impl=impl, method=method,
+            exchange=exchange, impl=impl, method=method, precision=precision,
             a_norms=a_norms, b_norms=b_norms, rebalance=rebalance,
         )
 
 
 def _dist_spamm_impl(
-    a, b, tau, cache, tr, *, exchange, impl, method, a_norms, b_norms,
-    rebalance
+    a, b, tau, cache, tr, *, exchange, impl, method, precision, a_norms,
+    b_norms, rebalance
 ):
+    fused = _use_fused(impl, exchange)
     if rebalance is not None:
         a, b = _rebalance_operands(a, b, cache, rebalance)
     # norm fetches stay outside the symbolic timer: a miss on the fused norm
@@ -373,14 +504,18 @@ def _dist_spamm_impl(
         tasks, err = _spamm_pruned_tasks(a, b, tau, a_norms, b_norms)
 
     if method == "delta":
-        key = spamm_delta_plan_key(a, b, exchange=exchange, impl=impl)
+        key = spamm_delta_plan_key(
+            a, b, exchange=exchange, impl=impl, precision=precision
+        )
 
         def build():
             # the delta plan IS the exact-multiply plan; reuse one already
             # cached for dist_multiply on this structure instead of redoing
             # the symbolic phase (only the executable differs)
             exact = (
-                cache.peek(multiply_plan_key(a, b, exchange=exchange, impl=impl))
+                cache.peek(multiply_plan_key(
+                    a, b, exchange=exchange, impl=impl, precision=precision
+                ))
                 if cache is not None
                 else None
             )
@@ -396,7 +531,13 @@ def _dist_spamm_impl(
             assert plan.a_cap == a.cap and plan.b_cap == b.cap, (
                 plan.a_cap, a.cap, plan.b_cap, b.cap,
             )
-            exe = make_masked_spgemm_executable(plan, a.mesh, impl=impl)
+            if fused:
+                exe = make_masked_fused_spgemm_executable(
+                    plan, a.mesh, impl=impl, precision=precision
+                )
+            else:
+                staged = "ref" if impl in _FUSED_IMPLS else impl
+                exe = make_masked_spgemm_executable(plan, a.mesh, impl=staged)
             return plan, exe
 
         if cache is None:
@@ -426,14 +567,34 @@ def _dist_spamm_impl(
                     < plan.task_count[:, None]
                 )
                 task_on = keep_task[plan.task_gidx] & valid
+        # adaptive mixed precision: spend the rounding budget on the kept
+        # tasks with the smallest ||A_t||·||B_t|| bound (a pruned task
+        # contributes no error and must not consume budget)
+        task_low = None
+        if precision.mode == "adaptive":
+            full = plan.tasks
+            keep_task_g = np.zeros(max(full.num_tasks, 1), dtype=bool)
+            if full.num_tasks:
+                keep_task_g[plan.task_gidx[task_on]] = True
+            low_task, spent = low_precision_task_mask(
+                a_norms, b_norms, full.a_idx, full.b_idx,
+                precision.budget(tau), eligible=keep_task_g[: full.num_tasks],
+            )
+            task_low = _adaptive_low_table(plan, low_task)
+            err = float(err) + spent
         # measured per-worker flop load: only unmasked tasks cost work
         masked_count = task_on.sum(axis=1).astype(np.int64)
         if cache is not None:
             cache.last_task_count = masked_count
         with tr.span("dispatch", cat="kernel", op="spamm-delta") as sp:
-            c_store = tr.sync(exe(a.store, b.store, task_on))
+            if fused:
+                c_store = tr.sync(exe(a.store, b.store, task_on, task_low))
+            else:
+                c_store = tr.sync(exe(a.store, b.store, task_on))
             if tr.enabled:
-                _annotate_spgemm_dispatch(tr, sp, plan, masked_count)
+                _annotate_spgemm_dispatch(
+                    tr, sp, plan, masked_count, precision, exe
+                )
         return (
             DistBSMatrix(
                 shape=(a.shape[0], b.shape[1]),
@@ -464,6 +625,9 @@ def _dist_spamm_impl(
         mesh_key(a.mesh),
         exchange,
         impl,
+        str(a.dtype),
+        str(b.dtype),
+        precision.key(),
     )
 
     def build():
@@ -480,7 +644,13 @@ def _dist_spamm_impl(
         assert plan.a_cap == a.cap and plan.b_cap == b.cap, (
             plan.a_cap, a.cap, plan.b_cap, b.cap,
         )
-        exe = make_spgemm_executable(plan, a.mesh, impl=impl)
+        if fused:
+            exe = make_fused_spgemm_executable(
+                plan, a.mesh, impl=impl, precision=precision
+            )
+        else:
+            staged = "ref" if impl in _FUSED_IMPLS else impl
+            exe = make_spgemm_executable(plan, a.mesh, impl=staged)
         return plan, exe
 
     if cache is None:
@@ -492,7 +662,9 @@ def _dist_spamm_impl(
     with tr.span("dispatch", cat="kernel", op="spamm-replan") as sp:
         c_store = tr.sync(exe(a.store, b.store))
         if tr.enabled:
-            _annotate_spgemm_dispatch(tr, sp, plan, plan.task_count)
+            _annotate_spgemm_dispatch(
+                tr, sp, plan, plan.task_count, precision, exe
+            )
     return (
         DistBSMatrix(
             shape=(a.shape[0], b.shape[1]),

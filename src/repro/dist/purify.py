@@ -25,6 +25,7 @@ from repro.core.add import add_scaled_identity, identity
 from repro.core.distributed import make_worker_mesh
 from repro.core.matrix import BSMatrix
 from repro.core.purify import PurifyStats, Sp2Monitor, sp2_init_coeffs, sp2_should_square
+from repro.kernels.precision import Precision
 from repro.core.schedule import SpgemmPlan, plan_stats
 from repro.obs.timing import IterationScope
 from repro.obs.tracer import run_metrics, tracer_of
@@ -98,8 +99,9 @@ def dist_sp2_purify(
     spamm_tau: float = 0.0,
     trunc_method: str = "hierarchical",
     spamm_method: str = "delta",
-    impl: str = "ref",
+    impl: str = "fused",
     exchange: str = "p2p",
+    precision: Precision | None = None,
     cache: PlanCache | None = None,
     return_resident: bool = False,
     rebalance: RebalancePolicy | None = None,
@@ -189,10 +191,14 @@ def dist_sp2_purify(
                     x2, mult_err = dist_spamm(
                         x, x, spamm_tau, cache,
                         exchange=exchange, impl=impl,
-                        method=spamm_method, a_norms=x_norms,
+                        method=spamm_method, precision=precision,
+                        a_norms=x_norms,
                     )
                 else:
-                    x2 = dist_multiply(x, x, cache, exchange=exchange, impl=impl)
+                    x2 = dist_multiply(
+                        x, x, cache, exchange=exchange, impl=impl,
+                        precision=precision,
+                    )
                     mult_err = 0.0
                 # peek the plan the multiply actually used (exact,
                 # SpAMM-replan or SpAMM-delta — last_plan_key tracks all
@@ -417,8 +423,9 @@ def dist_sqrt_inv_pipeline(
     trunc_tau: float = 0.0,
     spamm_tau: float = 0.0,
     leaf_blocks: int = 1,
-    impl: str = "ref",
+    impl: str = "fused",
     exchange: str = "p2p",
+    precision: Precision | None = None,
     cache: PlanCache | None = None,
     transform_back: bool = True,
     rebalance: RebalancePolicy | None = None,
@@ -483,14 +490,17 @@ def dist_sqrt_inv_pipeline(
     z, inv_stats = dist_localized_inverse_factorization(
         ds, cache, tol=tol, max_iter=max_iter, trunc_tau=trunc_tau,
         spamm_tau=spamm_tau, leaf_blocks=leaf_blocks, exchange=exchange,
-        impl=impl, rebalance=rebalance,
+        impl=impl, precision=precision, rebalance=rebalance,
     )
 
     with IterationScope(cache, None, trc, name="congruence", cat="phase") as sc:
         zt = dist_transpose(z, cache)
         f_ortho = dist_multiply(
-            dist_multiply(zt, dh, cache, exchange=exchange, impl=impl),
-            z, cache, exchange=exchange, impl=impl,
+            dist_multiply(
+                zt, dh, cache, exchange=exchange, impl=impl,
+                precision=precision,
+            ),
+            z, cache, exchange=exchange, impl=impl, precision=precision,
         )
         congruence = sc.delta()
 
@@ -513,8 +523,8 @@ def dist_sqrt_inv_pipeline(
     d_ortho, purify_stats = dist_sp2_purify(
         f_ortho, n_occ, lmin, lmax, max_iter=max_iter, idem_tol=idem_tol,
         trunc_tau=trunc_tau, spamm_tau=spamm_tau, impl=impl,
-        exchange=exchange, cache=cache, return_resident=True,
-        rebalance=rebalance,
+        exchange=exchange, precision=precision, cache=cache,
+        return_resident=True, rebalance=rebalance,
     )
 
     back = None
@@ -523,8 +533,11 @@ def dist_sqrt_inv_pipeline(
             cache, None, trc, name="back_transform", cat="phase"
         ) as sb:
             d = dist_multiply(
-                dist_multiply(z, d_ortho, cache, exchange=exchange, impl=impl),
-                zt, cache, exchange=exchange, impl=impl,
+                dist_multiply(
+                    z, d_ortho, cache, exchange=exchange, impl=impl,
+                    precision=precision,
+                ),
+                zt, cache, exchange=exchange, impl=impl, precision=precision,
             )
             back = sb.delta()
         result = d.gather()

@@ -1,0 +1,257 @@
+"""On-disk tile autotuner for the grouped block-matmul kernels.
+
+Replaces the static ``_pick_tile`` heuristic: winners measured per
+``(platform, bm, bk, bn, dtype)`` are persisted in a small JSON cache (keyed
+like the plan cache: structure-independent knobs only) and looked up by
+:func:`pick_tiles` before every kernel dispatch.  Untuned shapes — and any
+unreadable/corrupt cache file — fall back to the heuristic, so the tuner is
+strictly opt-in: correctness never depends on the cache.
+
+The timing machinery (:func:`time_call`) is shared with
+``benchmarks/kernel_micro.py`` so benchmark numbers and autotune decisions
+come from one stopwatch.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+__all__ = [
+    "time_call",
+    "heuristic_tiles",
+    "tile_key",
+    "default_cache_path",
+    "load_tile_cache",
+    "save_tile_entry",
+    "pick_tiles",
+    "autotune_tiles",
+    "clear_memo",
+]
+
+CACHE_VERSION = 1
+_ENV_VAR = "REPRO_AUTOTUNE_CACHE"
+
+# in-process memo of loaded cache files: path -> (mtime, entries dict)
+_memo: dict[str, tuple[float, dict]] = {}
+
+
+def time_call(fn, reps: int = 5) -> float:
+    """Mean wall seconds per call after one warmup (compile) call."""
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / max(reps, 1)
+
+
+def _pick_tile(n: int, cap: int = 512) -> int:
+    """Largest divisor of n that is <= cap, preferring MXU-aligned sizes."""
+    if n <= cap:
+        return n
+    for cand in (512, 384, 256, 128):
+        if cand <= cap and n % cand == 0:
+            return cand
+    t = cap
+    while n % t:
+        t -= 1
+    return t
+
+
+def heuristic_tiles(bm: int, bk: int, bn: int, cap: int = 512) -> tuple[int, int, int]:
+    """The pre-autotune static choice — the fallback for untuned shapes."""
+    return _pick_tile(bm, cap), _pick_tile(bn, cap), _pick_tile(bk, cap)
+
+
+def default_platform() -> str:
+    import jax
+
+    return jax.default_backend()
+
+
+def tile_key(platform: str, bm: int, bk: int, bn: int, dtype) -> str:
+    return f"{platform}|{int(bm)}x{int(bk)}x{int(bn)}|{str(dtype)}"
+
+
+def default_cache_path() -> str:
+    path = os.environ.get(_ENV_VAR)
+    if path:
+        return path
+    return os.path.join(
+        os.path.expanduser("~"), ".cache", "repro", "autotune.json"
+    )
+
+
+def load_tile_cache(path: str | None = None) -> dict:
+    """Entries from the on-disk cache; {} when missing or corrupt.
+
+    A malformed file (truncated write, wrong schema version, junk) must
+    never break a kernel dispatch — it reads as empty and the heuristic
+    takes over.
+    """
+    path = path or default_cache_path()
+    try:
+        mtime = os.path.getmtime(path)
+    except OSError:
+        return {}
+    memo = _memo.get(path)
+    if memo is not None and memo[0] == mtime:
+        return memo[1]
+    try:
+        with open(path) as fh:
+            raw = json.load(fh)
+        assert raw.get("version") == CACHE_VERSION
+        entries = raw["entries"]
+        assert isinstance(entries, dict)
+        entries = {
+            k: tuple(int(t) for t in v)
+            for k, v in entries.items()
+            if isinstance(v, (list, tuple)) and len(v) == 3
+        }
+    except Exception:
+        entries = {}
+    _memo[path] = (mtime, entries)
+    return entries
+
+
+def save_tile_entry(
+    key: str, tiles: tuple[int, int, int], path: str | None = None
+) -> None:
+    """Merge one winner into the cache file (atomic replace)."""
+    path = path or default_cache_path()
+    entries = dict(load_tile_cache(path))
+    entries[key] = tuple(int(t) for t in tiles)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(
+        dir=os.path.dirname(path) or ".", suffix=".tmp"
+    )
+    try:
+        with os.fdopen(fd, "w") as fh:
+            json.dump(
+                {"version": CACHE_VERSION, "entries": entries}, fh, indent=1
+            )
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    _memo.pop(path, None)
+
+
+def clear_memo() -> None:
+    """Drop the in-process cache-file memo (tests poking at the file)."""
+    _memo.clear()
+
+
+def pick_tiles(
+    bm: int,
+    bk: int,
+    bn: int,
+    dtype="float32",
+    *,
+    platform: str | None = None,
+    path: str | None = None,
+) -> tuple[int, int, int]:
+    """(tm, tn, tk) for a block shape: tuned winner if cached, else heuristic.
+
+    A cached entry that no longer divides the block shape (stale file,
+    hand-edited) is ignored rather than trusted.
+    """
+    platform = platform or default_platform()
+    entry = load_tile_cache(path).get(tile_key(platform, bm, bk, bn, dtype))
+    if entry is not None:
+        tm, tn, tk = entry
+        if tm >= 1 and tn >= 1 and tk >= 1 and bm % tm == 0 and bn % tn == 0 and bk % tk == 0:
+            return tm, tn, tk
+    return heuristic_tiles(bm, bk, bn)
+
+
+def candidate_tiles(bm: int, bk: int, bn: int, per_dim: int = 3) -> list[tuple[int, int, int]]:
+    """Small candidate grid: lane-aligned divisors of each block dim."""
+
+    def divisors(n):
+        cands = [
+            d
+            for d in (512, 384, 256, 128, 64, 32, 16, 8)
+            if d <= n and n % d == 0
+        ]
+        if n not in cands:
+            cands.insert(0, n)
+        return cands[:per_dim]
+
+    out = []
+    for tm in divisors(bm):
+        for tn in divisors(bn):
+            for tk in divisors(bk):
+                out.append((tm, tn, tk))
+    return out
+
+
+def autotune_tiles(
+    bm: int,
+    bk: int,
+    bn: int,
+    dtype="float32",
+    *,
+    bench=None,
+    candidates=None,
+    reps: int = 3,
+    platform: str | None = None,
+    path: str | None = None,
+    persist: bool = True,
+) -> tuple[tuple[int, int, int], list[dict]]:
+    """Benchmark candidate tilings for one block shape and persist the winner.
+
+    ``bench(tm, tn, tk)`` must return a zero-arg callable that runs the
+    kernel to completion with that tiling (``benchmarks/kernel_micro.py``
+    provides one; the default builds a tiny random task list over
+    ``repro.kernels.block_spmm``).  Candidates that fail to run (tiling
+    rejected by the compiler) are skipped.  Returns the winning tiling and
+    the per-candidate timing rows.
+    """
+    platform = platform or default_platform()
+    if bench is None:
+        bench = _default_bench(bm, bk, bn, dtype)
+    candidates = candidates or candidate_tiles(bm, bk, bn)
+    rows = []
+    best, best_t = None, float("inf")
+    for tm, tn, tk in candidates:
+        try:
+            fn = bench(tm, tn, tk)
+            t = time_call(fn, reps=reps)
+        except Exception as e:
+            rows.append(dict(tiles=(tm, tn, tk), us=None, error=str(e)))
+            continue
+        rows.append(dict(tiles=(tm, tn, tk), us=t * 1e6))
+        if t < best_t:
+            best, best_t = (tm, tn, tk), t
+    if best is None:
+        best = heuristic_tiles(bm, bk, bn)
+    elif persist:
+        save_tile_entry(tile_key(platform, bm, bk, bn, dtype), best, path)
+    return best, rows
+
+
+def _default_bench(bm: int, bk: int, bn: int, dtype):
+    import jax.numpy as jnp
+    import numpy as np
+
+    from .block_spmm import block_spmm_kernel_call
+
+    rng = np.random.default_rng(0)
+    T, n_in, n_out = 16, 8, 4
+    a = jnp.asarray(rng.standard_normal((n_in, bm, bk)), dtype)
+    b = jnp.asarray(rng.standard_normal((n_in, bk, bn)), dtype)
+    ai = jnp.asarray(rng.integers(0, n_in, T), jnp.int32)
+    bi = jnp.asarray(rng.integers(0, n_in, T), jnp.int32)
+    ci = jnp.asarray(np.sort(rng.integers(0, n_out, T)), jnp.int32)
+    interpret = default_platform() != "tpu"
+
+    def bench(tm, tn, tk):
+        return lambda: block_spmm_kernel_call(
+            a, b, ai, bi, ci, num_out=n_out, tm=tm, tn=tn, tk=tk,
+            interpret=interpret,
+        ).block_until_ready()
+
+    return bench

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .autotune import pick_tiles
 from .compat import tpu_compiler_params
 
 __all__ = ["block_spmm_kernel_call"]
@@ -47,19 +48,6 @@ def _kernel(a_idx_ref, b_idx_ref, c_idx_ref, a_ref, b_ref, o_ref, *, nk: int):
     a = a_ref[0]
     b = b_ref[0]
     o_ref[0] += jnp.dot(a, b, preferred_element_type=jnp.float32)
-
-
-def _pick_tile(n: int, cap: int = 512) -> int:
-    """Largest divisor of n that is <= cap, preferring MXU-aligned sizes."""
-    if n <= cap:
-        return n
-    for cand in (512, 384, 256, 128):
-        if cand <= cap and n % cand == 0:
-            return cand
-    t = cap
-    while n % t:
-        t -= 1
-    return t
 
 
 @functools.partial(
@@ -83,9 +71,10 @@ def block_spmm_kernel_call(
     bm, bk = a_data.shape[1], a_data.shape[2]
     bn = b_data.shape[2]
     assert b_data.shape[1] == bk, (a_data.shape, b_data.shape)
-    tm = tm or _pick_tile(bm)
-    tn = tn or _pick_tile(bn)
-    tk = tk or _pick_tile(bk)
+    # tile selection: autotuned winner when the on-disk cache has this
+    # (platform, block shape, dtype), the old static heuristic otherwise
+    dtm, dtn, dtk = pick_tiles(bm, bk, bn, a_data.dtype)
+    tm, tn, tk = tm or dtm, tn or dtn, tk or dtk
     nm, nn, nk = bm // tm, bn // tn, bk // tk
 
     grid = (nm, nn, T, nk)

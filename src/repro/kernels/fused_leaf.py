@@ -1,0 +1,222 @@
+"""Fused leaf engine: unpack + batched block GEMM + C-accumulate in one call.
+
+The staged numeric phase (``core/distributed.py`` historically) materialized
+a concatenated device-local operand buffer ``[own store | recv_0 | recv_1 |
+...]`` after the ppermute rounds, then ran ``kernels/block_spmm.py`` as a
+separate dispatch over it.  The fused engine removes that intermediate: the
+plan's task operand indices are decomposed host-side into ``(src, off)``
+pairs — ``src == 0`` reads the device's own store at row ``off``; ``src ==
+r+1`` reads receive buffer ``r`` at row ``off`` — and the kernel gathers
+tiles straight out of the store and the stacked receive buffers via
+scalar-prefetched index maps.  No ``[sum(cap), bs, bs]`` concatenate is ever
+built, on TPU or on CPU.
+
+Grid and accumulation contract are identical to ``block_spmm``: grid
+``(nm, nn, T, nk)``, output rows revisited across same-``c`` tasks with the
+accumulator zero-initialised at ``(k == 0) & (t == 0 | c[t] != c[t-1])``,
+fp32 accumulation, trailing trash row for padded/masked tasks.
+
+Mixed precision: operand stores may arrive bfloat16 (the ``bf16`` policy
+casts before the exchange, halving payload bytes); accumulation stays fp32.
+In ``adaptive`` mode a scalar-prefetched per-task ``low`` mask rounds that
+task's fp32 operand tiles to bf16 before the MXU — the SpAMM norm bound
+selected those tasks, so the rounding error is budgeted by construction
+(see :mod:`repro.kernels.precision`).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .autotune import pick_tiles
+from .compat import tpu_compiler_params
+
+__all__ = [
+    "fused_block_spmm_kernel_call",
+    "fused_block_spmm_ref",
+]
+
+
+def _round_bf16(x):
+    return x.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def _kernel(
+    a_src_ref,
+    a_off_ref,
+    b_src_ref,
+    b_off_ref,
+    c_idx_ref,
+    low_ref,
+    a_store_ref,
+    a_recv_ref,
+    b_store_ref,
+    b_recv_ref,
+    o_ref,
+    *,
+    nk: int,
+    adaptive: bool,
+):
+    t = pl.program_id(2)
+    k = pl.program_id(3)
+    prev = c_idx_ref[jnp.maximum(t - 1, 0)]
+    first_task_for_block = jnp.logical_or(t == 0, c_idx_ref[t] != prev)
+
+    @pl.when(jnp.logical_and(k == 0, first_task_for_block))
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # unpack: the index maps already steered the pipeline to the right row of
+    # the store (src == 0) or of receive buffer src-1; the discarded branch
+    # fetched a dummy row 0 tile
+    a = jnp.where(a_src_ref[t] == 0, a_store_ref[0], a_recv_ref[0, 0])
+    b = jnp.where(b_src_ref[t] == 0, b_store_ref[0], b_recv_ref[0, 0])
+    if adaptive:
+        lo = low_ref[t] != 0
+        a = jnp.where(lo, _round_bf16(a), a)
+        b = jnp.where(lo, _round_bf16(b), b)
+    o_ref[0] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_out", "adaptive", "tm", "tn", "tk", "interpret"),
+)
+def fused_block_spmm_kernel_call(
+    a_store: jax.Array,  # [capA, bm, bk] own store
+    a_recv: jax.Array,  # [Ra, capU_a, bm, bk] stacked receive buffers
+    b_store: jax.Array,  # [capB, bk, bn]
+    b_recv: jax.Array,  # [Rb, capU_b, bk, bn]
+    a_src: jax.Array,  # [T] int32: 0 -> own store, r+1 -> recv buffer r
+    a_off: jax.Array,  # [T] int32 row within the selected source
+    b_src: jax.Array,
+    b_off: jax.Array,
+    c_idx: jax.Array,  # [T] int32 output row, sorted ascending
+    low: jax.Array,  # [T] int32: 1 -> round this task's tiles to bf16
+    *,
+    num_out: int,
+    adaptive: bool = False,
+    tm: int | None = None,
+    tn: int | None = None,
+    tk: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Raw fused pallas_call. Prefer repro.kernels.ops.fused_block_spmm.
+
+    With no exchange rounds pass a dummy ``[1, 1, bm, bk]`` receive stack and
+    all-zero ``src`` — the recv branch then prefetches the dummy row and the
+    select discards it.
+    """
+    T = a_src.shape[0]
+    bm, bk = a_store.shape[1], a_store.shape[2]
+    bn = b_store.shape[2]
+    assert b_store.shape[1] == bk, (a_store.shape, b_store.shape)
+    assert a_recv.shape[-2:] == (bm, bk), (a_recv.shape, (bm, bk))
+    assert b_recv.shape[-2:] == (bk, bn), (b_recv.shape, (bk, bn))
+    dtm, dtn, dtk = pick_tiles(bm, bk, bn, a_store.dtype)
+    tm, tn, tk = tm or dtm, tn or dtn, tk or dtk
+    nm, nn, nk = bm // tm, bn // tn, bk // tk
+
+    grid = (nm, nn, T, nk)
+
+    def a_store_map(m, n, t, k, a_src, a_off, b_src, b_off, c_idx, low):
+        return (jnp.where(a_src[t] == 0, a_off[t], 0), m, k)
+
+    def a_recv_map(m, n, t, k, a_src, a_off, b_src, b_off, c_idx, low):
+        return (
+            jnp.maximum(a_src[t] - 1, 0),
+            jnp.where(a_src[t] == 0, 0, a_off[t]),
+            m,
+            k,
+        )
+
+    def b_store_map(m, n, t, k, a_src, a_off, b_src, b_off, c_idx, low):
+        return (jnp.where(b_src[t] == 0, b_off[t], 0), k, n)
+
+    def b_recv_map(m, n, t, k, a_src, a_off, b_src, b_off, c_idx, low):
+        return (
+            jnp.maximum(b_src[t] - 1, 0),
+            jnp.where(b_src[t] == 0, 0, b_off[t]),
+            k,
+            n,
+        )
+
+    def o_map(m, n, t, k, a_src, a_off, b_src, b_off, c_idx, low):
+        return (c_idx[t], m, n)
+
+    isz = a_store.dtype.itemsize
+    flops = 2 * T * bm * bn * bk
+    bytes_accessed = int(
+        T * (tm * bk * isz + bk * tn * isz) + num_out * bm * bn * 4
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, nk=nk, adaptive=adaptive),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=6,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, tm, tk), a_store_map),
+                pl.BlockSpec((1, 1, tm, tk), a_recv_map),
+                pl.BlockSpec((1, tk, tn), b_store_map),
+                pl.BlockSpec((1, 1, tk, tn), b_recv_map),
+            ],
+            out_specs=pl.BlockSpec((1, tm, tn), o_map),
+        ),
+        out_shape=jax.ShapeDtypeStruct((num_out, bm, bn), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary", "arbitrary"),
+        ),
+        cost_estimate=pl.CostEstimate(
+            flops=flops, bytes_accessed=bytes_accessed, transcendentals=0
+        ),
+        interpret=interpret,
+    )(a_src, a_off, b_src, b_off, c_idx, low, a_store, a_recv, b_store, b_recv)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("num_out", "adaptive"))
+def fused_block_spmm_ref(
+    a_store: jax.Array,
+    a_recv: jax.Array,
+    b_store: jax.Array,
+    b_recv: jax.Array,
+    a_src: jax.Array,
+    a_off: jax.Array,
+    b_src: jax.Array,
+    b_off: jax.Array,
+    c_idx: jax.Array,
+    low: jax.Array | None = None,
+    *,
+    num_out: int,
+    adaptive: bool = False,
+) -> jax.Array:
+    """jnp/segment-sum reference of the fused engine (CPU + interpret parity).
+
+    Gathers each task's operand tiles from (store | recv stack) by the same
+    ``(src, off)`` decomposition the kernel prefetches, then runs the exact
+    einsum + ``segment_sum`` of :func:`repro.kernels.ref.block_spmm_ref` —
+    in fp32 the result is bit-identical to the staged path gathering from
+    the concatenated operand buffer, because the gathered tile values and
+    the accumulation order are the same.
+    """
+
+    def gather(store, recv, src, off):
+        local = src == 0
+        own = store[jnp.where(local, off, 0)]
+        rem = recv[jnp.maximum(src - 1, 0), jnp.where(local, 0, off)]
+        return jnp.where(local[:, None, None], own, rem)
+
+    lhs = gather(a_store, a_recv, a_src, a_off).astype(jnp.float32)
+    rhs = gather(b_store, b_recv, b_src, b_off).astype(jnp.float32)
+    if adaptive:
+        assert low is not None
+        lo = (low != 0)[:, None, None]
+        lhs = jnp.where(lo, _round_bf16(lhs), lhs)
+        rhs = jnp.where(lo, _round_bf16(rhs), rhs)
+    prods = jnp.einsum("tij,tjk->tik", lhs, rhs)
+    return jax.ops.segment_sum(prods, c_idx, num_segments=num_out)

@@ -11,8 +11,9 @@ import jax.numpy as jnp
 
 from . import ref
 from .block_spmm import block_spmm_kernel_call
+from .fused_leaf import fused_block_spmm_kernel_call, fused_block_spmm_ref
 
-__all__ = ["block_spmm", "flash_attention"]
+__all__ = ["block_spmm", "fused_block_spmm", "flash_attention"]
 
 
 def _on_tpu() -> bool:
@@ -54,6 +55,63 @@ def block_spmm(
         jnp.asarray(c_idx, jnp.int32),
         num_out=num_out,
         interpret=interpret,
+    )
+
+
+def fused_block_spmm(
+    a_store: jax.Array,
+    a_recv: jax.Array,
+    b_store: jax.Array,
+    b_recv: jax.Array,
+    a_src: jax.Array,
+    a_off: jax.Array,
+    b_src: jax.Array,
+    b_off: jax.Array,
+    c_idx: jax.Array,
+    num_out: int,
+    *,
+    low: jax.Array | None = None,
+    adaptive: bool = False,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused unpack + grouped block matmul + accumulate (the leaf engine).
+
+    Task operands are addressed as ``(src, off)`` pairs over the device's
+    own store and the stacked receive buffers — see
+    :mod:`repro.kernels.fused_leaf` for the layout and the accumulation
+    contract (same as :func:`block_spmm`, trailing trash row included).
+
+    Dispatch: compiled Mosaic on TPU, the fused jnp/segment-sum reference
+    elsewhere (pass ``interpret=True`` to force the Pallas interpreter —
+    tests do, production CPU paths should not: interpret mode is orders of
+    magnitude slower than the reference).  Tiny/odd block sizes fall back
+    to the reference like :func:`block_spmm`.  Returns fp32
+    ``[num_out, bm, bn]``.
+    """
+    bm, bk, bn = a_store.shape[1], a_store.shape[2], b_store.shape[2]
+    if a_src.shape[0] == 0:
+        return jnp.zeros((num_out, bm, bn), jnp.float32)
+    i32 = lambda x: jnp.asarray(x, jnp.int32)
+    if low is None:
+        low = jnp.zeros(a_src.shape, jnp.int32)
+    use_kernel = _on_tpu() if interpret is None else True
+    if (
+        not use_kernel
+        or min(bm, bk, bn) < 8
+        or bm % 8
+        or bk % 8
+        or bn % 8
+    ):
+        return fused_block_spmm_ref(
+            a_store, a_recv, b_store, b_recv,
+            i32(a_src), i32(a_off), i32(b_src), i32(b_off), i32(c_idx),
+            i32(low), num_out=num_out, adaptive=adaptive,
+        )
+    return fused_block_spmm_kernel_call(
+        a_store, a_recv, b_store, b_recv,
+        i32(a_src), i32(a_off), i32(b_src), i32(b_off), i32(c_idx), i32(low),
+        num_out=num_out, adaptive=adaptive,
+        interpret=bool(interpret) if interpret is not None else False,
     )
 
 

@@ -1,0 +1,456 @@
+"""Fused leaf engine: kernel/ref parity, mixed precision, autotune cache,
+and 8-worker distributed bit-identity (subprocess, like test_distributed)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.kernels import ref as kref  # noqa: E402
+from repro.kernels.autotune import (  # noqa: E402
+    clear_memo,
+    heuristic_tiles,
+    load_tile_cache,
+    pick_tiles,
+    save_tile_entry,
+    tile_key,
+)
+from repro.kernels.fused_leaf import (  # noqa: E402
+    fused_block_spmm_kernel_call,
+    fused_block_spmm_ref,
+)
+from repro.kernels.ops import fused_block_spmm  # noqa: E402
+from repro.kernels.precision import (  # noqa: E402
+    BF16,
+    FP32,
+    ROUND2_BOUND,
+    Precision,
+    low_precision_task_mask,
+)
+
+rng = np.random.default_rng(7)
+
+
+def _problem(T=24, n_store=6, rounds=2, cap_u=5, bm=16, bk=16, bn=16, dtype=np.float32):
+    """Random fused-engine operand set + the equivalent staged concatenation."""
+    a_store = rng.standard_normal((n_store, bm, bk)).astype(dtype)
+    b_store = rng.standard_normal((n_store, bk, bn)).astype(dtype)
+    a_recv = rng.standard_normal((rounds, cap_u, bm, bk)).astype(dtype)
+    b_recv = rng.standard_normal((rounds, cap_u, bk, bn)).astype(dtype)
+    a_src = rng.integers(0, rounds + 1, T).astype(np.int32)
+    a_off = np.where(
+        a_src == 0, rng.integers(0, n_store, T), rng.integers(0, cap_u, T)
+    ).astype(np.int32)
+    b_src = rng.integers(0, rounds + 1, T).astype(np.int32)
+    b_off = np.where(
+        b_src == 0, rng.integers(0, n_store, T), rng.integers(0, cap_u, T)
+    ).astype(np.int32)
+    num_out = 5
+    c_idx = np.sort(rng.integers(0, num_out, T)).astype(np.int32)
+    # staged layout: [own store | recv round 0 | recv round 1 | ...]
+    a_cat = np.concatenate([a_store, a_recv.reshape(-1, bm, bk)])
+    b_cat = np.concatenate([b_store, b_recv.reshape(-1, bk, bn)])
+    a_lin = np.where(a_src == 0, a_off, n_store + (a_src - 1) * cap_u + a_off)
+    b_lin = np.where(b_src == 0, b_off, n_store + (b_src - 1) * cap_u + b_off)
+    return dict(
+        a_store=a_store, a_recv=a_recv, b_store=b_store, b_recv=b_recv,
+        a_src=a_src, a_off=a_off, b_src=b_src, b_off=b_off, c_idx=c_idx,
+        num_out=num_out, a_cat=a_cat, b_cat=b_cat, a_lin=a_lin, b_lin=b_lin,
+    )
+
+
+def _ref(p, **kw):
+    return np.asarray(
+        fused_block_spmm_ref(
+            p["a_store"], p["a_recv"], p["b_store"], p["b_recv"],
+            jnp.asarray(p["a_src"]), jnp.asarray(p["a_off"]),
+            jnp.asarray(p["b_src"]), jnp.asarray(p["b_off"]),
+            jnp.asarray(p["c_idx"]), num_out=p["num_out"], **kw,
+        )
+    )
+
+
+def test_fused_ref_bit_identical_to_staged_fp32():
+    p = _problem()
+    staged = np.asarray(
+        kref.block_spmm_ref(
+            p["a_cat"], p["b_cat"],
+            jnp.asarray(p["a_lin"], jnp.int32), jnp.asarray(p["b_lin"], jnp.int32),
+            jnp.asarray(p["c_idx"]), p["num_out"],
+        )
+    )
+    fused = _ref(p)
+    assert (staged == fused).all()
+
+
+def test_fused_kernel_interpret_matches_ref_full_tile():
+    p = _problem(bm=16, bk=16, bn=16)
+    got = np.asarray(
+        fused_block_spmm_kernel_call(
+            p["a_store"], p["a_recv"], p["b_store"], p["b_recv"],
+            jnp.asarray(p["a_src"]), jnp.asarray(p["a_off"]),
+            jnp.asarray(p["b_src"]), jnp.asarray(p["b_off"]),
+            jnp.asarray(p["c_idx"]), jnp.zeros(p["a_src"].shape, jnp.int32),
+            num_out=p["num_out"], interpret=True,
+        )
+    )
+    # full-block tiles: one dot per task, same accumulation order as the ref
+    assert (got == _ref(p)).all()
+
+
+def test_fused_kernel_interpret_tiled():
+    p = _problem(bm=16, bk=16, bn=16)
+    got = np.asarray(
+        fused_block_spmm_kernel_call(
+            p["a_store"], p["a_recv"], p["b_store"], p["b_recv"],
+            jnp.asarray(p["a_src"]), jnp.asarray(p["a_off"]),
+            jnp.asarray(p["b_src"]), jnp.asarray(p["b_off"]),
+            jnp.asarray(p["c_idx"]), jnp.zeros(p["a_src"].shape, jnp.int32),
+            num_out=p["num_out"], tm=8, tn=8, tk=8, interpret=True,
+        )
+    )
+    # k-split changes the fp32 summation tree: allclose, not bit-equal
+    np.testing.assert_allclose(got, _ref(p), rtol=1e-5, atol=1e-5)
+
+
+def test_fused_nonpow2_block_sizes():
+    # 24 is lane-aligned (divisible by 8) -> interpret kernel path
+    p = _problem(bm=24, bk=24, bn=24)
+    got = np.asarray(
+        fused_block_spmm(
+            p["a_store"], p["a_recv"], p["b_store"], p["b_recv"],
+            p["a_src"], p["a_off"], p["b_src"], p["b_off"], p["c_idx"],
+            p["num_out"], interpret=True,
+        )
+    )
+    assert (got == _ref(p)).all()
+    # 10 is not lane-aligned -> ops dispatch falls back to the fused ref
+    q = _problem(bm=10, bk=10, bn=10)
+    got = np.asarray(
+        fused_block_spmm(
+            q["a_store"], q["a_recv"], q["b_store"], q["b_recv"],
+            q["a_src"], q["a_off"], q["b_src"], q["b_off"], q["c_idx"],
+            q["num_out"], interpret=True,
+        )
+    )
+    assert (got == _ref(q)).all()
+
+
+def test_fused_empty_task_list():
+    p = _problem(T=0)
+    got = np.asarray(
+        fused_block_spmm(
+            p["a_store"], p["a_recv"], p["b_store"], p["b_recv"],
+            p["a_src"], p["a_off"], p["b_src"], p["b_off"], p["c_idx"],
+            p["num_out"],
+        )
+    )
+    assert got.shape == (p["num_out"], 16, 16)
+    assert (got == 0).all()
+
+
+def test_fused_adaptive_low_mask_bound():
+    p = _problem(T=32)
+    exact = _ref(p)
+    a_n = np.linalg.norm(p["a_cat"].astype(np.float64), axis=(1, 2))
+    b_n = np.linalg.norm(p["b_cat"].astype(np.float64), axis=(1, 2))
+    budget = 0.5 * float(ROUND2_BOUND * (a_n[p["a_lin"]] * b_n[p["b_lin"]]).sum())
+    low, spent = low_precision_task_mask(a_n, b_n, p["a_lin"], p["b_lin"], budget)
+    assert 0 < low.sum() < low.shape[0]
+    assert spent <= budget
+    got = np.asarray(
+        fused_block_spmm(
+            p["a_store"], p["a_recv"], p["b_store"], p["b_recv"],
+            p["a_src"], p["a_off"], p["b_src"], p["b_off"], p["c_idx"],
+            p["num_out"], low=jnp.asarray(low.astype(np.int32)), adaptive=True,
+        )
+    )
+    err = float(np.linalg.norm((got - exact).ravel()))
+    assert err <= spent + 1e-12, (err, spent)
+    # all-off mask is exactly fp32
+    got0 = np.asarray(
+        fused_block_spmm(
+            p["a_store"], p["a_recv"], p["b_store"], p["b_recv"],
+            p["a_src"], p["a_off"], p["b_src"], p["b_off"], p["c_idx"],
+            p["num_out"], low=jnp.zeros(32, jnp.int32), adaptive=True,
+        )
+    )
+    assert (got0 == exact).all()
+
+
+def test_fused_bf16_storage_bound():
+    p = _problem(T=32)
+    exact = _ref(p)
+    q = dict(p)
+    for k in ("a_store", "a_recv", "b_store", "b_recv"):
+        q[k] = jnp.asarray(p[k], jnp.bfloat16)
+    got = _ref(q)
+    a_n = np.linalg.norm(p["a_cat"].astype(np.float64), axis=(1, 2))
+    b_n = np.linalg.norm(p["b_cat"].astype(np.float64), axis=(1, 2))
+    bound = float(ROUND2_BOUND * (a_n[p["a_lin"]] * b_n[p["b_lin"]]).sum())
+    err = float(np.linalg.norm((got - exact).ravel()))
+    assert 0 < err <= bound, (err, bound)
+
+
+def test_low_precision_mask_properties():
+    a_n = np.array([1.0, 2.0, 3.0, 4.0])
+    b_n = np.array([1.0, 1.0, 1.0, 1.0])
+    idx = np.arange(4)
+    per = ROUND2_BOUND * a_n
+    # budget for the two cheapest tasks only
+    m, spent = low_precision_task_mask(a_n, b_n, idx, idx, per[0] + per[1])
+    assert m.tolist() == [True, True, False, False]
+    assert np.isclose(spent, per[0] + per[1])
+    # eligibility excludes a task even if it fits
+    m, _ = low_precision_task_mask(
+        a_n, b_n, idx, idx, 100.0, eligible=np.array([True, False, True, True])
+    )
+    assert m.tolist() == [True, False, True, True]
+    # zero budget / empty task list select nothing
+    m, spent = low_precision_task_mask(a_n, b_n, idx, idx, 0.0)
+    assert not m.any() and spent == 0.0
+    m, spent = low_precision_task_mask(a_n, b_n, idx[:0], idx[:0], 1.0)
+    assert m.shape == (0,) and spent == 0.0
+
+
+def test_precision_policy():
+    assert FP32.key() != BF16.key()
+    assert Precision("adaptive", 1e-3).key() != Precision("adaptive", 1e-4).key()
+    assert Precision("adaptive", 0.0).budget(1e-5) == 1e-5
+    assert Precision("adaptive", 1e-3).budget(1e-5) == 1e-3
+    assert not FP32.is_mixed and BF16.is_mixed
+    with pytest.raises(AssertionError):
+        Precision("fp64")
+
+
+# --- autotune cache ---------------------------------------------------------
+
+
+def test_autotune_roundtrip_and_pick(tmp_path):
+    path = str(tmp_path / "autotune.json")
+    clear_memo()
+    key = tile_key("cpu", 32, 32, 32, "float32")
+    assert pick_tiles(32, 32, 32, "float32", platform="cpu", path=path) == \
+        heuristic_tiles(32, 32, 32)
+    save_tile_entry(key, (8, 16, 32), path=path)
+    assert pick_tiles(32, 32, 32, "float32", platform="cpu", path=path) == (8, 16, 32)
+    # other dtype / shape still miss
+    assert pick_tiles(32, 32, 32, "bfloat16", platform="cpu", path=path) == \
+        heuristic_tiles(32, 32, 32)
+    assert pick_tiles(64, 32, 32, "float32", platform="cpu", path=path) == \
+        heuristic_tiles(64, 32, 32)
+
+
+def test_autotune_corrupt_file_falls_back(tmp_path):
+    path = str(tmp_path / "autotune.json")
+    with open(path, "w") as fh:
+        fh.write("{not json")
+    clear_memo()
+    assert load_tile_cache(path) == {}
+    assert pick_tiles(32, 32, 32, platform="cpu", path=path) == \
+        heuristic_tiles(32, 32, 32)
+    # wrong schema version also reads as empty
+    with open(path, "w") as fh:
+        json.dump({"version": 999, "entries": {"x": [1, 1, 1]}}, fh)
+    clear_memo()
+    assert load_tile_cache(path) == {}
+
+
+def test_autotune_stale_entry_ignored(tmp_path):
+    path = str(tmp_path / "autotune.json")
+    clear_memo()
+    # 24 does not divide 32: the entry must be ignored, not trusted
+    save_tile_entry(tile_key("cpu", 32, 32, 32, "float32"), (24, 24, 24), path=path)
+    assert pick_tiles(32, 32, 32, "float32", platform="cpu", path=path) == \
+        heuristic_tiles(32, 32, 32)
+
+
+def test_autotune_tiles_picks_fastest(tmp_path):
+    from repro.kernels.autotune import autotune_tiles
+
+    path = str(tmp_path / "autotune.json")
+    clear_memo()
+
+    def bench(tm, tn, tk):
+        if (tm, tn, tk) == (4, 4, 4):
+            raise RuntimeError("tiling rejected")
+        return lambda: None
+
+    best, rows = autotune_tiles(
+        16, 16, 16, "float32", bench=bench,
+        candidates=[(16, 16, 16), (8, 8, 8), (4, 4, 4)],
+        reps=1, platform="cpu", path=path,
+    )
+    assert best in ((16, 16, 16), (8, 8, 8))
+    assert any(r["us"] is None for r in rows)  # rejected candidate recorded
+    clear_memo()
+    assert pick_tiles(16, 16, 16, "float32", platform="cpu", path=path) == best
+
+
+# --- 8-worker distributed parity (subprocess) -------------------------------
+
+_DIST_SCRIPT = r"""
+import numpy as np, jax, jax.numpy as jnp, json
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core import BSMatrix, multiply
+from repro.core.schedule import make_spgemm_plan
+from repro.core.distributed import (
+    make_worker_mesh, shard_stores, unshard_result, AXIS,
+    SpgemmExecutable, MaskedSpgemmExecutable,
+    FusedSpgemmExecutable, MaskedFusedSpgemmExecutable,
+)
+from repro.core.inverse import inv_chol
+from repro.dist.cache import PlanCache
+from repro.dist.matrix import scatter
+from repro.dist.multiply import dist_multiply, dist_spamm
+from repro.dist.purify import dist_sqrt_inv_pipeline
+from repro.dist.inverse import dist_inv_chol
+from repro.kernels.precision import BF16, Precision
+
+assert jax.device_count() == 8, jax.device_count()
+out = {}
+rng = np.random.default_rng(0)
+def banded(n, h, bs):
+    a = np.zeros((n, n), dtype=np.float32)
+    for i in range(n):
+        lo, hi = max(0, i-h), min(n, i+h+1)
+        a[i, lo:hi] = rng.standard_normal(hi-lo)
+    return BSMatrix.from_dense(a, bs)
+
+# --- executable level: fused vs staged, pruning, masking --------------------
+A = banded(256, 20, 16)
+mesh = make_worker_mesh(8)
+sh = NamedSharding(mesh, P(AXIS))
+plan = make_spgemm_plan(A.coords, A.coords, 8, 16, placement="morton", exchange="p2p")
+a_store, b_store = shard_stores(plan, A.data, A.data)
+a_store = jax.device_put(jnp.asarray(a_store), sh)
+b_store = jax.device_put(jnp.asarray(b_store), sh)
+
+c_staged = np.asarray(SpgemmExecutable(plan, mesh, impl="ref")(a_store, b_store))
+c_fused = np.asarray(FusedSpgemmExecutable(plan, mesh, impl="fused")(a_store, b_store))
+out["fused_eq_staged"] = bool((c_staged == c_fused).all())
+C = unshard_result(plan, c_fused, (256, 256), 16)
+out["fused_vs_dense_err"] = float(np.abs(C.to_dense() - multiply(A, A).to_dense()).max())
+
+T = plan.tasks.num_tasks
+valid = np.arange(plan.t_cap)[None, :] < plan.task_count[:, None]
+all_on = np.broadcast_to(valid, (plan.nparts, plan.t_cap))
+mf = MaskedFusedSpgemmExecutable(plan, mesh, impl="fused", prune_exchange=True)
+mf_off = MaskedFusedSpgemmExecutable(plan, mesh, impl="fused", prune_exchange=False)
+out["masked_allon_eq_fused"] = bool(
+    (np.asarray(mf(a_store, b_store, all_on)) == c_fused).all())
+
+keep_task = rng.random(T) < 0.4
+task_on = keep_task[plan.task_gidx] & valid
+c_ms = np.asarray(MaskedSpgemmExecutable(plan, mesh, impl="ref")(a_store, b_store, task_on))
+c_mfp = np.asarray(mf(a_store, b_store, task_on))
+c_mfn = np.asarray(mf_off(a_store, b_store, task_on))
+out["pruned_eq_staged"] = bool((c_ms == c_mfp).all())
+out["pruned_eq_unpruned"] = bool((c_mfp == c_mfn).all())
+out["pruned_stats"] = dict(mf.last_exchange)
+
+none_on = np.zeros_like(task_on)
+out["all_masked_zero"] = bool((np.asarray(mf(a_store, b_store, none_on)) == 0).all())
+out["all_masked_stats"] = dict(mf.last_exchange)
+
+# --- driver level: fused default pipeline, adaptive spamm, leaf batching ----
+def spd_banded(n, h, bs):
+    a = np.zeros((n, n), dtype=np.float32)
+    for i in range(n):
+        lo, hi = max(0, i-h), min(n, i+h+1)
+        a[i, lo:hi] = rng.standard_normal(hi-lo) * 0.1
+    a = (a + a.T) / 2 + np.eye(n, dtype=np.float32) * 2.0
+    return a
+
+n, bs = 128, 16
+s = spd_banded(n, 6, bs); h = spd_banded(n, 6, bs)
+S, H = BSMatrix.from_dense(s, bs), BSMatrix.from_dense(h, bs)
+d_ref, _ = dist_sqrt_inv_pipeline(S, H, n // 2, mesh, impl="ref", cache=PlanCache())
+d_fused, _ = dist_sqrt_inv_pipeline(S, H, n // 2, mesh, cache=PlanCache())
+out["pipeline_fused_eq_ref"] = bool(
+    (np.asarray(d_ref.to_dense()) == np.asarray(d_fused.to_dense())).all())
+
+d_b, _ = dist_sqrt_inv_pipeline(S, H, n // 2, mesh, precision=BF16, cache=PlanCache())
+out["pipeline_bf16_diff"] = float(np.abs(
+    np.asarray(d_ref.to_dense()) - np.asarray(d_b.to_dense())).max())
+
+dA = scatter(S, mesh)
+c_exact = dist_multiply(dA, dA, PlanCache())
+c_ad, bound = dist_spamm(dA, dA, 1e-2, PlanCache(), impl="fused",
+                         precision=Precision("adaptive"), method="delta")
+err = float(np.linalg.norm(
+    np.asarray(c_exact.gather().to_dense()) - np.asarray(c_ad.gather().to_dense())))
+out["adaptive_err_le_bound"] = [err, float(bound)]
+
+bd = np.zeros((n, n), dtype=np.float32)
+for k in range(0, n, 32):
+    bd[k:k+32, k:k+32] = spd_banded(32, 16, bs)
+BD = BSMatrix.from_dense(bd, bs)
+dbd = scatter(BD, mesh)
+zb = np.asarray(dist_inv_chol(dbd, PlanCache(), leaf_blocks=2).gather().to_dense())
+zl = np.asarray(dist_inv_chol(dbd, PlanCache(), leaf_blocks=2,
+                              batch_leaves=False).gather().to_dense())
+zh = np.asarray(inv_chol(BD, leaf_blocks=2).to_dense())
+out["leafbatch_eq_loop"] = bool((zb == zl).all())
+out["leafbatch_vs_host_maxdiff"] = float(np.abs(zb - zh).max())
+
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def fused_dist_results():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _DIST_SCRIPT],
+        env=env, capture_output=True, text=True, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][0]
+    return json.loads(line[len("RESULT ") :])
+
+
+def test_dist_fused_bit_identical_to_staged(fused_dist_results):
+    r = fused_dist_results
+    assert r["fused_eq_staged"]
+    assert r["fused_vs_dense_err"] < 1e-3
+
+
+def test_dist_exchange_pruning(fused_dist_results):
+    r = fused_dist_results
+    assert r["masked_allon_eq_fused"]
+    assert r["pruned_eq_staged"]
+    assert r["pruned_eq_unpruned"]
+    st = r["pruned_stats"]
+    assert 0 < st["kept_blocks"] < st["send_blocks"]
+    am = r["all_masked_stats"]
+    assert r["all_masked_zero"]
+    assert am["kept_blocks"] == 0 and am["dropped_rounds"] > 0
+
+
+def test_dist_pipeline_fused_default_bit_identical(fused_dist_results):
+    assert fused_dist_results["pipeline_fused_eq_ref"]
+
+
+def test_dist_pipeline_bf16_close(fused_dist_results):
+    d = fused_dist_results["pipeline_bf16_diff"]
+    assert 0 <= d < 0.5, d
+
+
+def test_dist_adaptive_error_within_bound(fused_dist_results):
+    err, bound = fused_dist_results["adaptive_err_le_bound"]
+    assert err <= bound + 1e-12, (err, bound)
+
+
+def test_dist_leaf_batching_bit_identical(fused_dist_results):
+    r = fused_dist_results
+    assert r["leafbatch_eq_loop"]
+    assert r["leafbatch_vs_host_maxdiff"] == 0.0
