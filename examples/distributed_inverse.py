@@ -46,7 +46,9 @@ H = BSMatrix.from_dense((hm + hm.T) / 2 + np.diag(np.linspace(-1, 1, N)).astype(
 print(f"S: n={N} bs={BS} nnzb={S.nnzb}  H: nnzb={H.nnzb}  mesh={P}")
 
 mesh = make_worker_mesh(P)
-cache = PlanCache()
+# verify="always" re-proves every plan on hits too — the CI smoke run
+# doubles as the static verifier's end-to-end exercise on real plans
+cache = PlanCache(verify="always")
 D, stats = dist_sqrt_inv_pipeline(
     S, H, NOCC, mesh, tol=TOL, idem_tol=IDEM_TOL,
     trunc_tau=TRUNC_TAU, spamm_tau=SPAMM_TAU, cache=cache,
@@ -66,6 +68,9 @@ print("refinement tail: "
 c = stats.cache
 print(f"plan cache:      {c['hits']} hits / {c['misses']} misses "
       f"(hit rate {c['hit_rate']:.2f})")
+print(f"static verifier: {c['plans_verified']} plans proved, "
+      f"{c['verify_violations']} violations in {c['verify_s']*1e3:.1f} ms")
+assert c["plans_verified"] > 0 and c["verify_violations"] == 0
 
 # cross-check against the host pipeline
 z, _ = localized_inverse_factorization(S, tol=TOL, trunc_tau=TRUNC_TAU, impl="ref")

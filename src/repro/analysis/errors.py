@@ -1,0 +1,48 @@
+"""Typed verification errors — shared by the planner and the static verifier.
+
+These are pure dataclasses with no jax/numpy imports so that low layers
+(``repro.core.schedule``) can raise :class:`PlanError` without creating an
+import cycle with the verifier (which imports the planner).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["Violation", "PlanError"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One verified-false invariant, with enough provenance to debug it.
+
+    ``check`` is a stable kebab-case id (``send-conflict`` /
+    ``src-off-oob`` / ``round-permutation`` / ``use-before-receive`` /
+    ``c-slot-race`` / ``c-slot-order`` / ``accumulation-order`` /
+    ``owner-fingerprint`` / ``owner-map`` / ``mask-redirect`` /
+    ``capacity-mismatch`` / ``exchange-starvation`` / ``task-gidx`` /
+    ``operand-mismatch`` / ``send-oob`` / ``gather-gap`` / ``norm-scatter``);
+    ``provenance`` carries the task/round/device coordinates of the failure.
+    """
+
+    check: str
+    message: str
+    provenance: dict = dataclasses.field(default_factory=dict)
+
+    def __str__(self) -> str:  # pragma: no cover - repr convenience
+        where = ", ".join(f"{k}={v}" for k, v in self.provenance.items())
+        return f"[{self.check}] {self.message}" + (f" ({where})" if where else "")
+
+
+class PlanError(RuntimeError):
+    """A plan (or pinned plan input) violates a scheduling invariant.
+
+    Raised by :func:`repro.core.schedule.make_spgemm_plan` for malformed
+    inputs and by the plan-cache admission hook when
+    :func:`repro.analysis.verify.verify_value` reports violations.  Unlike
+    the bare ``assert`` guards it replaces, this survives ``python -O``.
+    """
+
+    def __init__(self, message: str, violations: tuple | list = ()):
+        super().__init__(message)
+        self.violations = tuple(violations)

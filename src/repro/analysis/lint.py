@@ -1,0 +1,206 @@
+"""Repo-custom lint — runtime idioms that keep the resident path honest.
+
+Pure-AST (no imports of the linted modules), three rules:
+
+* ``perf-counter`` — ``time.perf_counter`` belongs to ``obs/timing.py``
+  alone; everything else routes through :func:`repro.obs.timing.wall_clock`
+  / :class:`repro.obs.timing.Stopwatch` / :class:`timed_into` so timing
+  accounting stays uniform (and traceable) across the runtime.
+* ``host-sync`` — executable program builders (``_build_program`` methods,
+  ``_mapped*`` shard_map bodies) must stay device-pure: no ``np.asarray``,
+  ``.block_until_ready()`` or ``jax.device_get`` host syncs inside — one
+  stray sync serializes every round of a resident iteration.
+* ``plan-key-fields`` — multiply-family plan-cache keys (tuples tagged
+  ``"spgemm"`` / ``"spamm"`` / ``"spamm-delta"`` that fingerprint a mesh)
+  must carry both operand dtypes and the precision policy key; a key
+  missing them silently reuses a plan compiled for other numerics.
+
+Findings are waived by ``<relpath>::<rule>`` lines in a checked-in baseline
+file (``lint_baseline.txt`` next to this module) — the escape hatch for the
+one legitimate exception (``obs/tracer.py`` defaults its clock to
+``time.perf_counter`` because ``obs/timing`` imports the tracer, not the
+other way around).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+
+__all__ = ["Finding", "lint_file", "lint_paths", "load_baseline",
+           "DEFAULT_BASELINE", "default_root"]
+
+# files allowed to touch time.perf_counter directly
+_CLOCK_HOME = ("obs/timing.py",)
+# plan-key kinds that must fingerprint numerics (dtype + precision)
+_PLAN_KEY_KINDS = {"spgemm", "spamm", "spamm-delta"}
+# host-sync is checked inside functions with these names
+_PROGRAM_FUNCS = ("_build_program", "_mapped")
+
+DEFAULT_BASELINE = Path(__file__).with_name("lint_baseline.txt")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    path: str  # posix path relative to the lint root
+    line: int
+    rule: str
+    message: str
+
+    @property
+    def key(self) -> str:
+        """Baseline waiver key — stable across line-number churn."""
+        return f"{self.path}::{self.rule}"
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+def _is_perf_counter(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Attribute) and node.attr == "perf_counter") or (
+        isinstance(node, ast.Name) and node.id == "perf_counter"
+    )
+
+
+def _check_perf_counter(tree, relpath, out):
+    if relpath.endswith(_CLOCK_HOME):
+        return
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module == "time":
+            for alias in node.names:
+                if alias.name == "perf_counter":
+                    out.append(Finding(
+                        relpath, node.lineno, "perf-counter",
+                        "import time.perf_counter outside obs/timing.py — "
+                        "use repro.obs.timing.wall_clock/Stopwatch",
+                    ))
+        elif isinstance(node, ast.Attribute) and node.attr == "perf_counter":
+            out.append(Finding(
+                relpath, node.lineno, "perf-counter",
+                "time.perf_counter outside obs/timing.py — use "
+                "repro.obs.timing.wall_clock/Stopwatch",
+            ))
+
+
+def _check_host_sync(tree, relpath, out):
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if not (fn.name == _PROGRAM_FUNCS[0]
+                or fn.name.startswith(_PROGRAM_FUNCS[1])):
+            continue
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            sync = None
+            if isinstance(f, ast.Attribute):
+                if f.attr == "block_until_ready":
+                    sync = ".block_until_ready()"
+                elif f.attr == "asarray" and isinstance(f.value, ast.Name) \
+                        and f.value.id in ("np", "numpy"):
+                    sync = "np.asarray()"
+                elif f.attr == "device_get" and isinstance(f.value, ast.Name) \
+                        and f.value.id == "jax":
+                    sync = "jax.device_get()"
+            if sync:
+                out.append(Finding(
+                    relpath, node.lineno, "host-sync",
+                    f"{sync} inside {fn.name}() — executable programs must "
+                    f"stay device-pure (host syncs serialize the rounds)",
+                ))
+
+
+def _tuple_has(node: ast.Tuple, pred) -> int:
+    return sum(1 for elt in node.elts for sub in ast.walk(elt) if pred(sub))
+
+
+def _check_plan_keys(tree, relpath, out):
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Tuple) and node.elts):
+            continue
+        head = node.elts[0]
+        if not (isinstance(head, ast.Constant)
+                and head.value in _PLAN_KEY_KINDS):
+            continue
+        # only distributed plan keys (they fingerprint the mesh); the
+        # single-host symbolic cache keys share the tag but carry no mesh
+        fingerprints_mesh = _tuple_has(node, lambda s: isinstance(s, ast.Call)
+                                       and isinstance(s.func, ast.Name)
+                                       and s.func.id == "mesh_key")
+        if not fingerprints_mesh:
+            continue
+        dtypes = _tuple_has(
+            node,
+            lambda s: isinstance(s, ast.Call)
+            and isinstance(s.func, ast.Name) and s.func.id == "str"
+            and len(s.args) == 1 and isinstance(s.args[0], ast.Attribute)
+            and s.args[0].attr == "dtype",
+        )
+        precision = _tuple_has(node, lambda s: isinstance(s, ast.Call)
+                               and isinstance(s.func, ast.Attribute)
+                               and s.func.attr == "key")
+        if dtypes < 2 or precision < 1:
+            out.append(Finding(
+                relpath, node.lineno, "plan-key-fields",
+                f"{head.value!r} plan key carries {dtypes} operand dtype "
+                f"field(s) and {precision} precision key(s) — both operand "
+                f"dtypes and precision.key() are mandatory (a stale key "
+                f"reuses a plan compiled for other numerics)",
+            ))
+
+
+_RULES = (_check_perf_counter, _check_host_sync, _check_plan_keys)
+
+
+def default_root() -> Path:
+    """The runtime tree the lint governs: ``src/repro``."""
+    return Path(__file__).resolve().parents[1]
+
+
+def lint_file(path: Path, root: Path) -> list[Finding]:
+    relpath = path.resolve().relative_to(root.resolve()).as_posix()
+    try:
+        tree = ast.parse(path.read_text(), filename=str(path))
+    except SyntaxError as exc:  # pragma: no cover - defensive
+        return [Finding(relpath, exc.lineno or 0, "syntax", str(exc))]
+    out: list[Finding] = []
+    for rule in _RULES:
+        rule(tree, relpath, out)
+    return out
+
+
+def load_baseline(path: Path | None = None) -> set[str]:
+    path = DEFAULT_BASELINE if path is None else Path(path)
+    if not path.exists():
+        return set()
+    keys = set()
+    for line in path.read_text().splitlines():
+        line = line.strip()
+        if line and not line.startswith("#"):
+            keys.add(line)
+    return keys
+
+
+def lint_paths(
+    roots: list[Path] | None = None,
+    *,
+    baseline: set[str] | None = None,
+) -> tuple[list[Finding], list[Finding]]:
+    """Lint every ``.py`` under ``roots`` (default: ``src/repro``).
+
+    Returns ``(findings, waived)`` — findings whose key appears in the
+    baseline move to the waived list.
+    """
+    roots = [default_root()] if roots is None else [Path(r) for r in roots]
+    baseline = load_baseline() if baseline is None else baseline
+    findings: list[Finding] = []
+    waived: list[Finding] = []
+    for root in roots:
+        files = [root] if root.is_file() else sorted(root.rglob("*.py"))
+        base = root.parent if root.is_file() else root
+        for f in files:
+            for finding in lint_file(f, base):
+                (waived if finding.key in baseline else findings).append(finding)
+    return findings, waived

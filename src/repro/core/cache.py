@@ -33,9 +33,19 @@ class SymbolicCache:
     path, a (plan, executable) pair on the distributed path.
     """
 
-    def __init__(self, max_entries: int = 128, tracer=None):
+    #: verification policies: "off" never verifies; "cached-once" verifies
+    #: each value once at admission (miss path) so the zero-miss steady
+    #: state pays nothing; "always" re-verifies on every hit as well
+    VERIFY_POLICIES = ("off", "cached-once", "always")
+
+    def __init__(self, max_entries: int = 128, tracer=None,
+                 verify: str = "cached-once"):
+        if verify not in self.VERIFY_POLICIES:
+            raise ValueError(
+                f"verify={verify!r} not in {self.VERIFY_POLICIES}")
         self.max_entries = max_entries
         self.tracer = tracer
+        self.verify = verify
         self._entries: collections.OrderedDict[Hashable, Any] = (
             collections.OrderedDict()
         )
@@ -56,6 +66,12 @@ class SymbolicCache:
         # descent, hierarchical truncation selection — value-dependent work)
         self.build_s = 0.0
         self.symbolic_s = 0.0
+        # static-verification accounting (repro.analysis): values verified,
+        # violations raised, seconds spent — all zero in a zero-miss replay
+        # under the default "cached-once" policy
+        self.plans_verified = 0
+        self.verify_violations = 0
+        self.verify_s = 0.0
 
     # the tracer rides on the cache: the cache is already threaded through
     # every resident collective and driver, so instrumented call sites read
@@ -77,7 +93,10 @@ class SymbolicCache:
             if tr.enabled:
                 tr.counter("plan_hits").add()
             self._entries.move_to_end(key)
-            return self._entries[key]
+            value = self._entries[key]
+            if self.verify == "always":
+                self._verify_value(key, value)
+            return value
         self.misses += 1
         self._by_kind[(kind, "miss")] += 1
         if tr.enabled:
@@ -85,10 +104,46 @@ class SymbolicCache:
         with timed_into(self, "build_s", tr, "plan_build", cat="plan",
                         kind=str(kind)):
             value = builder()
+        if self.verify != "off":
+            self._verify_value(key, value)  # raises before a bad plan lands
         self._entries[key] = value
         while len(self._entries) > self.max_entries:
             self._entries.popitem(last=False)
         return value
+
+    def _verify_value(self, key: Hashable, value: Any) -> None:
+        """Static-verification hook at cache admission (repro.analysis).
+
+        Unverifiable values (symbolic task lists, scalars) pass through;
+        plans and relayout/norm-table executables are re-proved and a
+        non-empty violation report raises :class:`PlanError` — surfaced
+        through the tracer as structured ``plan_verify_violation`` instants
+        plus ``plans_verified`` / ``verify_violations`` counters.
+        """
+        from ..analysis.verify import PlanError, verify_value
+
+        tr = self.tracer
+        kind = key[0] if isinstance(key, tuple) else "?"
+        with timed_into(self, "verify_s", tr, "plan_verify", cat="analysis",
+                        kind=str(kind)):
+            report = verify_value(key, value)
+        if report is None:
+            return
+        self.plans_verified += 1
+        if tr.enabled:
+            tr.counter("plans_verified").add()
+        if report:
+            self.verify_violations += len(report)
+            if tr.enabled:
+                tr.counter("verify_violations").add(len(report))
+                for viol in report[:32]:
+                    tr.instant("plan_verify_violation", cat="analysis",
+                               check=viol.check, message=viol.message,
+                               **viol.provenance)
+            raise PlanError(
+                f"{kind} plan failed static verification with "
+                f"{len(report)} violation(s); first: [{report[0].check}] "
+                f"{report[0].message}", report)
 
     def peek(self, key: Hashable, default: Any = None) -> Any:
         """Read an entry without touching counters or LRU order."""
@@ -128,5 +183,9 @@ class SymbolicCache:
             hit_rate=self.hits / total if total else 0.0,
             build_s=self.build_s,
             symbolic_s=self.symbolic_s,
+            verify=self.verify,
+            verify_s=self.verify_s,
+            plans_verified=self.plans_verified,
+            verify_violations=self.verify_violations,
             by_kind={f"{k}/{o}": v for (k, o), v in sorted(self._by_kind.items())},
         )

@@ -286,7 +286,12 @@ class SpgemmExecutable:
     def __init__(
         self, plan: SpgemmPlan, mesh: Mesh, *, impl: str = "ref", **body_kwargs
     ):
-        assert mesh.devices.size == plan.nparts, (mesh.devices.size, plan.nparts)
+        if mesh.devices.size != plan.nparts:
+            from ..analysis.errors import PlanError
+
+            raise PlanError(
+                f"plan partitions over {plan.nparts} workers but the mesh "
+                f"has {mesh.devices.size} devices")
         self.plan = plan
         self.mesh = mesh
         self.impl = impl

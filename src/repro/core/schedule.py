@@ -28,6 +28,7 @@ import dataclasses
 
 import numpy as np
 
+from ..analysis.errors import PlanError
 from .quadtree import build_quadtree_index, morton_encode, structure_fingerprint
 from .spgemm import Tasks, spgemm_symbolic
 
@@ -336,7 +337,18 @@ def make_spgemm_plan(
         raise ValueError(placement)
     a_owner = np.asarray(a_owner, dtype=np.int32)
     b_owner = np.asarray(b_owner, dtype=np.int32)
-    assert a_owner.shape == (na,) and b_owner.shape == (nb,)
+    # typed (not assert) so `python -O` keeps the guard: a pinned owner map
+    # of the wrong shape or range would silently scramble every store slot
+    if a_owner.shape != (na,) or b_owner.shape != (nb,):
+        raise PlanError(
+            f"pinned owner maps do not match the operand structures: "
+            f"a_owner {a_owner.shape} for {na} A blocks, "
+            f"b_owner {b_owner.shape} for {nb} B blocks")
+    for name, owner, n in (("a", a_owner, na), ("b", b_owner, nb)):
+        if n and (int(owner.min()) < 0 or int(owner.max()) >= nparts):
+            raise PlanError(
+                f"{name}_owner assigns blocks outside the mesh of {nparts} "
+                f"(owner range [{int(owner.min())}, {int(owner.max())}])")
 
     a_slot, a_stores = _owner_slots(a_owner, nparts)
     b_slot, b_stores = _owner_slots(b_owner, nparts)

@@ -37,4 +37,13 @@ class PlanCache(SymbolicCache):
     operand owner maps, so a dynamic re-layout
     (:func:`repro.dist.collectives.dist_repartition`) re-keys downstream
     plans automatically and a stabilized layout returns to all-hit.
+
+    Admission runs the static verifier (:mod:`repro.analysis`) per the
+    ``verify=`` policy inherited from :class:`SymbolicCache`: the default
+    ``"cached-once"`` re-proves every plan / relayout / norm-table value
+    once, on the miss path — a zero-miss replay (the stabilized SCF steady
+    state) never verifies and pays nothing — while ``"always"`` re-verifies
+    on every hit and ``"off"`` disables the hook.  Violations raise
+    :class:`repro.analysis.PlanError` before the bad plan is cached and
+    surface through the tracer as ``plan_verify_violation`` instants.
     """

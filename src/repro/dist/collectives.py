@@ -489,6 +489,20 @@ def _relayout_gather_plan(x: DistBSMatrix, out_owner: np.ndarray, src: np.ndarra
     return out_slot, out_cap, offsets, send, send_cnt, gidx, gval
 
 
+def _relayout_verify_payload(x, src, out_owner, out_slot, out_cap, offsets,
+                             send, send_cnt, gidx, gval, label):
+    """Host-side copy of the relayout plan arrays, retained on executables
+    so :func:`repro.analysis.verify.verify_value` can re-prove the gather
+    at plan-cache admission (the device arrays are unverifiable post-put)."""
+    return dict(
+        kind="relayout", label=label, nparts=x.nparts,
+        x_owner=np.asarray(x.owner), x_slot=np.asarray(x.slot), x_cap=x.cap,
+        src=np.asarray(src), out_owner=np.asarray(out_owner),
+        out_slot=np.asarray(out_slot), out_cap=out_cap, offsets=offsets,
+        send=send, send_cnt=send_cnt, gidx=gidx, gval=gval,
+    )
+
+
 class TransposeExecutable:
     """Planned resident transpose bound to a mesh.
 
@@ -507,6 +521,9 @@ class TransposeExecutable:
         out_slot, out_cap, offsets, send, send_cnt, gidx, gval = (
             _relayout_gather_plan(a, out_owner, src)
         )
+        self._verify_plan = _relayout_verify_payload(
+            a, src, out_owner, out_slot, out_cap, offsets, send, send_cnt,
+            gidx, gval, "transpose")
         # per-source true send counts (stats/trace attribution)
         self.sent_blocks = np.zeros(nparts, dtype=np.int64)
         for d in offsets:
@@ -609,6 +626,9 @@ class RepartitionExecutable:
         new_slot, new_cap, offsets, send, send_cnt, gidx, gval = (
             _relayout_gather_plan(x, new_owner, src)
         )
+        self._verify_plan = _relayout_verify_payload(
+            x, src, new_owner, new_slot, new_cap, offsets, send, send_cnt,
+            gidx, gval, "repartition")
 
         self.new_owner = new_owner
         self.new_slot = new_slot

@@ -163,6 +163,10 @@ class NormTableExecutable:
     def __init__(self, x: DistBSMatrix):
         gpos = np.full((x.nparts, x.cap), x.nnzb, dtype=np.int32)  # trash
         gpos[x.owner, x.slot] = np.arange(x.nnzb, dtype=np.int32)
+        # host copy retained for repro.analysis plan-cache verification
+        self._verify_plan = dict(
+            kind="norm-table", gpos=gpos, owner=np.asarray(x.owner),
+            slot=np.asarray(x.slot), nnzb=x.nnzb, nparts=x.nparts, cap=x.cap)
         self._gpos = jax.device_put(
             jnp.asarray(gpos), NamedSharding(x.mesh, P(AXIS))
         )

@@ -17,7 +17,8 @@ from __future__ import annotations
 import json
 import os
 import tempfile
-import time
+
+from ..obs.timing import Stopwatch
 
 __all__ = [
     "time_call",
@@ -41,10 +42,10 @@ _memo: dict[str, tuple[float, dict]] = {}
 def time_call(fn, reps: int = 5) -> float:
     """Mean wall seconds per call after one warmup (compile) call."""
     fn()
-    t0 = time.perf_counter()
+    sw = Stopwatch()
     for _ in range(reps):
         fn()
-    return (time.perf_counter() - t0) / max(reps, 1)
+    return sw.elapsed() / max(reps, 1)
 
 
 def _pick_tile(n: int, cap: int = 512) -> int:

@@ -39,7 +39,29 @@ from .compat import tpu_compiler_params
 __all__ = [
     "fused_block_spmm_kernel_call",
     "fused_block_spmm_ref",
+    "first_accumulation_hazard",
 ]
+
+
+def first_accumulation_hazard(c_idx) -> int | None:
+    """First task index violating the kernel's accumulation contract, else
+    ``None``.
+
+    The grid zeroes the accumulator at ``(k == 0) & (t == 0 | c[t] !=
+    c[t-1])``: each output row must therefore be visited by one contiguous
+    ascending run of tasks.  A ``c_idx`` that revisits an earlier row
+    re-zeroes it — a write race between grid segments that silently drops
+    the first chain's contributions.  Host-side (numpy) so the static
+    verifier (:mod:`repro.analysis.verify`) and tests share one definition
+    of the contract with the kernel that relies on it.
+    """
+    import numpy as np
+
+    c = np.asarray(c_idx).reshape(-1)
+    if c.size < 2:
+        return None
+    dec = np.nonzero(np.diff(c) < 0)[0]
+    return int(dec[0]) + 1 if dec.size else None
 
 
 def _round_bf16(x):

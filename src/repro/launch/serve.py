@@ -7,7 +7,6 @@
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +15,7 @@ import numpy as np
 from repro.configs import get_config, reduced_config
 from repro.models import model as model_mod
 from repro.models import transformer
+from repro.obs.timing import Stopwatch
 
 
 def generate(cfg, params, prompts: np.ndarray, gen: int, *, dtype=jnp.float32):
@@ -53,9 +53,9 @@ def main():
     rng = np.random.default_rng(args.seed)
     prompts = rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)).astype(np.int32)
 
-    t0 = time.perf_counter()
+    sw = Stopwatch()
     seqs = generate(cfg, params, prompts, args.gen)
-    dt = time.perf_counter() - t0
+    dt = sw.elapsed()
     total_tokens = args.batch * (args.prompt_len + args.gen)
     print(f"arch={cfg.name} generated {seqs.shape} in {dt:.2f}s "
           f"({total_tokens / dt:.1f} tok/s incl. compile)")

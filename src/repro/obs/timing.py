@@ -23,7 +23,45 @@ from time import perf_counter
 
 from .tracer import NULL_TRACER, tracer_of
 
-__all__ = ["timed_into", "IterationScope", "SHARED_ITER_KEYS"]
+__all__ = ["timed_into", "IterationScope", "SHARED_ITER_KEYS",
+           "wall_clock", "Stopwatch"]
+
+
+def wall_clock() -> float:
+    """The runtime's one wall clock (monotonic seconds).
+
+    Every module outside this one measures time through here (or through
+    :class:`Stopwatch` / :class:`timed_into`) — enforced by the
+    ``perf-counter`` rule of :mod:`repro.analysis.lint` — so all timing
+    accounts share one clock source and stay comparable.
+    """
+    return perf_counter()
+
+
+class Stopwatch:
+    """Minimal elapsed-seconds helper over :func:`wall_clock`.
+
+    ``elapsed()`` reads without resetting; ``lap()`` reads and restarts —
+    the two idioms the training loop, the autotuner and the serving CLI
+    previously open-coded with raw ``perf_counter`` pairs.
+    """
+
+    __slots__ = ("_t0",)
+
+    def __init__(self):
+        self._t0 = perf_counter()
+
+    def restart(self) -> None:
+        self._t0 = perf_counter()
+
+    def elapsed(self) -> float:
+        return perf_counter() - self._t0
+
+    def lap(self) -> float:
+        now = perf_counter()
+        dt = now - self._t0
+        self._t0 = now
+        return dt
 
 
 class timed_into:

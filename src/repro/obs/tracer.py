@@ -18,9 +18,15 @@ service for the XLA-mesh reproduction:
 * **Counters and gauges** are registered once on the tracer's metrics
   registry (``plan_hits`` / ``plan_misses`` / ``tasks_executed`` /
   ``recv_bytes`` / ``send_bytes`` / ``migrated_bytes`` /
-  ``norm_fetch_bytes``) and emitted uniformly: live as Chrome counter
-  events, and at run end as the flat dict (:func:`run_metrics`) the driver
-  stats dataclasses wrap.
+  ``norm_fetch_bytes``, plus ``plans_verified`` / ``verify_violations``
+  from the static verifier at plan-cache admission) and emitted uniformly:
+  live as Chrome counter events, and at run end as the flat dict
+  (:func:`run_metrics`) the driver stats dataclasses wrap.
+* **Structured analysis events**: the plan verifier
+  (:mod:`repro.analysis`) reports each violation as a
+  ``plan_verify_violation`` instant in category ``"analysis"`` carrying
+  the check id and task/round provenance — query them with
+  :meth:`Tracer.instants_of`.
 * :data:`NULL_TRACER` is the disabled tracer every un-instrumented call
   path sees: all methods are allocation-free no-ops, it is falsy, and it
   records nothing — tracing off costs a few attribute lookups per
@@ -186,6 +192,12 @@ class Tracer:
         parent = self._stack[-1] if self._stack else -1
         self.instants.append((name, cat, self._clock(), parent, args))
 
+    def instants_of(self, name: str, cat: str | None = None) -> list[dict]:
+        """The recorded args dicts of matching instants, in record order
+        (e.g. the verifier's ``plan_verify_violation`` analysis events)."""
+        return [args for (n, c, _, _, args) in self.instants
+                if n == name and (cat is None or c == cat)]
+
     # -- metrics registry ----------------------------------------------------
     def counter(self, name: str) -> Counter:
         c = self._counters.get(name)
@@ -273,6 +285,9 @@ class NullTracer:
 
     def instant(self, name: str, cat: str = "", **args: Any) -> None:
         pass
+
+    def instants_of(self, name: str, cat: str | None = None) -> list:
+        return []
 
     def counter(self, name: str) -> _NullMetric:
         return _NULL_METRIC

@@ -17,12 +17,12 @@ At 1000+ nodes, failures are the steady state.  Mechanisms here:
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable
 
 import jax
 
 from repro.checkpoint import CheckpointManager
+from repro.obs.timing import Stopwatch
 
 __all__ = ["run_with_retries", "StragglerDetector", "TrainLoop"]
 
@@ -95,7 +95,7 @@ class TrainLoop:
         metrics_hist = []
         for step in range(start_step, start_step + num_steps):
             batch = self.pipeline.global_batch(step)
-            t0 = time.perf_counter()
+            sw = Stopwatch()
 
             def attempt():
                 return self.train_step(state, batch)
@@ -108,7 +108,7 @@ class TrainLoop:
                 attempt, max_retries=self.max_retries, on_failure=on_failure
             )
             jax.block_until_ready(metrics["loss"])
-            dt = time.perf_counter() - t0
+            dt = sw.elapsed()
             if self.straggler.observe(dt):
                 log(f"[straggler] step {step} took {dt:.3f}s (ewma {self.straggler.ewma:.3f}s)")
             metrics_hist.append({k: float(v) for k, v in metrics.items()})
