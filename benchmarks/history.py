@@ -1,0 +1,147 @@
+"""Append benchmark results to the commit-stamped trajectory store.
+
+Extracts one-schema history entries (see :mod:`repro.obs.regress`) from the
+``BENCH_*.json`` files the benchmarks write and appends them to
+``BENCH_HISTORY.jsonl``::
+
+    PYTHONPATH=src python benchmarks/history.py BENCH_trace.json
+    PYTHONPATH=src python benchmarks/history.py BENCH_*.json --history BENCH_HISTORY.jsonl
+    PYTHONPATH=src python -m repro.obs.regress --check   # then gate
+
+Each BENCH file maps to its bench kind by content: trace (overhead gate),
+balance (one entry per structure), kernel (fused leaf engine).  Boolean
+gates (bit identity, precision bounds) become 0/1 metrics so the regression
+gate treats a flipped gate as an exact-tolerance failure.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.obs.regress import HISTORY_FILENAME, append_history  # noqa: E402
+
+__all__ = ["git_commit", "make_entry", "entries_from_bench_json", "main"]
+
+
+def git_commit(root: str | None = None) -> str:
+    """Short hash of HEAD, or "unknown" outside a git checkout."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=root or os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10)
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except (OSError, subprocess.TimeoutExpired):
+        pass
+    return "unknown"
+
+
+def make_entry(bench: str, metrics: dict, *, config: str = "default",
+               meta: dict | None = None, ts: float | None = None,
+               commit: str | None = None) -> dict:
+    return dict(
+        ts=float(ts if ts is not None else time.time()),
+        commit=commit if commit is not None else git_commit(),
+        bench=str(bench),
+        config=str(config),
+        metrics={k: float(v) for k, v in metrics.items()},
+        meta=dict(meta or {}),
+    )
+
+
+def _config(meta: dict, base: str = "") -> str:
+    mode = "smoke" if meta.get("smoke") else "full"
+    return f"{base}-{mode}" if base else mode
+
+
+def entries_from_bench_json(path: str, *, ts: float | None = None,
+                            commit: str | None = None) -> list[dict]:
+    """History entries for one written BENCH file (kind sniffed by schema)."""
+    with open(path) as fh:
+        data = json.load(fh)
+    meta = data.get("meta", {})
+    kw = dict(ts=ts, commit=commit)
+
+    if "overhead" in data:  # BENCH_trace.json
+        ov = data["overhead"]
+        metrics = dict(
+            overhead_pct=ov["overhead_pct"],
+            overhead_sync_pct=ov["overhead_sync_pct"],
+            min_untraced_s=ov["min_untraced_s"],
+            min_traced_s=ov["min_traced_s"],
+            bit_identical=1.0 if ov["bit_identical"] else 0.0,
+        )
+        entry_meta = dict(n=meta.get("n"), workers=meta.get("workers"),
+                          source=os.path.basename(path))
+        if "observatory" in meta:
+            entry_meta["observatory"] = bool(meta["observatory"])
+        return [make_entry("trace", metrics, config=_config(meta),
+                           meta=entry_meta, **kw)]
+
+    if "structures" in data:  # BENCH_balance.json
+        entries = []
+        for name, row in sorted(data["structures"].items()):
+            reb = row["rebalanced"]
+            metrics = dict(
+                peak_imbalance_reduction=row["peak_imbalance_reduction"],
+                bit_identical=1.0 if reb["bit_identical_to_static"] else 0.0,
+                imbalance_tail=reb["imbalance_tail"],
+                wall_s_per_iter=reb["wall_s_per_iter"],
+            )
+            entries.append(make_entry(
+                "balance", metrics, config=_config(meta, name),
+                meta=dict(n=meta.get("n"), workers=meta.get("workers"),
+                          source=os.path.basename(path)), **kw))
+        return entries
+
+    if "fused_vs_staged" in data:  # BENCH_kernel.json
+        fvs = data["fused_vs_staged"]
+        prec = data["precision"]
+        metrics = dict(
+            fused_speedup=fvs["speedup"],
+            bit_identical=1.0 if fvs["bit_identical"] else 0.0,
+            bf16_fro_err=prec["bf16"]["fro_err"],
+            within_bounds=1.0 if prec["within_bounds"] else 0.0,
+            autotune_roundtrip=1.0 if data["autotune"]["roundtrip_ok"] else 0.0,
+        )
+        return [make_entry("kernel", metrics, config=_config(meta),
+                           meta=dict(backend=meta.get("backend"),
+                                     bs=meta.get("bs"),
+                                     source=os.path.basename(path)), **kw)]
+
+    raise ValueError(f"{path}: unrecognized BENCH schema "
+                     f"(top-level keys {sorted(data)})")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="append BENCH_*.json results to the benchmark history")
+    ap.add_argument("bench_files", nargs="+", help="written BENCH_*.json files")
+    ap.add_argument("--history", default=HISTORY_FILENAME)
+    args = ap.parse_args(argv)
+
+    commit = git_commit()
+    ts = time.time()
+    total = 0
+    for path in args.bench_files:
+        for entry in entries_from_bench_json(path, ts=ts, commit=commit):
+            append_history(args.history, entry)
+            total += 1
+            print(f"history: + {entry['bench']}/{entry['config']} "
+                  f"@ {entry['commit']} "
+                  f"({len(entry['metrics'])} metrics) from {path}")
+    print(f"history: {total} entr{'y' if total == 1 else 'ies'} "
+          f"appended to {args.history}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,19 +4,39 @@ Runs ``dist_sqrt_inv_pipeline`` (S -> Z -> Z^T H Z -> SP2 -> Z D Z^T) on an
 8-worker CPU mesh from a deliberately skewed initial layout (so re-layout
 migrations appear in the trace), three ways:
 
-* warm-cache repeats with tracing **off** (the pre-PR fast path);
-* warm-cache repeats with tracing **on** (fresh ``Tracer(sync=False)`` per
-  repeat on the same plan cache) — the overhead gate: median traced vs
-  untraced wall time must stay under the acceptance cap, and the density
-  matrix must be **bit-identical** either way.  ``sync=False`` measures the
-  recording machinery itself; ``Tracer(sync=True)`` additionally blocks on
-  device values inside dispatch spans so span durations measure execution
-  rather than async dispatch — that serializes the host/device overlap the
-  untraced path enjoys, so its (larger) cost is reported separately as
-  ``overhead_sync_pct``, not gated;
+* warm-cache repeats with observability **off** (the pre-PR fast path);
+* warm-cache repeats with the **full observatory on** (fresh
+  ``Tracer(sync=False)`` + in-memory ``EventLog`` + ``HealthPolicy`` +
+  ``MemoryMeter`` per repeat on the same plan cache) — the overhead gate:
+  the arms run back-to-back within each round and the **median of the
+  per-round paired process-CPU overheads** must stay under the acceptance
+  cap, with the density matrix **bit-identical** either way.  CPU seconds
+  are the measurement basis because the observatory's cost is
+  deterministic extra host work, and that is what ``time.process_time``
+  isolates: on an oversubscribed host (CI containers run the 8-device
+  mesh on 1-2 cores) wall clock measures thread-timeslicing luck — A/A
+  calibration showed identical code swinging +/-20% wall run-to-run.
+  Pairing per round is the robust statistic on top of that: per-arm CPU
+  floors still drift a few percent between runs (frequency scaling,
+  cache pressure from whatever ran before), but both arms of one round
+  see the same machine state, so their ratio cancels the drift — and the
+  median ignores the occasional round where one arm eats a scheduler
+  hiccup.  Because neighbor noise comes in bursts, the bench is also
+  noise-aware: it computes a distribution-free 95% CI for the median
+  (sign-test order statistics) and keeps adding rounds — up to 4x the
+  base count — while the CI straddles the cap, so a loud minute extends
+  the measurement instead of deciding it.  The unpaired best-of-arm
+  floors (CPU and wall) are reported alongside
+  (``overhead_cpu_min_pct``, ``overhead_wall_pct``), unguarded.
+  ``sync=False`` measures the recording machinery itself;
+  ``Tracer(sync=True)`` additionally blocks on device values inside
+  dispatch spans so span durations measure execution rather than async
+  dispatch — that serializes the host/device overlap the bare path enjoys,
+  so its (larger) cost is reported separately as ``overhead_sync_pct``,
+  not gated;
 * one **cold** traced run (``sync=True``, execution-true spans) on a fresh
   cache, so the exported Chrome trace also carries the plan-build spans,
-  and the per-worker utilization report is derived from it.
+  and the per-worker utilization + peak-memory report is derived from it.
 
 Results go to ``BENCH_trace.json`` at the repo root (overhead %, span
 counts by category, counters, per-worker busy/idle fractions, timeline
@@ -29,7 +49,9 @@ Run:   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 
 from __future__ import annotations
 
+import gc
 import json
+import math
 import os
 import statistics
 import sys
@@ -50,6 +72,9 @@ from repro.dist import (  # noqa: E402
     scatter,
 )
 from repro.obs import (  # noqa: E402
+    EventLog,
+    HealthPolicy,
+    MemoryMeter,
     Tracer,
     utilization_table,
     worker_utilization,
@@ -85,18 +110,52 @@ def problem(n: int) -> tuple[BSMatrix, BSMatrix, int]:
     )
 
 
-def run_once(dS, dH, nocc, mesh, cache, tracer=None):
+def run_once(dS, dH, nocc, mesh, cache, tracer=None, log=None, health=None):
     d, st = dist_sqrt_inv_pipeline(
         dS, dH, nocc, mesh, tol=TOL, idem_tol=IDEM_TOL,
         trunc_tau=TRUNC_TAU, spamm_tau=SPAMM_TAU, cache=cache,
-        rebalance=RebalancePolicy(), tracer=tracer,
+        rebalance=RebalancePolicy(), tracer=tracer, log=log, health=health,
     )
     return np.asarray(d.to_dense()), st
 
 
+def _median_ci(xs: list, conf: float = 0.95) -> tuple:
+    """Distribution-free confidence interval for the median.
+
+    Order-statistic (sign-test inversion) bounds: the rank of the median
+    among n iid samples is Binomial(n, 1/2), so ``(x_(l), x_(n-1-l))``
+    covers the true median with >= ``conf`` regardless of the noise
+    distribution — no normality assumption, which per-round overhead
+    ratios on a shared host badly violate."""
+    s = sorted(xs)
+    n = len(s)
+    alpha = (1.0 - conf) / 2.0
+    cum, lo = 0.0, 0
+    for k in range(n + 1):
+        cum += math.comb(n, k) * 0.5 ** n
+        if cum > alpha:
+            lo = k
+            break
+    hi = n - 1 - lo
+    if lo > hi:  # too few samples for the requested confidence
+        return s[0], s[-1]
+    return s[lo], s[hi]
+
+
+def full_observatory(sync: bool) -> dict:
+    """One repeat's worth of the whole observability stack: tracer +
+    in-memory event log + health monitoring + device-memory accounting."""
+    return dict(
+        tracer=Tracer(sync=sync),
+        log=EventLog(path=None, level="info"),
+        health=HealthPolicy(),
+        memory=MemoryMeter(),
+    )
+
+
 def main() -> None:
     smoke = "--smoke" in sys.argv
-    n, repeats = (128, 2) if smoke else (256, 5)
+    n, repeats, sync_repeats = (128, 2, 2) if smoke else (256, 12, 4)
     assert jax.device_count() == P, f"need {P} devices, got {jax.device_count()}"
     mesh = make_worker_mesh(P)
 
@@ -108,49 +167,120 @@ def main() -> None:
           f"(skewed initial layout, rebalancing on)")
 
     # -- warm the plan cache + compile, untraced reference density ----------
-    cache = PlanCache()
+    # sized so the whole pipeline's plan vocabulary fits: at n=256 the run
+    # touches ~130+ distinct structures, and the default 128-entry LRU would
+    # silently evict — every "warm" repeat would replan from scratch and the
+    # overhead measurement would gate on replan noise, not on observability
+    cache = PlanCache(max_entries=4096)
     d_ref, _ = run_once(dS, dH, nocc, mesh, cache)
+    warm_misses = cache.misses
+    _, _ = run_once(dS, dH, nocc, mesh, cache)
+    replay_misses = cache.misses - warm_misses
+    print(f"plan cache: {warm_misses} builds, replay misses {replay_misses}")
+    assert replay_misses == 0, (
+        f"warm replay still missed {replay_misses} plans — grow max_entries")
 
-    # -- warm-cache medians: tracing off vs on ------------------------------
-    def timed_runs(tracer_factory):
-        walls = []
-        for _ in range(repeats):
-            cache.tracer = None
+    # -- warm-cache medians: observatory off vs on --------------------------
+    # the three arms are interleaved round-robin (direction alternating per
+    # round) and the gate takes the median of *per-round paired* overheads:
+    # on a shared-CPU container the run-to-run drift (thread-pool
+    # contention, frequency scaling) is larger than the observatory cost
+    # itself, so back-to-back pairing cancels it where sequential
+    # arm-at-a-time medians would gate on whichever arm drew the slow window
+    # GC hygiene (pyperf-style): settle the previous sample's garbage
+    # outside the timed window and keep the cyclic collector off inside it.
+    # A gen-2 pass scans the whole process (jax's tracing caches dominate)
+    # and lands in whichever arm's allocations tick the threshold over —
+    # the observatory allocates ~10x more objects per run, so without this
+    # it gets charged a whole-process scan the bare arm dodges by luck.
+    # Allocation and refcount-free cost (the observatory's real footprint)
+    # stays inside the measurement.
+    def one_run(obs_factory):
+        cache.tracer = None
+        cache.event_log = None
+        cache.memory_meter = None
+        kw = obs_factory() if obs_factory else {}
+        mm = kw.pop("memory", None)
+        if mm is not None:
+            mm.install(cache)
+        gc.collect()
+        gc.disable()
+        try:
+            c0 = time.process_time()
             t0 = time.perf_counter()
-            d, _ = run_once(dS, dH, nocc, mesh, cache,
-                            tracer=tracer_factory() if tracer_factory else None)
-            walls.append(time.perf_counter() - t0)
-            assert np.array_equal(d, d_ref), "repeat diverged from reference"
-        return walls
+            d, _ = run_once(dS, dH, nocc, mesh, cache, **kw)
+            wall = time.perf_counter() - t0
+            cpu = time.process_time() - c0
+        finally:
+            gc.enable()
+        assert np.array_equal(d, d_ref), "repeat diverged from reference"
+        return wall, cpu
 
-    off_s = timed_runs(None)
-    on_s = timed_runs(lambda: Tracer(sync=False))
-    sync_s = timed_runs(lambda: Tracer(sync=True))
-    med_off = statistics.median(off_s)
-    med_on = statistics.median(on_s)
-    med_sync = statistics.median(sync_s)
-    overhead_pct = (med_on - med_off) / med_off * 100.0
-    overhead_sync_pct = (med_sync - med_off) / med_off * 100.0
-    print(f"warm wall: untraced {med_off*1e3:.1f} ms  "
-          f"traced {med_on*1e3:.1f} ms  overhead {overhead_pct:+.2f}%  "
-          f"(sync spans {med_sync*1e3:.1f} ms, {overhead_sync_pct:+.2f}%)  "
-          f"bit-identical: True")
-    if not smoke:
-        assert overhead_pct < OVERHEAD_CAP_PCT, (
-            f"tracing overhead {overhead_pct:.2f}% exceeds "
-            f"{OVERHEAD_CAP_PCT}% cap")
+    # the gated bare/observatory arms sample every round (the paired
+    # median tightens with N); the sync arm rides the first few rounds only
+    arms = (None,
+            lambda: full_observatory(sync=False),
+            lambda: full_observatory(sync=True))
+    walls = ([], [], [])
+    max_rounds = repeats if smoke else 4 * repeats
+    rounds = 0
+    while True:
+        idxs = (0, 1, 2) if rounds < sync_repeats else (0, 1)
+        for i in (idxs if rounds % 2 == 0 else idxs[::-1]):
+            walls[i].append(one_run(arms[i]))
+        rounds += 1
+        if rounds < repeats:
+            continue
+        pcts = [(on - off) / off * 100.0
+                for (_, off), (_, on) in zip(walls[0], walls[1])]
+        ci_lo, ci_hi = _median_ci(pcts)
+        if (ci_hi < OVERHEAD_CAP_PCT or ci_lo >= OVERHEAD_CAP_PCT
+                or rounds >= max_rounds):
+            break
+    if rounds > repeats:
+        print(f"noisy host: paired-overhead 95% CI straddled the "
+              f"{OVERHEAD_CAP_PCT}% cap at n={repeats}, extended sampling "
+              f"to n={rounds}")
+    off_s, on_s, sync_s = ([w for w, _ in arm] for arm in walls)
+    off_c, on_c, sync_c = ([c for _, c in arm] for arm in walls)
+    min_off, min_on, min_sync = min(off_s), min(on_s), min(sync_s)
+    cmin_off, cmin_on, cmin_sync = min(off_c), min(on_c), min(sync_c)
+    # gated statistic: median over rounds of the within-round CPU overhead
+    # (both arms of a round see the same machine state, so the ratio
+    # cancels run-scale drift the unpaired floors cannot)
+    overhead_pct = statistics.median(pcts)
+    overhead_sync_pct = statistics.median(
+        (s - off) / off * 100.0 for off, s in zip(off_c, sync_c))
+    overhead_cpu_min_pct = (cmin_on - cmin_off) / cmin_off * 100.0
+    overhead_wall_pct = (min_on - min_off) / min_off * 100.0
+    print(f"warm cpu paired median of {rounds}: "
+          f"overhead {overhead_pct:+.2f}%  "
+          f"(95% CI [{ci_lo:+.2f}%, {ci_hi:+.2f}%];  sync spans "
+          f"{overhead_sync_pct:+.2f}%;  unpaired cpu floors bare "
+          f"{cmin_off*1e3:.1f} ms / observatory {cmin_on*1e3:.1f} ms, "
+          f"{overhead_cpu_min_pct:+.2f}%, unguarded)")
+    print(f"warm wall (best of {rounds}): bare {min_off*1e3:.1f} ms  "
+          f"observatory {min_on*1e3:.1f} ms  ({overhead_wall_pct:+.2f}%, "
+          f"unguarded)  bit-identical: True")
+    print("cpu samples bare: " + " ".join(f"{c:.3f}" for c in sorted(off_c)))
+    print("cpu samples obs:  " + " ".join(f"{c:.3f}" for c in sorted(on_c)))
 
-    # -- cold traced run -> exported trace + utilization report -------------
+    # -- cold observed run -> exported trace + utilization/memory report ----
     tracer = Tracer()
-    d_cold, st = run_once(dS, dH, nocc, mesh, PlanCache(tracer=tracer),
-                          tracer=tracer)
+    log = EventLog(path=None, level="info")
+    mm = MemoryMeter()
+    cold_cache = PlanCache(tracer=tracer, event_log=log)
+    mm.install(cold_cache)
+    d_cold, st = run_once(dS, dH, nocc, mesh, cold_cache, tracer=tracer,
+                          log=log, health=HealthPolicy())
     assert np.array_equal(d_cold, d_ref), "cold traced run diverged"
+    mm.flush(tracer)  # per-worker peak gauges -> trace counter track
     summary = write_chrome_trace(tracer, TRACE_PATH)
     util = worker_utilization(tracer)
     print(f"\nwrote {os.path.abspath(TRACE_PATH)} "
           f"({summary['events']} events, {summary['host_spans']} host spans, "
           f"{summary['workers']} worker tracks)")
-    print(utilization_table(util))
+    print(utilization_table(util, memory=mm.worker_peak()))
 
     cats: dict[str, int] = {}
     for sp in tracer.spans:
@@ -159,25 +289,50 @@ def main() -> None:
             st.purify.per_iter + st.inverse.per_iter
             if pi.get("imbalance") is not None]
 
+    events_by_kind: dict[str, int] = {}
+    for rec in log.recent:
+        events_by_kind[rec["event"]] = events_by_kind.get(rec["event"], 0) + 1
+    health_summaries = {
+        name: stats.health
+        for name, stats in (("inverse", st.inverse), ("purify", st.purify))
+        if getattr(stats, "health", None) is not None
+    }
+
     payload = dict(
         meta=dict(n=n, bs=BS, workers=P, smoke=smoke, repeats=repeats,
+                  repeats_run=rounds,
                   tol=TOL, idem_tol=IDEM_TOL, trunc_tau=TRUNC_TAU,
                   spamm_tau=SPAMM_TAU, overhead_cap_pct=OVERHEAD_CAP_PCT,
+                  observatory=True,
                   initial_layout="all blocks on worker 0"),
         overhead=dict(
             untraced_s=[float(t) for t in off_s],
             traced_s=[float(t) for t in on_s],
             traced_sync_s=[float(t) for t in sync_s],
-            median_untraced_s=float(med_off),
-            median_traced_s=float(med_on),
-            median_traced_sync_s=float(med_sync),
+            untraced_cpu_s=[float(t) for t in off_c],
+            traced_cpu_s=[float(t) for t in on_c],
+            traced_sync_cpu_s=[float(t) for t in sync_c],
+            min_untraced_s=float(min_off),
+            min_traced_s=float(min_on),
+            min_traced_sync_s=float(min_sync),
+            min_untraced_cpu_s=float(cmin_off),
+            min_traced_cpu_s=float(cmin_on),
+            min_traced_sync_cpu_s=float(cmin_sync),
             overhead_pct=float(overhead_pct),
+            overhead_ci_pct=[float(ci_lo), float(ci_hi)],
             overhead_sync_pct=float(overhead_sync_pct),
+            overhead_cpu_min_pct=float(overhead_cpu_min_pct),
+            overhead_wall_pct=float(overhead_wall_pct),
             bit_identical=True,
         ),
         trace=dict(path=os.path.basename(TRACE_PATH), summary=summary,
                    spans_by_cat=cats, counter_totals=tracer.metrics_flat()),
         utilization=util,
+        observatory=dict(
+            events_by_kind=events_by_kind,
+            health=health_summaries,
+            memory=mm.summary(),
+        ),
         per_iter_imbalance_mean=float(np.mean(imbs)) if imbs else None,
         per_iter_imbalance_max=float(np.max(imbs)) if imbs else None,
     )
@@ -185,6 +340,14 @@ def main() -> None:
         json.dump(payload, fh, indent=2, sort_keys=True)
         fh.write("\n")
     print(f"\nwrote {os.path.abspath(OUT_PATH)}")
+
+    # gate last so a failing run still leaves the full sample arrays,
+    # trace, and report on disk for diagnosis
+    if not smoke:
+        assert overhead_pct < OVERHEAD_CAP_PCT, (
+            f"observatory overhead {overhead_pct:.2f}% "
+            f"(95% CI [{ci_lo:+.2f}%, {ci_hi:+.2f}%] over {rounds} paired "
+            f"rounds) exceeds {OVERHEAD_CAP_PCT}% cap")
 
 
 if __name__ == "__main__":

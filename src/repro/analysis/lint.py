@@ -1,6 +1,6 @@
 """Repo-custom lint — runtime idioms that keep the resident path honest.
 
-Pure-AST (no imports of the linted modules), three rules:
+Pure-AST (no imports of the linted modules), four rules:
 
 * ``perf-counter`` — ``time.perf_counter`` belongs to ``obs/timing.py``
   alone; everything else routes through :func:`repro.obs.timing.wall_clock`
@@ -14,6 +14,12 @@ Pure-AST (no imports of the linted modules), three rules:
   ``"spgemm"`` / ``"spamm"`` / ``"spamm-delta"`` that fingerprint a mesh)
   must carry both operand dtypes and the precision policy key; a key
   missing them silently reuses a plan compiled for other numerics.
+* ``device-transfer`` — no ``jax.device_put`` / ``jax.device_get`` inside
+  resident collective bodies (``dist_*`` functions): the whole point of the
+  resident runtime is that iterates never cross host<->device mid-run, and
+  one stray transfer inside a collective reintroduces per-call motion that
+  planning can't see.  Construction-time entry points (``dist_zeros``
+  builds a fresh sharded store) are baseline-waived.
 
 Findings are waived by ``<relpath>::<rule>`` lines in a checked-in baseline
 file (``lint_baseline.txt`` next to this module) — the escape hatch for the
@@ -151,7 +157,36 @@ def _check_plan_keys(tree, relpath, out):
             ))
 
 
-_RULES = (_check_perf_counter, _check_host_sync, _check_plan_keys)
+def _check_device_transfer(tree, relpath, out):
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if not fn.name.startswith("dist_"):
+            continue
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            if (
+                isinstance(f, ast.Attribute)
+                and f.attr in ("device_put", "device_get")
+                and isinstance(f.value, ast.Name)
+                and f.value.id == "jax"
+            ):
+                out.append(Finding(
+                    relpath, node.lineno, "device-transfer",
+                    f"jax.{f.attr}() inside resident collective {fn.name}() "
+                    f"— iterates must stay on device; scatter/gather are the "
+                    f"only sanctioned boundary crossings",
+                ))
+
+
+_RULES = (
+    _check_perf_counter,
+    _check_host_sync,
+    _check_plan_keys,
+    _check_device_transfer,
+)
 
 
 def default_root() -> Path:

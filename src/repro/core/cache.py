@@ -18,6 +18,7 @@ from __future__ import annotations
 import collections
 from typing import Any, Callable, Hashable
 
+from ..obs.log import NULL_LOG
 from ..obs.timing import timed_into
 from ..obs.tracer import NULL_TRACER
 
@@ -39,13 +40,21 @@ class SymbolicCache:
     VERIFY_POLICIES = ("off", "cached-once", "always")
 
     def __init__(self, max_entries: int = 128, tracer=None,
-                 verify: str = "cached-once"):
+                 verify: str = "cached-once", event_log=None):
         if verify not in self.VERIFY_POLICIES:
             raise ValueError(
                 f"verify={verify!r} not in {self.VERIFY_POLICIES}")
         self.max_entries = max_entries
         self.tracer = tracer
+        self.event_log = event_log
         self.verify = verify
+        # optional observatory riders (repro.obs): a FlightRecorder dumps a
+        # postmortem when plan admission raises PlanError or a driver's
+        # divergence trip fires; a MemoryMeter accounts device-memory
+        # watermarks at the dispatch sites.  Both default off and are read
+        # back with getattr so un-instrumented paths pay nothing.
+        self.flight_recorder = None
+        self.memory_meter = None
         self._entries: collections.OrderedDict[Hashable, Any] = (
             collections.OrderedDict()
         )
@@ -84,6 +93,17 @@ class SymbolicCache:
     def tracer(self, tracer) -> None:
         self._tracer = tracer if tracer is not None else NULL_TRACER
 
+    # the structured event log rides on the cache the same way the tracer
+    # does: call sites read it back via repro.obs.log_of(cache); assigning
+    # None disables logging (the NULL_LOG no-op)
+    @property
+    def event_log(self):
+        return self._event_log
+
+    @event_log.setter
+    def event_log(self, log) -> None:
+        self._event_log = log if log is not None else NULL_LOG
+
     def get_or_build(self, key: Hashable, builder: Callable[[], Any]) -> Any:
         kind = key[0] if isinstance(key, tuple) else "?"
         tr = self.tracer
@@ -102,8 +122,12 @@ class SymbolicCache:
         if tr.enabled:
             tr.counter("plan_misses").add()
         with timed_into(self, "build_s", tr, "plan_build", cat="plan",
-                        kind=str(kind)):
+                        kind=str(kind)) as tm:
             value = builder()
+        lg = self._event_log
+        if lg.debug_enabled:
+            lg.debug("plan_build", kind=str(kind), build_s=tm.elapsed,
+                     misses=self.misses)
         if self.verify != "off":
             self._verify_value(key, value)  # raises before a bad plan lands
         self._entries[key] = value
@@ -140,10 +164,21 @@ class SymbolicCache:
                     tr.instant("plan_verify_violation", cat="analysis",
                                check=viol.check, message=viol.message,
                                **viol.provenance)
-            raise PlanError(
+            message = (
                 f"{kind} plan failed static verification with "
                 f"{len(report)} violation(s); first: [{report[0].check}] "
-                f"{report[0].message}", report)
+                f"{report[0].message}")
+            lg = self._event_log
+            if lg.enabled:
+                lg.error("plan_error", kind=str(kind), message=message,
+                         violations=len(report), check=report[0].check)
+            rec = self.flight_recorder
+            if rec is not None:
+                rec.dump("plan_error", self, kind=str(kind), message=message,
+                         violations=[dict(check=v.check, message=v.message,
+                                          **v.provenance)
+                                     for v in report[:16]])
+            raise PlanError(message, report)
 
     def peek(self, key: Hashable, default: Any = None) -> Any:
         """Read an entry without touching counters or LRU order."""

@@ -114,6 +114,10 @@ class RefineMonitor:
     best_iter: int = -1
     stall: int = 0
     improved: bool = False  # whether the last update() set a new best
+    # why the last update() returned True: "converged" / "diverged" /
+    # "stalled"; None while the loop should continue.  The divergence trip
+    # is the one the flight recorder dumps a postmortem on.
+    stop_reason: str | None = None
 
     def update(self, it: int, r: float) -> bool:
         """Record iteration ``it``; return True when refinement should stop."""
@@ -124,8 +128,16 @@ class RefineMonitor:
         else:
             self.stall += 1
         if r <= self.tol:
+            self.stop_reason = "converged"
             return True
-        return r > 4.0 * self.best_r or self.stall >= self.max_stall
+        if r > 4.0 * self.best_r:
+            self.stop_reason = "diverged"
+            return True
+        if self.stall >= self.max_stall:
+            self.stop_reason = "stalled"
+            return True
+        self.stop_reason = None
+        return False
 
 
 @dataclasses.dataclass

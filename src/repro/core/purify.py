@@ -59,6 +59,9 @@ class Sp2Monitor:
     best_idem: float = float("inf")
     best_iter: int = -1
     improved: bool = False  # whether the last update() set a new best
+    # why the last update() returned True: "converged" / "diverged"; None
+    # while the loop should continue (mirrors RefineMonitor.stop_reason)
+    stop_reason: str | None = None
 
     def update(self, it: int, idem: float) -> bool:
         """Record iteration ``it``; return True when the loop should stop.
@@ -70,8 +73,13 @@ class Sp2Monitor:
         if self.improved:
             self.best_idem, self.best_iter = idem, it
         if idem <= self.idem_tol:
+            self.stop_reason = "converged"
             return True
-        return idem > 4.0 * self.best_idem
+        if idem > 4.0 * self.best_idem:
+            self.stop_reason = "diverged"
+            return True
+        self.stop_reason = None
+        return False
 
 
 @dataclasses.dataclass

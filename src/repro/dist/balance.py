@@ -461,12 +461,21 @@ class LoadMonitor:
         new_owner = self.propose(x, weights)
         if new_owner is None:
             return x, 0, None
+        before = owner_imbalance(x.owner, weights, self.nparts)
         info: dict = {}
         x = dist_repartition(x, new_owner, cache, stats=info)
         self.rebalances += 1
-        return x, info["migrated_bytes"], owner_imbalance(
-            new_owner, weights, self.nparts
-        )
+        after = owner_imbalance(new_owner, weights, self.nparts)
+        from repro.obs.log import log_of
+
+        lg = log_of(cache)
+        if lg.enabled:
+            lg.info(
+                "rebalance", migrated_bytes=int(info["migrated_bytes"]),
+                imbalance=float(before), imbalance_after=float(after),
+                rebalances=self.rebalances, nnzb=int(x.nnzb),
+            )
+        return x, info["migrated_bytes"], after
 
     def relayout_if_skewed(
         self, x: DistBSMatrix, cache=None, weights: np.ndarray | None = None

@@ -44,6 +44,8 @@ from repro.core.inverse import (
 from repro.core.matrix import BSMatrix
 from repro.core.schedule import plan_stats
 from repro.kernels.precision import Precision
+from repro.obs.health import HealthMonitor, HealthPolicy
+from repro.obs.log import log_of
 from repro.obs.timing import IterationScope
 from repro.obs.tracer import run_metrics, tracer_of
 
@@ -99,6 +101,8 @@ class DistInverseStats:
     # wall-clock calibration of the rebalance policy's cost coefficients
     # (repro.dist.balance.calibrate_policy report); None without rebalance=
     calibration: dict | None = None
+    # HealthMonitor.summary() when health monitoring was on; None otherwise
+    health: dict | None = None
 
 
 def _leaf_ranges(nbr: int, leaf_blocks: int, base: int = 0) -> list[tuple[int, int]]:
@@ -269,6 +273,8 @@ def dist_localized_inverse_factorization(
     batch_leaves: bool = True,
     rebalance: RebalancePolicy | None = None,
     tracer=None,
+    log=None,
+    health: HealthPolicy | None = None,
 ) -> tuple[DistBSMatrix, DistInverseStats]:
     """Divide-and-conquer inverse factorization, resident end to end.
 
@@ -302,7 +308,18 @@ def dist_localized_inverse_factorization(
     cache = cache if cache is not None else PlanCache()
     if tracer is not None:
         cache.tracer = tracer
+    if log is not None:
+        cache.event_log = log
     trc = tracer_of(cache)
+    lg = log_of(cache)
+    hm = HealthMonitor(health, cache=cache) if health is not None else None
+    rec = getattr(cache, "flight_recorder", None)
+    if lg.enabled:
+        lg.info(
+            "run_start", driver="inverse_factorization", n=int(a.shape[0]),
+            max_iter=int(max_iter), tol=float(tol),
+            trunc_tau=float(trunc_tau), spamm_tau=float(spamm_tau),
+        )
     with trc.span("inverse_factorization", cat="phase", n=int(a.shape[0])):
         lb = LoadMonitor(a.nparts, rebalance) if rebalance is not None else None
         upfront_migrated = 0
@@ -345,6 +362,8 @@ def dist_localized_inverse_factorization(
         per_iter: list[dict] = []
         z_norms = None  # stack-order norm table of z, carried from truncation
         for it in range(max_iter):
+            if rec is not None:
+                rec.mark(cache)
             with IterationScope(cache, it, trc, name="inv_iteration") as scope:
                 z_op = z  # the iterate the refinement multiplies read
                 mult_err = 0.0
@@ -414,6 +433,24 @@ def dist_localized_inverse_factorization(
                 nnzbs.append(z.nnzb)
                 nnzb_it = z.nnzb
                 stop = monitor.update(it, r)
+                if stop and monitor.stop_reason == "diverged":
+                    if lg.enabled:
+                        lg.warn(
+                            "refine_divergence", iteration=it,
+                            residual=float(r), best_r=float(monitor.best_r),
+                            best_iter=int(monitor.best_iter),
+                        )
+                    if trc.enabled:
+                        trc.instant(
+                            "refine_divergence", cat="health", iteration=it,
+                            residual=float(r), best_r=float(monitor.best_r),
+                        )
+                    if rec is not None:
+                        rec.dump(
+                            "refine_divergence", cache, iteration=it,
+                            residual=float(r), best_r=float(monitor.best_r),
+                            best_iter=int(monitor.best_iter),
+                        )
                 if monitor.improved:
                     best = z
                 if not stop:
@@ -484,11 +521,29 @@ def dist_localized_inverse_factorization(
                     # wall-clock feedback: the measured iteration time
                     # calibrates the policy's cost coefficients
                     lb.note_wall(row["wall_s"])
+                if lg.debug_enabled:
+                    lg.debug(
+                        "iteration", driver="inverse",
+                        **{k: row[k] for k in (
+                            "iteration", "nnzb", "residual", "wall_s",
+                            "cache_hits", "cache_misses", "recv_bytes_mean",
+                        )},
+                    )
+                if hm is not None:
+                    hm.observe(row, load)
+                    hm.maybe_refit(lb)
             if stop:
                 break
+    if lg.enabled:
+        lg.info(
+            "run_end", driver="inverse_factorization",
+            iterations=len(history), stop_reason=monitor.stop_reason,
+            best_r=float(monitor.best_r), nnzb=int(best.nnzb),
+        )
     return best, DistInverseStats(
         len(history), history, monitor.best_r, nnzbs, run_metrics(cache),
         per_iter,
         rebalances=lb.rebalances if lb is not None else 0,
         calibration=lb.calibration()[1] if lb is not None else None,
+        health=hm.summary() if hm is not None else None,
     )

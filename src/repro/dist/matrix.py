@@ -204,6 +204,11 @@ def resident_block_norms(x: DistBSMatrix, cache=None) -> np.ndarray:
     with tr.span("norm_fetch", cat="collective", nnzb=x.nnzb):
         if tr.enabled:
             tr.counter("norm_fetch_bytes").add(x.nnzb * 4)
+        mm = getattr(cache, "memory_meter", None) if cache is not None else None
+        if mm is not None:
+            # the [P, cap] norm table the fused reduction materializes
+            per_worker = np.full(x.nparts, x.cap * 4, dtype=np.int64)
+            mm.note_bytes("norm_table", per_worker, cache=cache)
         if cache is not None:
             key = (
                 "norms",

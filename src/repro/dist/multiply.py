@@ -143,15 +143,23 @@ def _plan_obs_static(plan) -> dict:
                 for rnd, d in enumerate(offs):
                     rounds.append((operand, rnd, int(d),
                                    float(np.asarray(cnts[d]).sum()) * blk))
+        base = (pol.recv_cost * load.recv_bytes / blk
+                + pol.send_cost * load.send_bytes / blk
+                + pol.block_cost * load.blocks)
         st = dict(
             # the task-independent terms of the rebalancer's combined cost
-            base=pol.recv_cost * load.recv_bytes / blk
-            + pol.send_cost * load.send_bytes / blk
-            + pol.block_cost * load.blocks,
+            base=base,
+            # full (unmasked) dispatch cost vector, precomputed: most warm
+            # dispatches run the whole task list
+            full_costs=np.asarray(plan.task_count, np.float64) + base,
+            full_tasks=int(np.asarray(plan.task_count).sum()),
             recv_sum=float(load.recv_bytes.sum()),
             send_sum=float(load.send_bytes.sum()),
             rounds=rounds,
+            tiles={},            # per-dtype pick_tiles memo
+            rounds_tracer=None,  # exchange_round instants once per tracer
         )
+        st["full_costs"].setflags(write=False)  # shared across spans
         object.__setattr__(plan, "_obs_static", st)  # plan is frozen
     return st
 
@@ -164,15 +172,16 @@ def _annotate_spgemm_dispatch(
     (plan byte accounting, cost-model evaluation) that must cost nothing
     with tracing off.
     """
+    st = _plan_obs_static(plan)
     if precision is not None:
-        from repro.kernels.autotune import pick_tiles
-
         dtype = "bfloat16" if precision.mode == "bf16" else "float32"
-        sp.args.update(
-            precision=precision.mode,
-            dtype=dtype,
-            tiles=list(pick_tiles(plan.bs, plan.bs, plan.bs, dtype)),
-        )
+        tiles = st["tiles"].get(dtype)
+        if tiles is None:
+            from repro.kernels.autotune import pick_tiles
+
+            tiles = st["tiles"][dtype] = list(
+                pick_tiles(plan.bs, plan.bs, plan.bs, dtype))
+        sp.args.update(precision=precision.mode, dtype=dtype, tiles=tiles)
     ex = getattr(exe, "last_exchange", None)
     if ex is not None:
         sp.args.update(
@@ -183,22 +192,53 @@ def _annotate_spgemm_dispatch(
         tr.counter("pruned_send_blocks").add(
             float(ex["send_blocks"] - ex["kept_blocks"])
         )
-    st = _plan_obs_static(plan)
-    tc = np.asarray(plan.task_count if task_count is None else task_count)
     # the same combined task-equivalent cost the rebalancer weighs, so the
     # trace's utilization tracks match BENCH_balance's imbalance numbers
-    sp.worker_costs = tc.astype(np.float64) + st["base"]
-    tasks = int(tc.sum())
+    if task_count is None or task_count is plan.task_count:
+        sp.worker_costs = st["full_costs"]
+        tasks = st["full_tasks"]
+    else:
+        tc = np.asarray(task_count)
+        sp.worker_costs = tc.astype(np.float64) + st["base"]
+        tasks = int(tc.sum())
     sp.args.update(tasks=tasks, recv_bytes=st["recv_sum"],
                    send_bytes=st["send_sum"])
     tr.counter("tasks_executed").add(float(tasks))
     tr.counter("recv_bytes").add(st["recv_sum"])
     tr.counter("send_bytes").add(st["send_sum"])
     # exchange rounds run fused inside the jitted dispatch — emit honest
-    # per-round markers carrying planned bytes, not fabricated durations
-    for operand, rnd, d, nbytes in st["rounds"]:
-        tr.instant("exchange_round", cat="exchange", operand=operand,
-                   round=rnd, offset=d, bytes=nbytes)
+    # per-round markers carrying planned bytes, not fabricated durations.
+    # They are plan-static, so each plan emits them on its first dispatch
+    # observed by a given tracer; warm replays add no duplicate markers.
+    if st["rounds_tracer"] is not tr:
+        st["rounds_tracer"] = tr
+        for operand, rnd, d, nbytes in st["rounds"]:
+            tr.instant("exchange_round", cat="exchange", operand=operand,
+                       round=rnd, offset=d, bytes=nbytes)
+
+
+def _note_dispatch_memory(cache, plan, precision, c) -> None:
+    """Account an executed multiply against the installed
+    :class:`~repro.obs.memory.MemoryMeter` (no-op when none is installed):
+    the plan's receive buffers at wire precision plus the result store.
+
+    A repeat dispatch of the same cached plan over the same owner layout
+    yields byte-identical account vectors, so those are deduped by token —
+    peak watermarks cannot move and warm iteration loops pay one set
+    lookup instead of recomputing the per-worker bincounts."""
+    mm = getattr(cache, "memory_meter", None) if cache is not None else None
+    if mm is None:
+        return
+    tok = (id(plan), id(c.owner), c.nnzb, c.cap,
+           getattr(precision, "mode", None))
+    seen = getattr(mm, "_dispatch_seen", None)
+    if seen is None:
+        seen = mm._dispatch_seen = set()
+    if tok in seen:
+        return
+    seen.add(tok)
+    mm.note_plan(plan, precision, cache=cache)
+    mm.note_matrix(c, "store", cache=cache)
 
 
 def _check_operands(a: DistBSMatrix, b: DistBSMatrix) -> None:
@@ -373,7 +413,7 @@ def dist_multiply(
                 _annotate_spgemm_dispatch(
                     tr, sp, plan, plan.task_count, precision, exe
                 )
-    return DistBSMatrix(
+    c = DistBSMatrix(
         shape=(a.shape[0], b.shape[1]),
         bs=a.bs,
         coords=plan.c_coords,
@@ -383,6 +423,8 @@ def dist_multiply(
         store=c_store,
         mesh=a.mesh,
     )
+    _note_dispatch_memory(cache, plan, precision, c)
+    return c
 
 
 def _spamm_pruned_tasks(
@@ -595,19 +637,18 @@ def _dist_spamm_impl(
                 _annotate_spgemm_dispatch(
                     tr, sp, plan, masked_count, precision, exe
                 )
-        return (
-            DistBSMatrix(
-                shape=(a.shape[0], b.shape[1]),
-                bs=a.bs,
-                coords=plan.c_coords,
-                owner=np.asarray(plan.c_owner, dtype=np.int32),
-                slot=np.asarray(plan.c_slot, dtype=np.int32),
-                cap=plan.c_cap,
-                store=c_store,
-                mesh=a.mesh,
-            ),
-            err,
+        c = DistBSMatrix(
+            shape=(a.shape[0], b.shape[1]),
+            bs=a.bs,
+            coords=plan.c_coords,
+            owner=np.asarray(plan.c_owner, dtype=np.int32),
+            slot=np.asarray(plan.c_slot, dtype=np.int32),
+            cap=plan.c_cap,
+            store=c_store,
+            mesh=a.mesh,
         )
+        _note_dispatch_memory(cache, plan, precision, c)
+        return c, err
 
     assert method == "replan", method
     if tasks.num_tasks == 0:
@@ -665,16 +706,15 @@ def _dist_spamm_impl(
             _annotate_spgemm_dispatch(
                 tr, sp, plan, plan.task_count, precision, exe
             )
-    return (
-        DistBSMatrix(
-            shape=(a.shape[0], b.shape[1]),
-            bs=a.bs,
-            coords=plan.c_coords,
-            owner=np.asarray(plan.c_owner, dtype=np.int32),
-            slot=np.asarray(plan.c_slot, dtype=np.int32),
-            cap=plan.c_cap,
-            store=c_store,
-            mesh=a.mesh,
-        ),
-        err,
+    c = DistBSMatrix(
+        shape=(a.shape[0], b.shape[1]),
+        bs=a.bs,
+        coords=plan.c_coords,
+        owner=np.asarray(plan.c_owner, dtype=np.int32),
+        slot=np.asarray(plan.c_slot, dtype=np.int32),
+        cap=plan.c_cap,
+        store=c_store,
+        mesh=a.mesh,
     )
+    _note_dispatch_memory(cache, plan, precision, c)
+    return c, err

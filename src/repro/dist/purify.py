@@ -27,6 +27,8 @@ from repro.core.matrix import BSMatrix
 from repro.core.purify import PurifyStats, Sp2Monitor, sp2_init_coeffs, sp2_should_square
 from repro.kernels.precision import Precision
 from repro.core.schedule import SpgemmPlan, plan_stats
+from repro.obs.health import HealthMonitor, HealthPolicy
+from repro.obs.log import log_of
 from repro.obs.timing import IterationScope
 from repro.obs.tracer import run_metrics, tracer_of
 
@@ -53,6 +55,7 @@ __all__ = [
     "dist_sp2_purify",
     "DistPurifyStats",
     "dist_lanczos_bounds",
+    "LanczosDivergence",
     "dist_sqrt_inv_pipeline",
     "SqrtInvPipelineStats",
 ]
@@ -76,6 +79,9 @@ class DistPurifyStats:
     # wall-clock calibration of the rebalance policy's cost coefficients
     # (repro.dist.balance.calibrate_policy report); None without rebalance=
     calibration: dict | None = None
+    # HealthMonitor.summary() (alerts, live-policy refits); None without
+    # health= monitoring
+    health: dict | None = None
 
     def as_purify_stats(self) -> PurifyStats:
         return PurifyStats(
@@ -106,6 +112,8 @@ def dist_sp2_purify(
     return_resident: bool = False,
     rebalance: RebalancePolicy | None = None,
     tracer=None,
+    log=None,
+    health: HealthPolicy | None = None,
 ) -> tuple[BSMatrix | DistBSMatrix, DistPurifyStats]:
     """SP2 purification with every iterate resident on the worker mesh.
 
@@ -150,11 +158,29 @@ def dist_sp2_purify(
     kernel dispatch and plan build records nested spans under one
     ``sp2_purify`` phase.  Tracing never touches numerics — results are
     bit-identical with it on, off, or NULL.
+
+    ``log`` (a :class:`repro.obs.EventLog`) attaches the structured event
+    log to the cache the same way: run start/end, per-iteration debug
+    events, plan builds, rebalances and health alerts all land in it.
+    ``health`` (a :class:`repro.obs.HealthPolicy`) turns on the online
+    :class:`~repro.obs.health.HealthMonitor` — straggler / miss-storm /
+    blowup / stall alerts, plus live calibration of the rebalance policy
+    when ``rebalance`` is also on.  Like tracing, both are schedule- and
+    report-only: results stay bit-identical.
     """
     cache = cache if cache is not None else PlanCache()
     if tracer is not None:
         cache.tracer = tracer
+    if log is not None:
+        cache.event_log = log
     trc = tracer_of(cache)
+    lg = log_of(cache)
+    hm = HealthMonitor(health, cache=cache) if health is not None else None
+    rec = getattr(cache, "flight_recorder", None)
+    if lg.enabled:
+        lg.info("run_start", driver="sp2_purify", n=int(f.shape[0]),
+                n_occ=float(n_occ), max_iter=max_iter, idem_tol=idem_tol,
+                trunc_tau=trunc_tau, spamm_tau=spamm_tau)
     with trc.span("sp2_purify", cat="phase", n=int(f.shape[0])):
         scale, shift = sp2_init_coeffs(lmin, lmax)
         if isinstance(f, DistBSMatrix):
@@ -185,6 +211,8 @@ def dist_sp2_purify(
         best = x
         x_norms = None  # stack-order norm table of x, carried from truncation
         for it in range(max_iter):
+            if rec is not None:
+                rec.mark(cache)  # postmortem deltas cover the last iteration
             with IterationScope(cache, it, trc, name="sp2_iteration") as scope:
                 x_op = x  # multiply operand: measured weights refer to it
                 if spamm_tau > 0:
@@ -229,6 +257,19 @@ def dist_sp2_purify(
                 nnzbs.append(x.nnzb)
                 nnzb_it = x.nnzb
                 stop = monitor.update(it, idem)
+                if stop and monitor.stop_reason == "diverged":
+                    if lg.enabled:
+                        lg.warn("sp2_divergence", iteration=it, idem=idem,
+                                best_idem=monitor.best_idem,
+                                best_iter=monitor.best_iter)
+                    if trc.enabled:
+                        trc.instant("sp2_divergence", cat="health",
+                                    iteration=it, idem=idem)
+                    if rec is not None:
+                        rec.dump("sp2_divergence", cache, iteration=it,
+                                 idem=float(idem),
+                                 best_idem=float(monitor.best_idem),
+                                 best_iter=monitor.best_iter)
                 if monitor.improved:
                     best = x
                 nfb = 0
@@ -299,12 +340,26 @@ def dist_sp2_purify(
                     # wall-clock feedback: the measured iteration time
                     # calibrates the policy's cost coefficients
                     lb.note_wall(row["wall_s"])
+                if lg.debug_enabled:
+                    lg.debug("iteration", driver="sp2", **{
+                        k: row[k] for k in ("iteration", "nnzb", "idem",
+                                            "wall_s", "cache_hits",
+                                            "cache_misses",
+                                            "recv_bytes_mean")})
+                if hm is not None:
+                    hm.observe(row, load)
+                    hm.maybe_refit(lb)
             if stop:
                 break
+    if lg.enabled:
+        lg.info("run_end", driver="sp2_purify", iterations=len(traces),
+                stop_reason=monitor.stop_reason,
+                best_idem=monitor.best_idem, nnzb=best.nnzb)
     return (best if return_resident else best.gather()), DistPurifyStats(
         len(traces), traces, idems, nnzbs, run_metrics(cache), per_iter,
         rebalances=lb.rebalances if lb is not None else 0,
         calibration=lb.calibration()[1] if lb is not None else None,
+        health=hm.summary() if hm is not None else None,
     )
 
 
@@ -350,6 +405,60 @@ def _spectral_bounds_from_norms(coords, norms) -> tuple[float, float]:
     return -b, b
 
 
+class LanczosDivergence(RuntimeError):
+    """The Lanczos recurrence left the finite regime (non-finite alpha /
+    beta, or the tridiagonal eigensolve failed) — the caller falls back to
+    the block-Gershgorin enclosure."""
+
+
+def _lanczos_ritz(
+    f: DistBSMatrix, cache, steps: int, seed: int
+) -> tuple[float, float]:
+    """The raw Lanczos sweep; raises :class:`LanczosDivergence` on any
+    non-finite recurrence coefficient or eigensolve failure."""
+    n, bs = f.shape[0], f.bs
+    rng = np.random.default_rng(seed)
+    v0 = rng.standard_normal(n)
+    v0 /= np.linalg.norm(v0)
+    col = np.zeros((n, bs), dtype=f.dtype)
+    col[:, 0] = v0
+    vcur = scatter(BSMatrix.from_dense(col, bs), f.mesh)
+    vprev = None
+    beta = 0.0
+    alphas: list[float] = []
+    betas: list[float] = []
+    for _ in range(max(int(steps), 1)):
+        w = dist_multiply(f, vcur, cache)
+        vt = dist_transpose(vcur, cache)
+        alpha = dist_trace(dist_multiply(vt, w, cache), cache)
+        if not np.isfinite(alpha):
+            raise LanczosDivergence(f"non-finite alpha {alpha!r}")
+        w = dist_add(w, vcur, 1.0, -alpha, cache)
+        if vprev is not None:
+            w = dist_add(w, vprev, 1.0, -beta, cache)
+        alphas.append(alpha)
+        beta = dist_frobenius_norm(w, cache)
+        if not np.isfinite(beta):
+            raise LanczosDivergence(f"non-finite beta {beta!r}")
+        betas.append(beta)
+        if beta <= 1e-12 * max(abs(alpha), 1.0):
+            break  # invariant subspace: Ritz values are exact eigenvalues
+        vprev, vcur = vcur, w.scale(1.0 / beta)
+    k = len(alphas)
+    t = np.diag(np.asarray(alphas, dtype=np.float64))
+    for i in range(k - 1):
+        t[i, i + 1] = t[i + 1, i] = betas[i]
+    try:
+        theta, s = np.linalg.eigh(t)
+    except np.linalg.LinAlgError as e:
+        raise LanczosDivergence(f"tridiagonal eigensolve failed: {e}") from e
+    eta = abs(betas[k - 1]) * np.abs(s[k - 1, :])
+    lo, hi = float((theta - eta).min()), float((theta + eta).max())
+    if not (np.isfinite(lo) and np.isfinite(hi)):
+        raise LanczosDivergence(f"non-finite Ritz bounds ({lo}, {hi})")
+    return lo, hi
+
+
 def dist_lanczos_bounds(
     f: DistBSMatrix,
     cache: PlanCache | None = None,
@@ -374,39 +483,30 @@ def dist_lanczos_bounds(
     spectrum; callers intersect it with the Gershgorin interval (so bounds
     never widen) and rely on SP2's divergence monitor as the backstop for a
     rare under-estimate.
+
+    **Hardened** (the ROADMAP "Lanczos enclosure hardening" item): a
+    divergence trip inside the sweep — non-finite recurrence coefficient or
+    a failed tridiagonal eigensolve — falls back to the block-Gershgorin
+    enclosure from the resident norm table instead of propagating NaNs into
+    SP2's interval, and the trip is logged as a ``lanczos_fallback`` health
+    event through the cache's :class:`~repro.obs.log.EventLog` + a tracer
+    instant.  This is what lets ``lanczos_steps`` default on in
+    :func:`dist_sqrt_inv_pipeline`.
     """
-    n, bs = f.shape[0], f.bs
     assert f.shape[0] == f.shape[1], "spectral bounds need a square operand"
-    rng = np.random.default_rng(seed)
-    v0 = rng.standard_normal(n)
-    v0 /= np.linalg.norm(v0)
-    col = np.zeros((n, bs), dtype=f.dtype)
-    col[:, 0] = v0
-    vcur = scatter(BSMatrix.from_dense(col, bs), f.mesh)
-    vprev = None
-    beta = 0.0
-    alphas: list[float] = []
-    betas: list[float] = []
-    for _ in range(max(int(steps), 1)):
-        w = dist_multiply(f, vcur, cache)
-        vt = dist_transpose(vcur, cache)
-        alpha = dist_trace(dist_multiply(vt, w, cache), cache)
-        w = dist_add(w, vcur, 1.0, -alpha, cache)
-        if vprev is not None:
-            w = dist_add(w, vprev, 1.0, -beta, cache)
-        alphas.append(alpha)
-        beta = dist_frobenius_norm(w, cache)
-        betas.append(beta)
-        if beta <= 1e-12 * max(abs(alpha), 1.0):
-            break  # invariant subspace: Ritz values are exact eigenvalues
-        vprev, vcur = vcur, w.scale(1.0 / beta)
-    k = len(alphas)
-    t = np.diag(np.asarray(alphas, dtype=np.float64))
-    for i in range(k - 1):
-        t[i, i + 1] = t[i + 1, i] = betas[i]
-    theta, s = np.linalg.eigh(t)
-    eta = abs(betas[k - 1]) * np.abs(s[k - 1, :])
-    return float((theta - eta).min()), float((theta + eta).max())
+    try:
+        return _lanczos_ritz(f, cache, steps, seed)
+    except LanczosDivergence as e:
+        lo, hi = _spectral_bounds_from_norms(
+            f.coords, resident_block_norms(f, cache))
+        lg = log_of(cache)
+        if lg.enabled:
+            lg.warn("lanczos_fallback", reason=str(e), steps=int(steps),
+                    gershgorin_lo=lo, gershgorin_hi=hi)
+        tr = tracer_of(cache)
+        if tr.enabled:
+            tr.instant("lanczos_fallback", cat="health", reason=str(e))
+        return lo, hi
 
 
 def dist_sqrt_inv_pipeline(
@@ -429,8 +529,10 @@ def dist_sqrt_inv_pipeline(
     cache: PlanCache | None = None,
     transform_back: bool = True,
     rebalance: RebalancePolicy | None = None,
-    lanczos_steps: int = 0,
+    lanczos_steps: int = 8,
     tracer=None,
+    log=None,
+    health: HealthPolicy | None = None,
 ) -> tuple[BSMatrix, SqrtInvPipelineStats]:
     """The paper's full electronic-structure workflow, resident end to end.
 
@@ -446,11 +548,13 @@ def dist_sqrt_inv_pipeline(
 
     When ``lmin`` / ``lmax`` are omitted, the SP2 eigenvalue interval is
     estimated from F's resident norm table (block Gershgorin row sums — no
-    block data leaves the mesh for it); ``lanczos_steps > 0`` refines that
-    interval with a few resident Lanczos steps (:func:`dist_lanczos_bounds`),
-    intersected with the Gershgorin enclosure so it can only tighten — a
-    loose row-sum bound costs SP2 iterations, and the refinement buys them
-    back without gathering F.
+    block data leaves the mesh for it); ``lanczos_steps > 0`` (**default
+    on** now that :func:`dist_lanczos_bounds` falls back to Gershgorin on a
+    divergence trip) refines that interval with a few resident Lanczos
+    steps, intersected with the Gershgorin enclosure so it can only
+    tighten — a loose row-sum bound costs SP2 iterations, and the
+    refinement buys them back without gathering F.  Pass
+    ``lanczos_steps=0`` for the pure Gershgorin interval.
 
     ``rebalance`` (a :class:`~repro.dist.balance.RebalancePolicy`) enables
     dynamic load balancing in both iterative stages — the inverse refinement
@@ -468,6 +572,8 @@ def dist_sqrt_inv_pipeline(
     cache = cache if cache is not None else PlanCache()
     if tracer is not None:
         cache.tracer = tracer
+    if log is not None:
+        cache.event_log = log
     trc = tracer_of(cache)
     if isinstance(s, DistBSMatrix):
         assert mesh is None or list(mesh.devices.flat) == list(
@@ -490,7 +596,7 @@ def dist_sqrt_inv_pipeline(
     z, inv_stats = dist_localized_inverse_factorization(
         ds, cache, tol=tol, max_iter=max_iter, trunc_tau=trunc_tau,
         spamm_tau=spamm_tau, leaf_blocks=leaf_blocks, exchange=exchange,
-        impl=impl, precision=precision, rebalance=rebalance,
+        impl=impl, precision=precision, rebalance=rebalance, health=health,
     )
 
     with IterationScope(cache, None, trc, name="congruence", cat="phase") as sc:
@@ -524,7 +630,7 @@ def dist_sqrt_inv_pipeline(
         f_ortho, n_occ, lmin, lmax, max_iter=max_iter, idem_tol=idem_tol,
         trunc_tau=trunc_tau, spamm_tau=spamm_tau, impl=impl,
         exchange=exchange, precision=precision, cache=cache,
-        return_resident=True, rebalance=rebalance,
+        return_resident=True, rebalance=rebalance, health=health,
     )
 
     back = None

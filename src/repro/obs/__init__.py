@@ -19,10 +19,44 @@ service):
   live tracer or a written trace file (``python -m repro.obs.report``).
 * :func:`run_metrics` — the flat metrics dict (cache + tracer counters) the
   driver stats dataclasses wrap.
+
+The **runtime health observatory** (this PR's online half):
+
+* :mod:`repro.obs.log` — :class:`EventLog` leveled structured JSONL log +
+  :data:`NULL_LOG`, riding on the plan cache like the tracer
+  (:func:`log_of`), and :class:`FlightRecorder`, which dumps a postmortem
+  (last spans, counter deltas, recent events, plan-cache state) when plan
+  admission raises ``PlanError`` or a driver divergence trip fires.
+* :mod:`repro.obs.memory` — :class:`MemoryMeter` per-worker device-memory
+  accounting from plan capacities / store shapes / receive buffers, with
+  peak watermarks per collective and a memory column in the report.
+* :mod:`repro.obs.health` — :class:`HealthMonitor` online anomaly detection
+  (stragglers, plan-cache miss storms, exchange blowups, convergence
+  stalls) + live `calibrate_policy` feedback into the load balancer.
+* :mod:`repro.obs.regress` — the benchmark trajectory store
+  (``BENCH_HISTORY.jsonl``) and ``python -m repro.obs.regress --check``
+  regression gate.
 """
 
 from .export import chrome_trace_events, validate_chrome_trace, write_chrome_trace
-from .report import utilization_from_file, utilization_table, worker_utilization
+from .health import HealthAlert, HealthMonitor, HealthPolicy
+from .log import (
+    EVENT_KEYS,
+    NULL_LOG,
+    POSTMORTEM_KEYS,
+    EventLog,
+    FlightRecorder,
+    NullEventLog,
+    load_events,
+    log_of,
+)
+from .memory import MemoryMeter, jax_memory_stats, meter_of, plan_memory_bytes
+from .report import (
+    memory_from_file,
+    utilization_from_file,
+    utilization_table,
+    worker_utilization,
+)
 from .timing import SHARED_ITER_KEYS, IterationScope, timed_into
 from .tracer import (
     NULL_TRACER,
@@ -52,5 +86,21 @@ __all__ = [
     "validate_chrome_trace",
     "worker_utilization",
     "utilization_from_file",
+    "memory_from_file",
     "utilization_table",
+    "EventLog",
+    "NullEventLog",
+    "NULL_LOG",
+    "log_of",
+    "load_events",
+    "FlightRecorder",
+    "EVENT_KEYS",
+    "POSTMORTEM_KEYS",
+    "MemoryMeter",
+    "meter_of",
+    "plan_memory_bytes",
+    "jax_memory_stats",
+    "HealthPolicy",
+    "HealthAlert",
+    "HealthMonitor",
 ]

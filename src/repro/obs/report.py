@@ -23,7 +23,12 @@ import numpy as np
 from .export import WORKER_PID, _attributed_leaves
 from .tracer import Tracer
 
-__all__ = ["worker_utilization", "utilization_from_file", "utilization_table"]
+__all__ = [
+    "worker_utilization",
+    "utilization_from_file",
+    "memory_from_file",
+    "utilization_table",
+]
 
 
 def _summarize(busy: np.ndarray, window: float) -> dict:
@@ -113,26 +118,64 @@ def utilization_from_file(path: str) -> dict:
     return _summarize(busy_v, window)
 
 
-def utilization_table(util: dict) -> str:
-    """Human-readable per-worker utilization summary table."""
+def memory_from_file(path: str) -> list[float] | None:
+    """Per-worker peak device-memory bytes recovered from a written trace.
+
+    :meth:`~repro.obs.memory.MemoryMeter.flush` emits one
+    ``mem_peak_w{p}_bytes`` gauge per worker; these land in the Chrome trace
+    as ``C`` counter events, so the memory column of the report — like the
+    utilization numbers — needs nothing but the trace file.  Returns
+    ``None`` when the trace carries no memory gauges.
+    """
+    with open(path) as fh:
+        trace = json.load(fh)
+    events = trace["traceEvents"] if isinstance(trace, dict) else trace
+    peaks: dict[int, float] = {}
+    for e in events:
+        if e.get("ph") != "C" or not e["name"].startswith("mem_peak_w"):
+            continue
+        p = int(e["name"][len("mem_peak_w"):-len("_bytes")])
+        # gauges re-emit on every flush: the last value is the run peak
+        peaks[p] = float(e["args"][e["name"]])
+    if not peaks:
+        return None
+    return [peaks.get(p, 0.0) for p in range(max(peaks) + 1)]
+
+
+def utilization_table(util: dict, memory: list[float] | None = None) -> str:
+    """Human-readable per-worker utilization summary table.
+
+    ``memory`` (per-worker peak bytes, e.g. from :func:`memory_from_file`
+    or ``MemoryMeter.worker_peak()``) adds a peak-MB column.
+    """
+    mem_col = memory is not None and len(memory) >= util["nparts"]
+    header = f"{'worker':>6}  {'busy ms':>10}  {'busy %':>7}  {'idle %':>7}"
+    if mem_col:
+        header += f"  {'peak MB':>9}"
     lines = [
         f"traced window: {util['window_s'] * 1e3:.1f} ms over "
         f"{util['nparts']} workers   "
         f"timeline imbalance (max/mean busy): "
         f"{util['timeline_imbalance']:.2f}",
-        f"{'worker':>6}  {'busy ms':>10}  {'busy %':>7}  {'idle %':>7}",
+        header,
     ]
     for p in range(util["nparts"]):
-        lines.append(
+        row = (
             f"{p:>6}  {util['busy_s'][p] * 1e3:>10.1f}  "
             f"{util['busy_frac'][p] * 100:>6.1f}%  "
             f"{util['idle_frac'][p] * 100:>6.1f}%"
         )
-    lines.append(
+        if mem_col:
+            row += f"  {memory[p] / 1e6:>9.2f}"
+        lines.append(row)
+    tail = (
         f"{'mean':>6}  {np.mean(util['busy_s']) * 1e3:>10.1f}  "
         f"{util['mean_busy_frac'] * 100:>6.1f}%  "
         f"{(1 - util['mean_busy_frac']) * 100:>6.1f}%"
     )
+    if mem_col:
+        tail += f"  {np.mean(memory[: util['nparts']]) / 1e6:>9.2f}"
+    lines.append(tail)
     return "\n".join(lines)
 
 
@@ -144,7 +187,7 @@ def main(argv=None) -> int:
         print("usage: python -m repro.obs.report <chrome-trace.json>")
         return 2
     util = utilization_from_file(argv[0])
-    print(utilization_table(util))
+    print(utilization_table(util, memory=memory_from_file(argv[0])))
     return 0
 
 
