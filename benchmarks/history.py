@@ -9,7 +9,8 @@ Extracts one-schema history entries (see :mod:`repro.obs.regress`) from the
     PYTHONPATH=src python -m repro.obs.regress --check   # then gate
 
 Each BENCH file maps to its bench kind by content: trace (overhead gate),
-balance (one entry per structure), kernel (fused leaf engine).  Boolean
+balance (one entry per structure), locality (data-locality ledger, one
+entry per structure), kernel (fused leaf engine).  Boolean
 gates (bit identity, precision bounds) become 0/1 metrics so the regression
 gate treats a flipped gate as an exact-tolerance failure.
 """
@@ -98,6 +99,29 @@ def entries_from_bench_json(path: str, *, ts: float | None = None,
             )
             entries.append(make_entry(
                 "balance", metrics, config=_config(meta, name),
+                meta=dict(n=meta.get("n"), workers=meta.get("workers"),
+                          source=os.path.basename(path)), **kw))
+        return entries
+
+    if "locality" in data:  # BENCH_locality.json
+        entries = []
+        for name, row in sorted(data["locality"].items()):
+            stat, reb = row["static"], row["rebalanced"]
+            tg = row.get("taskgraph") or {}
+            metrics = dict(
+                locality_flops_static=stat["locality_flops"],
+                locality_flops_rebalanced=reb["locality_flops"],
+                locality_bytes_rebalanced=reb["locality_bytes"],
+                rebalanced_locality_gain=(
+                    reb["locality_flops"] / max(stat["locality_flops"], 1e-12)),
+                wire_mb_rebalanced=reb["wire_recv_bytes"] / 1e6,
+            )
+            if tg.get("after"):
+                metrics["critical_path_ratio"] = (
+                    tg["after"]["critical_path"]
+                    / max(tg["before"]["critical_path"], 1e-12))
+            entries.append(make_entry(
+                "locality", metrics, config=_config(meta, name),
                 meta=dict(n=meta.get("n"), workers=meta.get("workers"),
                           source=os.path.basename(path)), **kw))
         return entries

@@ -74,6 +74,7 @@ from repro.dist import (  # noqa: E402
 from repro.obs import (  # noqa: E402
     EventLog,
     HealthPolicy,
+    LocalityLedger,
     MemoryMeter,
     Tracer,
     utilization_table,
@@ -144,12 +145,14 @@ def _median_ci(xs: list, conf: float = 0.95) -> tuple:
 
 def full_observatory(sync: bool) -> dict:
     """One repeat's worth of the whole observability stack: tracer +
-    in-memory event log + health monitoring + device-memory accounting."""
+    in-memory event log + health monitoring + device-memory accounting +
+    data-locality ledger."""
     return dict(
         tracer=Tracer(sync=sync),
         log=EventLog(path=None, level="info"),
         health=HealthPolicy(),
         memory=MemoryMeter(),
+        locality=LocalityLedger(),
     )
 
 
@@ -199,10 +202,14 @@ def main() -> None:
         cache.tracer = None
         cache.event_log = None
         cache.memory_meter = None
+        cache.locality_ledger = None
         kw = obs_factory() if obs_factory else {}
         mm = kw.pop("memory", None)
         if mm is not None:
             mm.install(cache)
+        lld = kw.pop("locality", None)
+        if lld is not None:
+            lld.install(cache)
         gc.collect()
         gc.disable()
         try:
@@ -271,6 +278,7 @@ def main() -> None:
     mm = MemoryMeter()
     cold_cache = PlanCache(tracer=tracer, event_log=log)
     mm.install(cold_cache)
+    lld = LocalityLedger().install(cold_cache)
     d_cold, st = run_once(dS, dH, nocc, mesh, cold_cache, tracer=tracer,
                           log=log, health=HealthPolicy())
     assert np.array_equal(d_cold, d_ref), "cold traced run diverged"
@@ -281,6 +289,11 @@ def main() -> None:
           f"({summary['events']} events, {summary['host_spans']} host spans, "
           f"{summary['workers']} worker tracks)")
     print(utilization_table(util, memory=mm.worker_peak()))
+    loc = lld.summary()
+    print(f"locality: {loc['locality_flops'] * 100:.1f}% of flops / "
+          f"{loc['locality_bytes'] * 100:.1f}% of bytes read locally; "
+          f"wire {loc['wire_recv_bytes'] / 1e6:.2f} MB over "
+          f"{loc['dispatches']} dispatches")
 
     cats: dict[str, int] = {}
     for sp in tracer.spans:
@@ -332,6 +345,7 @@ def main() -> None:
             events_by_kind=events_by_kind,
             health=health_summaries,
             memory=mm.summary(),
+            locality=lld.summary(),
         ),
         per_iter_imbalance_mean=float(np.mean(imbs)) if imbs else None,
         per_iter_imbalance_max=float(np.max(imbs)) if imbs else None,

@@ -90,7 +90,10 @@ def run_selftest() -> int:
     return missed
 
 
-def run_lint(roots) -> int:
+def run_lint(roots, fix: bool = False) -> int:
+    if fix:
+        for relpath, n in lint_mod.fix_paths(roots):
+            print(f"FIX  {relpath}: {n} edit(s)")
     findings, waived = lint_mod.lint_paths(roots)
     for f in findings:
         print(f"LINT {f}")
@@ -104,6 +107,9 @@ def main(argv=None) -> int:
     ap.add_argument("--lint-only", action="store_true")
     ap.add_argument("--selftest", action="store_true",
                     help="also run the seeded mutation suite")
+    ap.add_argument("--fix", action="store_true",
+                    help="rewrite fixable perf-counter findings in place "
+                         "(Stopwatch/wall_clock), then lint the result")
     ap.add_argument("paths", nargs="*", type=Path,
                     help="lint roots (default: src/repro)")
     args = ap.parse_args(argv)
@@ -111,7 +117,7 @@ def main(argv=None) -> int:
     if not args.lint_only:
         problems += run_verify()
     if not args.verify_only:
-        problems += run_lint(args.paths or None)
+        problems += run_lint(args.paths or None, fix=args.fix)
     if args.selftest and not args.lint_only and not args.verify_only:
         problems += run_selftest()
     print("analysis:", "clean" if not problems else f"{problems} problem(s)")

@@ -35,6 +35,7 @@ import dataclasses
 from pathlib import Path
 
 __all__ = ["Finding", "lint_file", "lint_paths", "load_baseline",
+           "fix_perf_counter_source", "fix_paths",
            "DEFAULT_BASELINE", "default_root"]
 
 # files allowed to touch time.perf_counter directly
@@ -187,6 +188,152 @@ _RULES = (
     _check_plan_keys,
     _check_device_transfer,
 )
+
+
+# ---------------------------------------------------------------------------
+# --fix: mechanical rewrites for the perf-counter rule
+# ---------------------------------------------------------------------------
+
+_TIMING_IMPORT = "repro.obs.timing"
+
+
+def _line_starts(src: str) -> list[int]:
+    starts, pos = [0], 0
+    for line in src.splitlines(keepends=True):
+        pos += len(line)
+        starts.append(pos)
+    return starts
+
+
+def fix_perf_counter_source(src: str) -> tuple[str, int]:
+    """Rewrite ``time.perf_counter`` idioms to their ``repro.obs.timing``
+    equivalents; returns ``(new_source, edits)``.
+
+    Three patterns, matched on the AST (so strings/comments are safe) and
+    rewritten by exact source position:
+
+    * ``t0 = time.perf_counter()``      -> ``t0 = Stopwatch()``
+    * ``time.perf_counter() - t0``      -> ``t0.elapsed()``  (paired names)
+    * any other bare call               -> ``wall_clock()``
+
+    plus removal of ``perf_counter`` from ``from time import ...`` lines and
+    insertion of the needed ``from repro.obs.timing import ...``.  Anything
+    fancier (the callable passed as a clock default, calls with arguments)
+    is left alone and stays a lint finding.  Running the fixer on its own
+    output is a no-op: the rewritten source contains no matchable pattern.
+    """
+    tree = ast.parse(src)
+    edits: list[tuple[int, int, int, int, str]] = []
+    watches: set[str] = set()
+    handled: set[int] = set()
+    need: set[str] = set()
+
+    def span(node):
+        return (node.lineno, node.col_offset,
+                node.end_lineno, node.end_col_offset)
+
+    def bare_call(node):
+        return (isinstance(node, ast.Call) and _is_perf_counter(node.func)
+                and not node.args and not node.keywords)
+
+    # names read back as `time.perf_counter() - NAME` are stopwatch starts;
+    # an assignment never subtracted from is just a timestamp (wall_clock)
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.BinOp) and isinstance(node.op, ast.Sub)
+                and bare_call(node.left)
+                and isinstance(node.right, ast.Name)):
+            watches.add(node.right.id)
+    # stopwatch starts: NAME = time.perf_counter()
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and node.targets[0].id in watches
+                and bare_call(node.value)):
+            handled.add(id(node.value))
+            edits.append(span(node.value) + ("Stopwatch()",))
+            need.add("Stopwatch")
+    # stopwatch reads: time.perf_counter() - NAME
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.BinOp) and isinstance(node.op, ast.Sub)
+                and bare_call(node.left)
+                and isinstance(node.right, ast.Name)
+                and node.right.id in watches):
+            handled.add(id(node.left))
+            edits.append(span(node) + (f"{node.right.id}.elapsed()",))
+    # everything else that is a plain zero-arg call
+    for node in ast.walk(tree):
+        if bare_call(node) and id(node) not in handled:
+            edits.append(span(node) + ("wall_clock()",))
+            need.add("wall_clock")
+    # import surgery: drop perf_counter from `from time import ...`
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module == "time":
+            keep = [a for a in node.names if a.name != "perf_counter"]
+            if len(keep) == len(node.names):
+                continue
+            repl = ("from time import " + ", ".join(
+                a.name + (f" as {a.asname}" if a.asname else "")
+                for a in keep)) if keep else ""
+            edits.append(span(node) + (repl,))
+
+    if not edits:
+        return src, 0
+
+    # the timing import the rewrites rely on (skip names already imported)
+    for node in tree.body:
+        if (isinstance(node, ast.ImportFrom)
+                and node.module and node.module.endswith("obs.timing")):
+            need -= {a.asname or a.name for a in node.names}
+    n_edits = len(edits)
+    starts = _line_starts(src)
+    out = src
+    dropped_lines: list[int] = []
+    for l0, c0, l1, c1, repl in sorted(edits, reverse=True):
+        lo, hi = starts[l0 - 1] + c0, starts[l1 - 1] + c1
+        if repl == "" and c0 == 0 and out[hi:hi + 1] == "\n":
+            hi += 1  # deleting a whole import line takes its newline along
+            dropped_lines.append(l0)
+        out = out[:lo] + repl + out[hi:]
+    if need:
+        line = f"from {_TIMING_IMPORT} import " + ", ".join(sorted(need))
+        # insert after the last top-level import (they all precede code in
+        # this tree), else after the module docstring / at the top
+        anchor = 0
+        for node in tree.body:
+            if isinstance(node, (ast.Import, ast.ImportFrom)):
+                anchor = max(anchor, node.end_lineno)
+            elif (anchor == 0 and isinstance(node, ast.Expr)
+                    and isinstance(node.value, ast.Constant)
+                    and isinstance(node.value.value, str)):
+                anchor = node.end_lineno
+        anchor -= sum(1 for ln in dropped_lines if ln <= anchor)
+        lines = out.splitlines(keepends=True)
+        lines.insert(anchor, line + "\n")
+        out = "".join(lines)
+        n_edits += 1
+    return out, n_edits
+
+
+def fix_paths(roots: list[Path] | None = None,
+              *, baseline: set[str] | None = None) -> list[tuple[str, int]]:
+    """Apply :func:`fix_perf_counter_source` to every file with an unwaived
+    ``perf-counter`` finding; returns ``[(relpath, edits), ...]``."""
+    roots = [default_root()] if roots is None else [Path(r) for r in roots]
+    baseline = load_baseline() if baseline is None else baseline
+    done: list[tuple[str, int]] = []
+    for root in roots:
+        files = [root] if root.is_file() else sorted(root.rglob("*.py"))
+        base = root.parent if root.is_file() else root
+        for f in files:
+            hits = [x for x in lint_file(f, base)
+                    if x.rule == "perf-counter" and x.key not in baseline]
+            if not hits:
+                continue
+            new, n = fix_perf_counter_source(f.read_text())
+            if n:
+                f.write_text(new)
+                done.append((hits[0].path, n))
+    return done
 
 
 def default_root() -> Path:

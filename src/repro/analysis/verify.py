@@ -45,6 +45,8 @@ __all__ = [
     "verify_task_mask",
     "verify_relayout_plan",
     "verify_norm_table",
+    "verify_add_plan",
+    "verify_compact_plan",
     "verify_value",
     "PlanError",
     "Violation",
@@ -747,6 +749,200 @@ def verify_norm_table(payload: dict) -> list[Violation]:
 
 
 # ---------------------------------------------------------------------------
+# structure-union add and compaction verification
+# ---------------------------------------------------------------------------
+
+
+def verify_add_plan(payload: dict) -> list[Violation]:
+    """Verify a :class:`repro.dist.collectives.AddExecutable` plan.
+
+    Re-proves the union structure (A wins ownership on overlap, so A blocks
+    never move; B-only blocks stay put), both operands' exchange rounds, and
+    that every ``(idx, val)`` gather pair resolves — in the staged
+    ``[own store | recv per round]`` buffer — to exactly the source block
+    the union position demands, with padding masked to zero weight.
+    """
+    out: list[Violation] = []
+    P = int(payload["nparts"])
+    pos_a = np.asarray(payload["pos_a"], dtype=np.int64)
+    pos_b = np.asarray(payload["pos_b"], dtype=np.int64)
+    from_a = np.asarray(payload["from_a"], dtype=np.int64)
+    from_b = np.asarray(payload["from_b"], dtype=np.int64)
+    c_owner = np.asarray(payload["c_owner"])
+    c_cap = int(payload["c_cap"])
+    nc = c_owner.shape[0]
+
+    inv_a = _check_layout("add:a", payload["a_owner"], payload["a_slot"],
+                          int(payload["a_cap"]), None, P, out)
+    inv_b = _check_layout("add:b", payload["b_owner"], payload["b_slot"],
+                          int(payload["b_cap"]), None, P, out)
+    inv_c = _check_layout("add:c", c_owner, payload["c_slot"], c_cap,
+                          None, P, out)
+    if inv_a is None or inv_b is None or inv_c is None:
+        return out
+
+    a_owner = np.asarray(payload["a_owner"])
+    b_owner = np.asarray(payload["b_owner"])
+    # union positions partition into {A (wins overlap), B-only}; each source
+    # block appears exactly once and ownership is inherited (add is
+    # communication-minimal: only overlap copies of B move)
+    for name, pos, frm, n_src in (("a", pos_a, from_a, a_owner.shape[0]),
+                                  ("b", pos_b, from_b, b_owner.shape[0])):
+        if pos.shape[0] != n_src or (n_src and (
+                (pos < 0) | (pos >= nc)).any()):
+            out.append(Violation(
+                "add-union",
+                f"add: operand {name!r} union positions do not map its "
+                f"{n_src} blocks into the {nc}-block union",
+                dict(operand=name),
+            ))
+            return out
+        back = np.nonzero(frm >= 0)[0]
+        if not np.array_equal(np.sort(frm[back]), np.arange(n_src)):
+            out.append(Violation(
+                "add-union",
+                f"add: operand {name!r} source map does not cover each of "
+                f"its {n_src} blocks exactly once — a block would be "
+                f"dropped or double-counted",
+                dict(operand=name),
+            ))
+    if (c_owner[pos_a] != a_owner).any():
+        i = int(np.nonzero(c_owner[pos_a] != a_owner)[0][0])
+        out.append(Violation(
+            "add-union",
+            f"add: union block {int(pos_a[i])} does not inherit A block "
+            f"{i}'s owner (A wins overlap so A blocks never move); got "
+            f"device {int(c_owner[pos_a[i]])}, A owner {int(a_owner[i])}",
+            dict(block=int(pos_a[i]), a_block=i),
+        ))
+    b_only = from_a[pos_b] < 0
+    if b_only.any() and (c_owner[pos_b[b_only]] != b_owner[b_only]).any():
+        j = int(np.nonzero(b_only & (c_owner[pos_b] != b_owner))[0][0])
+        out.append(Violation(
+            "add-union",
+            f"add: B-only union block {int(pos_b[j])} does not inherit B "
+            f"block {j}'s owner — a block with no overlap partner moved",
+            dict(block=int(pos_b[j]), b_block=j),
+        ))
+
+    _check_rounds("add:a", payload["a_offsets"], payload["a_send"],
+                  payload["a_send_cnt"], inv_a, a_owner, P, out)
+    _check_rounds("add:b", payload["b_offsets"], payload["b_send"],
+                  payload["b_send_cnt"], inv_b, b_owner, P, out)
+    buf_a, _ = _staged_buffer(inv_a, int(payload["a_cap"]),
+                              payload["a_offsets"], payload["a_send"],
+                              payload["a_send_cnt"], P)
+    buf_b, _ = _staged_buffer(inv_b, int(payload["b_cap"]),
+                              payload["b_offsets"], payload["b_send"],
+                              payload["b_send_cnt"], P)
+
+    idx = dict(a=np.asarray(payload["idx_a"]), b=np.asarray(payload["idx_b"]))
+    val = dict(a=np.asarray(payload["val_a"]), b=np.asarray(payload["val_b"]))
+    frm = dict(a=from_a, b=from_b)
+    buf = dict(a=buf_a, b=buf_b)
+    for p in range(P):
+        mine = np.nonzero(c_owner == p)[0]  # ascending == slot order
+        for name in ("a", "b"):
+            for local in range(c_cap):
+                want = int(frm[name][mine[local]]) if local < mine.size else -1
+                v = float(val[name][p, local])
+                if want < 0:
+                    if v != 0.0:
+                        out.append(Violation(
+                            "mask-redirect",
+                            f"add: device {p} output slot {local} has "
+                            f"operand {name!r} weight {v} but no source "
+                            f"block — padding / absent operands must "
+                            f"contribute zeros",
+                            dict(operand=name, device=p, slot=local),
+                        ))
+                    continue
+                i = int(idx[name][p, local])
+                got = int(buf[name][p, i]) if 0 <= i < buf[name].shape[1] \
+                    else -1
+                if v != 1.0 or got != want:
+                    delivered = bool((buf[name][p] == want).any())
+                    out.append(Violation(
+                        "operand-mismatch" if delivered
+                        else "use-before-receive",
+                        f"add: device {p} output slot {local} gathers "
+                        f"operand {name!r} buffer row {i} which "
+                        + (f"holds block {got}, not block {want}"
+                           if delivered and got >= 0 else
+                           f"no exchange round ever delivers block {want} "
+                           f"to")
+                        + f" device {p} (weight {v})",
+                        dict(operand=name, device=p, slot=local,
+                             source=want, index=i),
+                    ))
+    return out
+
+
+def verify_compact_plan(payload: dict) -> list[Violation]:
+    """Verify a :func:`repro.dist.collectives._compact_to_kept` gather map.
+
+    Compaction must be communication-free (kept blocks keep their owners,
+    slots close ranks in kept order) and each new slot must gather exactly
+    its kept block's old store slot, with padding masked to zero weight.
+    """
+    out: list[Violation] = []
+    P = int(payload["nparts"])
+    kind = payload.get("label", "compact")
+    a_owner = np.asarray(payload["a_owner"])
+    a_slot = np.asarray(payload["a_slot"])
+    kept = np.asarray(payload["kept"], dtype=np.int64)
+    new_owner = np.asarray(payload["new_owner"])
+    new_cap = int(payload["new_cap"])
+    gidx = np.asarray(payload["gidx"])
+    gval = np.asarray(payload["gval"])
+
+    na = a_owner.shape[0]
+    if kept.size and ((kept < 0) | (kept >= na)).any():
+        i = int(np.nonzero((kept < 0) | (kept >= na))[0][0])
+        out.append(Violation(
+            "owner-map",
+            f"{kind}: kept entry {i} references block {int(kept[i])} "
+            f"outside the {na}-block source structure",
+            dict(kind=kind, pos=i, block=int(kept[i])),
+        ))
+        return out
+    if _check_layout(f"{kind}:src", a_owner, a_slot, int(payload["a_cap"]),
+                     None, P, out) is None:
+        return out
+    if _check_layout(f"{kind}:out", new_owner, payload["new_slot"], new_cap,
+                     a_owner[kept], P, out) is None:
+        return out
+
+    for p in range(P):
+        mine = np.nonzero(new_owner == p)[0]  # ascending == slot order
+        for local in range(new_cap):
+            if local >= mine.size:
+                if float(gval[p, local]) != 0.0:
+                    out.append(Violation(
+                        "mask-redirect",
+                        f"{kind}: device {p} padding slot {local} has "
+                        f"gather weight {float(gval[p, local])} — padding "
+                        f"must contribute zeros",
+                        dict(kind=kind, device=p, slot=local),
+                    ))
+                continue
+            src = int(kept[mine[local]])
+            want = int(a_slot[src])
+            got = int(gidx[p, local])
+            if float(gval[p, local]) != 1.0 or got != want:
+                out.append(Violation(
+                    "operand-mismatch",
+                    f"{kind}: device {p} new slot {local} gathers old "
+                    f"store row {got} (weight {float(gval[p, local])}), "
+                    f"kept block {src} lives in slot {want} — compaction "
+                    f"would materialize the wrong block",
+                    dict(kind=kind, device=p, slot=local, block=src,
+                         got=got, expected=want),
+                ))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # cache-admission dispatcher
 # ---------------------------------------------------------------------------
 
@@ -757,6 +953,10 @@ def verify_payload(payload: dict) -> list[Violation]:
         return verify_relayout_plan(payload)
     if kind == "norm-table":
         return verify_norm_table(payload)
+    if kind == "add":
+        return verify_add_plan(payload)
+    if kind == "compact":
+        return verify_compact_plan(payload)
     return []
 
 

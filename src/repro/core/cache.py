@@ -51,10 +51,13 @@ class SymbolicCache:
         # optional observatory riders (repro.obs): a FlightRecorder dumps a
         # postmortem when plan admission raises PlanError or a driver's
         # divergence trip fires; a MemoryMeter accounts device-memory
-        # watermarks at the dispatch sites.  Both default off and are read
-        # back with getattr so un-instrumented paths pay nothing.
+        # watermarks at the dispatch sites; a LocalityLedger decomposes each
+        # dispatch's operand reads into locally-owned vs shipped bytes.  All
+        # default off and are read back with getattr so un-instrumented
+        # paths pay nothing.
         self.flight_recorder = None
         self.memory_meter = None
+        self.locality_ledger = None
         self._entries: collections.OrderedDict[Hashable, Any] = (
             collections.OrderedDict()
         )

@@ -538,6 +538,10 @@ class MaskedFusedSpgemmExecutable(FusedSpgemmExecutable):
         self.precision = precision
         self.prune_exchange = prune_exchange
         self.last_exchange: dict | None = None
+        # keep-mask pair (a_keeps, b_keeps) of the most recent pruned call —
+        # the locality ledger reads it to meter only the blocks that shipped
+        # (None when the last call ran the full exchange)
+        self.last_keeps: tuple | None = None
         all_a = tuple(range(len(plan.a_offsets)))
         all_b = tuple(range(len(plan.b_offsets)))
         self._all_keeps = None  # built lazily for the unpruned path
@@ -575,6 +579,7 @@ class MaskedFusedSpgemmExecutable(FusedSpgemmExecutable):
                 plan, keep_task
             )
             self.last_exchange = stats
+            self.last_keeps = (a_keeps, b_keeps)
         else:
             if self._all_keeps is None:
                 self._all_keeps = (
@@ -587,6 +592,7 @@ class MaskedFusedSpgemmExecutable(FusedSpgemmExecutable):
             live_a = tuple(range(len(plan.a_offsets)))
             live_b = tuple(range(len(plan.b_offsets)))
             self.last_exchange = None
+            self.last_keeps = None
         program = self._programs.get((live_a, live_b))
         if program is None:
             program = self._build_program(live_a=live_a, live_b=live_b)

@@ -39,6 +39,7 @@ __all__ = [
     "make_spgemm_plan",
     "plan_stats",
     "plan_worker_bytes",
+    "plan_byte_provenance",
     "structure_fingerprint",
     "plan_fetch",
     "local_fetch_index",
@@ -527,6 +528,120 @@ def plan_worker_bytes(plan: SpgemmPlan) -> tuple[np.ndarray, np.ndarray, np.ndar
                     send_actual[src] += cnt[src] * blk
                     recv_padded[dst] += send_pad[d].shape[1] * blk
     return recv_actual, send_actual, recv_padded
+
+
+def plan_byte_provenance(plan: SpgemmPlan) -> dict:
+    """Per-task, per-round provenance of every operand byte a plan touches.
+
+    Extends :func:`plan_worker_bytes` (per-worker exchange totals) down to
+    the level the locality ledger (:mod:`repro.obs.locality`) meters:
+
+    * ``referenced`` / ``local`` / ``shipped`` — per-worker bytes of the
+      *distinct* operand blocks each worker's task list reads, split by
+      whether the block is resident (owned) or fetched.  Counted at fp32
+      itemsize so ``local + shipped == referenced`` holds exactly and, for
+      p2p plans, ``shipped`` equals ``plan_worker_bytes``'s ``recv_actual``
+      bit-for-bit (the planned exchange delivers precisely the distinct
+      remote references).
+    * ``task_local`` — ``[P, t_cap]`` bool, True where *both* operands of a
+      padded task slot are locally owned (padding is False); ``local_tasks``
+      is its per-worker row sum — the locally-satisfied flop count.
+    * ``rounds`` — one record per planned ``ppermute`` round (execution
+      order: A rounds then B rounds) with per-worker actual/padded
+      block counts, for the executed-task-graph analyzer.
+    * ``fetch_a`` / ``fetch_b`` — flat ``(gids, src, dst)`` arrays: global
+      block index, owning worker, fetching worker for every planned remote
+      reference — the per-block movement-lineage feed.
+
+    All quantities are static plan properties; delta-mask pruning and bf16
+    wire halving are applied by the ledger at dispatch time.
+    """
+    P = plan.nparts
+    blk = plan.bs * plan.bs * 4
+    tasks = plan.tasks
+    t_owner = plan.c_owner[tasks.c_idx] if tasks.c_idx.size else np.zeros(0, np.int32)
+    referenced = np.zeros(P, dtype=np.float64)
+    local = np.zeros(P, dtype=np.float64)
+    shipped = np.zeros(P, dtype=np.float64)
+    fetch = {}
+    for name, owner, ref_idx in (
+        ("a", plan.a_owner, tasks.a_idx),
+        ("b", plan.b_owner, tasks.b_idx),
+    ):
+        gids_l, src_l, dst_l = [], [], []
+        for p in range(P):
+            refs = np.unique(ref_idx[t_owner == p]) if ref_idx.size else np.zeros(0, np.int64)
+            own = int((owner[refs] == p).sum()) if refs.size else 0
+            referenced[p] += refs.size * blk
+            local[p] += own * blk
+            shipped[p] += (refs.size - own) * blk
+            remote = refs[owner[refs] != p] if refs.size else refs
+            if remote.size:
+                gids_l.append(remote.astype(np.int64))
+                src_l.append(owner[remote].astype(np.int32))
+                dst_l.append(np.full(remote.size, p, dtype=np.int32))
+        fetch[name] = (
+            np.concatenate(gids_l) if gids_l else np.zeros(0, np.int64),
+            np.concatenate(src_l) if src_l else np.zeros(0, np.int32),
+            np.concatenate(dst_l) if dst_l else np.zeros(0, np.int32),
+        )
+
+    # per-task locality from the global task map (exchange-independent):
+    # a padded slot repeats global task 0, so mask with task_count
+    valid = np.arange(plan.task_c.shape[1])[None, :] < plan.task_count[:, None]
+    if plan.task_gidx is not None and tasks.a_idx.size:
+        ga = tasks.a_idx[plan.task_gidx]
+        gb = tasks.b_idx[plan.task_gidx]
+        me = np.arange(P, dtype=np.int32)[:, None]
+        task_local = (
+            (plan.a_owner[ga] == me) & (plan.b_owner[gb] == me) & valid
+        )
+    else:
+        task_local = np.zeros_like(valid)
+    local_tasks = task_local.sum(axis=1).astype(np.int64)
+
+    # per-round wire records, in execution order (A rounds then B rounds)
+    rounds = []
+    if plan.exchange == "p2p":
+        for name, offs, send_pad, send_cnt in (
+            ("a", plan.a_offsets, plan.a_send, plan.a_send_count),
+            ("b", plan.b_offsets, plan.b_send, plan.b_send_count),
+        ):
+            for r, d in enumerate(offs):
+                cnt = send_cnt[d].astype(np.int64)  # by src; dst = (src+d)%P
+                recv = np.zeros(P, dtype=np.int64)
+                recv[(np.arange(P) + d) % P] = cnt
+                rounds.append(dict(
+                    operand=name, offset=int(d), round=r,
+                    cap=int(send_pad[d].shape[1]),
+                    send_blocks=cnt, recv_blocks=recv,
+                ))
+    else:  # allgather: one logical round replicating both padded stores
+        a_counts = np.bincount(plan.a_owner, minlength=P).astype(np.int64)
+        b_counts = np.bincount(plan.b_owner, minlength=P).astype(np.int64)
+        total = a_counts + b_counts
+        rounds.append(dict(
+            operand="ab", offset=-1, round=0,
+            cap=int(plan.a_cap + plan.b_cap),
+            send_blocks=(P - 1) * total,
+            recv_blocks=int(total.sum()) - total,
+        ))
+    wire_recv, wire_send, wire_padded = plan_worker_bytes(plan)
+    return dict(
+        itemsize=4,
+        block_bytes=blk,
+        referenced=referenced,
+        local=local,
+        shipped=shipped,
+        task_local=task_local,
+        local_tasks=local_tasks,
+        rounds=rounds,
+        fetch_a=fetch["a"],
+        fetch_b=fetch["b"],
+        wire_recv=wire_recv,
+        wire_send=wire_send,
+        wire_padded=wire_padded,
+    )
 
 
 def plan_stats(plan: SpgemmPlan) -> dict:

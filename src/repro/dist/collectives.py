@@ -42,7 +42,6 @@ from repro.core.quadtree import (
 from repro.core.schedule import (
     _owner_slots,
     local_fetch_index,
-    partition_morton,
     plan_fetch,
     structure_fingerprint,
 )
@@ -140,10 +139,10 @@ class AddExecutable:
                 np.nonzero(dst_of == p)[0].astype(np.int64) for p in range(nparts)
             ]
 
-        a_offsets, a_send, _, a_recv = plan_fetch(
+        a_offsets, a_send, a_send_cnt, a_recv = plan_fetch(
             a.owner, a.slot, needs(pos_a), nparts
         )
-        b_offsets, b_send, _, b_recv = plan_fetch(
+        b_offsets, b_send, b_send_cnt, b_recv = plan_fetch(
             b.owner, b.slot, needs(pos_b), nparts
         )
 
@@ -170,6 +169,22 @@ class AddExecutable:
                         b.owner, b.slot, b_offsets, b_send, b_recv, b.cap, gb, p
                     )
                     val_b[p, local] = 1.0
+
+        # host-side plan copy retained for static verification at plan-cache
+        # admission (repro.analysis.verify, kind="add") — the device arrays
+        # are unverifiable post-put
+        self._verify_plan = dict(
+            kind="add", nparts=nparts,
+            a_owner=np.asarray(a.owner), a_slot=np.asarray(a.slot),
+            a_cap=a.cap,
+            b_owner=np.asarray(b.owner), b_slot=np.asarray(b.slot),
+            b_cap=b.cap,
+            pos_a=pos_a, pos_b=pos_b, from_a=from_a, from_b=from_b,
+            c_owner=c_owner, c_slot=c_slot, c_cap=c_cap,
+            a_offsets=a_offsets, a_send=a_send, a_send_cnt=a_send_cnt,
+            b_offsets=b_offsets, b_send=b_send, b_send_cnt=b_send_cnt,
+            idx_a=idx_a, idx_b=idx_b, val_a=val_a, val_b=val_b,
+        )
 
         from repro.core.quadtree import morton_decode
 
@@ -383,7 +398,20 @@ def _compact_to_kept(
         gval[p, : len(s)] = 1.0
 
     key = (kind, _structure_key(a), structure_fingerprint(kept))
-    build = lambda: _CompactExecutable(a, gidx, gval)
+
+    def build():
+        exe = _CompactExecutable(a, gidx, gval)
+        # host-side plan copy for static verification at cache admission
+        # (repro.analysis.verify, kind="compact")
+        exe._verify_plan = dict(
+            kind="compact", label=kind, nparts=a.nparts,
+            a_owner=np.asarray(a.owner), a_slot=np.asarray(a.slot),
+            a_cap=a.cap, kept=np.asarray(kept, dtype=np.int64),
+            new_owner=new_owner, new_slot=new_slot, new_cap=new_cap,
+            gidx=gidx, gval=gval,
+        )
+        return exe
+
     exe = cache.get_or_build(key, build) if cache is not None else build()
     return DistBSMatrix(
         shape=tuple(a.shape) if shape is None else tuple(shape),
@@ -506,18 +534,21 @@ def _relayout_verify_payload(x, src, out_owner, out_slot, out_cap, offsets,
 class TransposeExecutable:
     """Planned resident transpose bound to a mesh.
 
-    The transposed structure's blocks are re-slotted to the owner layout a
-    fresh :func:`~repro.dist.matrix.scatter` of A^T would produce (Morton
-    range partition of the transposed codes), and the blocks that change
-    owner travel via the same planned ``ppermute`` rounds as every other
-    collective — no host gather; block data is transposed in the mapped
-    body on arrival.
+    Every transposed block *inherits its source block's owner* — the cut the
+    operand currently has, uniform Morton or dynamically rebalanced, carries
+    through unchanged.  That makes the transpose communication-free by
+    construction (every gather is local; the planned ``ppermute`` machinery
+    degenerates to zero rounds) and, after a rebalance, keeps the balancer's
+    weighted cut instead of re-slotting back to the uniform Morton partition
+    — which would both pay phantom migration bytes on every transpose and
+    silently undo the migration the balancer just paid for.  Block data is
+    transposed in the mapped body on gather.
     """
 
     def __init__(self, a: DistBSMatrix):
         nparts, mesh = a.nparts, a.mesh
         src = transpose_permutation(a.coords)  # out stack pos -> a stack idx
-        out_owner = partition_morton(a.nnzb, nparts)
+        out_owner = a.owner[src]  # inherit the operand's cut (zero movement)
         out_slot, out_cap, offsets, send, send_cnt, gidx, gval = (
             _relayout_gather_plan(a, out_owner, src)
         )
@@ -558,9 +589,10 @@ def dist_transpose(
 ) -> DistBSMatrix:
     """A^T on the resident store; structure-keyed plan, no host gather.
 
-    The result's owner layout is what scattering A^T fresh would produce, so
-    downstream multiply plans see the canonical Morton placement; blocks
-    transpose in place on their destination device.
+    The result's owner layout inherits A's (each transposed block stays on
+    the device that owns its source block), so the transpose is
+    communication-free and a rebalanced cut survives it; downstream plan
+    keys fingerprint the owner map, so plans re-key automatically.
     """
     tr = tracer_of(cache)
     key = ("transpose", _structure_key(a))

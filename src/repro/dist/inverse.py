@@ -45,6 +45,7 @@ from repro.core.matrix import BSMatrix
 from repro.core.schedule import plan_stats
 from repro.kernels.precision import Precision
 from repro.obs.health import HealthMonitor, HealthPolicy
+from repro.obs.locality import locality_iteration, locality_snapshot
 from repro.obs.log import log_of
 from repro.obs.timing import IterationScope
 from repro.obs.tracer import run_metrics, tracer_of
@@ -365,6 +366,7 @@ def dist_localized_inverse_factorization(
             if rec is not None:
                 rec.mark(cache)
             with IterationScope(cache, it, trc, name="inv_iteration") as scope:
+                lsnap = locality_snapshot(cache)
                 z_op = z  # the iterate the refinement multiplies read
                 mult_err = 0.0
                 norm_fetch_bytes = 0
@@ -515,6 +517,8 @@ def dist_localized_inverse_factorization(
                     imbalance=imb,
                     imbalance_after=imb_after,
                     migrated_bytes=migrated,
+                    **locality_iteration(cache, scope, lsnap,
+                                         iteration=it, driver="inverse"),
                 )
                 per_iter.append(row)
                 if lb is not None and load is not None:

@@ -241,6 +241,35 @@ def _note_dispatch_memory(cache, plan, precision, c) -> None:
     mm.note_matrix(c, "store", cache=cache)
 
 
+def _note_dispatch_locality(
+    cache, tr, plan, precision, a, b, *, task_on=None, exe=None
+) -> None:
+    """Meter an executed multiply against the installed
+    :class:`~repro.obs.locality.LocalityLedger` (no-op when none is
+    installed, costing one getattr): static local/shipped residency split,
+    wire bytes with delta-mask pruning and the wire itemsize applied, and
+    per-block movement lineage keyed by the operands' Morton codes.
+    Independent of the tracer — the ledger meters even with tracing off —
+    but feeds the locality counters when a tracer listens."""
+    lld = getattr(cache, "locality_ledger", None) if cache is not None else None
+    if lld is None:
+        return
+    wire = 2 if getattr(precision, "mode", "fp32") != "fp32" else 4
+    out = lld.note_dispatch(
+        plan,
+        wire_itemsize=wire,
+        task_on=task_on,
+        keeps=getattr(exe, "last_keeps", None),
+        a_codes=a.codes(),
+        b_codes=b.codes(),
+    )
+    if tr.enabled:
+        tr.counter("local_bytes").add(out["local_bytes"])
+        tr.counter("shipped_bytes").add(out["shipped_bytes"])
+        tr.counter("wire_recv_bytes").add(out["wire_recv_bytes"])
+        tr.counter("local_flops").add(out["local_flops"])
+
+
 def _check_operands(a: DistBSMatrix, b: DistBSMatrix) -> None:
     assert a.mesh is b.mesh or list(a.mesh.devices.flat) == list(
         b.mesh.devices.flat
@@ -424,6 +453,7 @@ def dist_multiply(
         mesh=a.mesh,
     )
     _note_dispatch_memory(cache, plan, precision, c)
+    _note_dispatch_locality(cache, tr, plan, precision, a, b, exe=exe)
     return c
 
 
@@ -648,6 +678,9 @@ def _dist_spamm_impl(
             mesh=a.mesh,
         )
         _note_dispatch_memory(cache, plan, precision, c)
+        _note_dispatch_locality(
+            cache, tr, plan, precision, a, b, task_on=task_on, exe=exe
+        )
         return c, err
 
     assert method == "replan", method
@@ -717,4 +750,5 @@ def _dist_spamm_impl(
         mesh=a.mesh,
     )
     _note_dispatch_memory(cache, plan, precision, c)
+    _note_dispatch_locality(cache, tr, plan, precision, a, b, exe=exe)
     return c, err

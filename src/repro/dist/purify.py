@@ -28,6 +28,7 @@ from repro.core.purify import PurifyStats, Sp2Monitor, sp2_init_coeffs, sp2_shou
 from repro.kernels.precision import Precision
 from repro.core.schedule import SpgemmPlan, plan_stats
 from repro.obs.health import HealthMonitor, HealthPolicy
+from repro.obs.locality import locality_iteration, locality_snapshot
 from repro.obs.log import log_of
 from repro.obs.timing import IterationScope
 from repro.obs.tracer import run_metrics, tracer_of
@@ -214,6 +215,7 @@ def dist_sp2_purify(
             if rec is not None:
                 rec.mark(cache)  # postmortem deltas cover the last iteration
             with IterationScope(cache, it, trc, name="sp2_iteration") as scope:
+                lsnap = locality_snapshot(cache)
                 x_op = x  # multiply operand: measured weights refer to it
                 if spamm_tau > 0:
                     x2, mult_err = dist_spamm(
@@ -334,6 +336,8 @@ def dist_sp2_purify(
                     imbalance=imb,
                     imbalance_after=imb_after,
                     migrated_bytes=migrated,
+                    **locality_iteration(cache, scope, lsnap,
+                                         iteration=it, driver="sp2"),
                 )
                 per_iter.append(row)
                 if lb is not None and load is not None:

@@ -36,6 +36,20 @@ The **runtime health observatory** (this PR's online half):
 * :mod:`repro.obs.regress` — the benchmark trajectory store
   (``BENCH_HISTORY.jsonl``) and ``python -m repro.obs.regress --check``
   regression gate.
+
+The **locality & task-graph analytics** layer:
+
+* :mod:`repro.obs.locality` — :class:`LocalityLedger`, riding on the plan
+  cache like the tracer (:func:`ledger_of`): per-dispatch decomposition of
+  operand reads into locally-owned vs shipped bytes, wire metering with
+  delta-mask pruning and bf16 halving applied, per-block movement lineage,
+  and the per-iteration driver emission pair
+  (:func:`locality_snapshot` / :func:`locality_iteration`).
+* :mod:`repro.obs.taskgraph` — executed-task-graph analytics over a plan's
+  index arrays: critical path, per-worker slack, and what-if projections
+  (:func:`analyze_plan`, :func:`whatif_rebalanced`,
+  :func:`project_seconds`); ``python -m repro.obs.report --locality``
+  renders the benchmark output.
 """
 
 from .export import chrome_trace_events, validate_chrome_trace, write_chrome_trace
@@ -50,12 +64,28 @@ from .log import (
     load_events,
     log_of,
 )
+from .locality import (
+    LOCALITY_ITER_KEYS,
+    LocalityLedger,
+    ledger_of,
+    locality_iteration,
+    locality_snapshot,
+    plan_provenance,
+)
 from .memory import MemoryMeter, jax_memory_stats, meter_of, plan_memory_bytes
 from .report import (
+    locality_from_file,
+    locality_table,
     memory_from_file,
     utilization_from_file,
     utilization_table,
     worker_utilization,
+)
+from .taskgraph import (
+    TaskGraphAnalysis,
+    analyze_plan,
+    project_seconds,
+    whatif_rebalanced,
 )
 from .timing import SHARED_ITER_KEYS, IterationScope, timed_into
 from .tracer import (
@@ -103,4 +133,16 @@ __all__ = [
     "HealthPolicy",
     "HealthAlert",
     "HealthMonitor",
+    "LocalityLedger",
+    "LOCALITY_ITER_KEYS",
+    "ledger_of",
+    "plan_provenance",
+    "locality_snapshot",
+    "locality_iteration",
+    "locality_table",
+    "locality_from_file",
+    "TaskGraphAnalysis",
+    "analyze_plan",
+    "whatif_rebalanced",
+    "project_seconds",
 ]

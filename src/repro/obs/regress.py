@@ -88,6 +88,21 @@ TOLERANCES: dict[str, dict[str, MetricSpec]] = {
         "bf16_fro_err": MetricSpec("lower", rel_tol=0.5),
         "within_bounds": MetricSpec("higher", rel_tol=0.0, abs_tol=0.0),
     },
+    "locality": {
+        # locality fractions are structural (placement + plan), not
+        # wall-clock: regressions here mean a planning/placement change
+        # started moving bytes it didn't need to
+        "locality_flops_static": MetricSpec("higher", rel_tol=0.25),
+        "locality_flops_rebalanced": MetricSpec("higher", rel_tol=0.25),
+        "locality_bytes_rebalanced": MetricSpec("higher", rel_tol=0.25),
+        # rebalanced must beat static on the skewed layout (the bench
+        # asserts > 1.0; history-gate drift beyond 25% is a regression)
+        "rebalanced_locality_gain": MetricSpec("higher", rel_tol=0.25),
+        "wire_mb_rebalanced": MetricSpec("lower", rel_tol=0.5),
+        # what-if critical-path ratio (rebalanced cut / executed plan):
+        # lower is better, and it is a pure re-plan property
+        "critical_path_ratio": MetricSpec("lower", rel_tol=0.25),
+    },
 }
 
 

@@ -12,6 +12,14 @@ and across a run the timeline number is the duration-weighted aggregate.
 Render with :func:`utilization_table`, or from a trace file::
 
     python -m repro.obs.report trace_sqrt_inv.json
+
+The locality/task-graph side (``benchmarks/locality.py`` output)::
+
+    python -m repro.obs.report --locality [BENCH_locality.json]
+
+renders, per structure: static vs rebalanced locality fractions, the
+per-worker locality table, the most-moved blocks, and the critical-path
+breakdown with its what-if projections.
 """
 
 from __future__ import annotations
@@ -28,6 +36,8 @@ __all__ = [
     "utilization_from_file",
     "memory_from_file",
     "utilization_table",
+    "locality_table",
+    "locality_from_file",
 ]
 
 
@@ -179,12 +189,94 @@ def utilization_table(util: dict, memory: list[float] | None = None) -> str:
     return "\n".join(lines)
 
 
+def _locality_mode_line(mode: str, s: dict) -> str:
+    return (f"  [{mode:10s}] locality {s['locality_flops'] * 100:5.1f}% of "
+            f"flops / {s['locality_bytes'] * 100:5.1f}% of bytes   "
+            f"shipped {s['shipped_bytes'] / 1e6:7.2f} MB   "
+            f"wire {s['wire_recv_bytes'] / 1e6:7.2f} MB   "
+            f"({s['dispatches']} dispatches)")
+
+
+def locality_table(data: dict) -> str:
+    """Human-readable render of one ``BENCH_locality.json`` payload.
+
+    Per structure: static vs rebalanced locality fractions, the rebalanced
+    run's per-worker locality split, its most-moved blocks, and the
+    task-graph critical-path breakdown with what-if projections.
+    """
+    meta = data.get("meta", {})
+    lines = [
+        f"locality report: n={meta.get('n')} bs={meta.get('bs')} "
+        f"workers={meta.get('workers')} "
+        f"initial layout: {meta.get('initial_layout', '?')}"
+    ]
+    for name, row in sorted(data["locality"].items()):
+        lines.append(f"\n== {name} ==")
+        for mode in ("static", "rebalanced"):
+            if mode in row:
+                lines.append(_locality_mode_line(mode, row[mode]))
+        detail = row.get("rebalanced") or row.get("static")
+        if detail and detail.get("per_worker"):
+            lines.append(
+                f"  {'worker':>8}  {'local MB':>9}  {'shipped MB':>10}  "
+                f"{'wire MB':>8}  {'loc flops':>9}  {'loc bytes':>9}")
+            for w in detail["per_worker"]:
+                lines.append(
+                    f"  {w['worker']:>8}  {w['local_bytes'] / 1e6:>9.2f}  "
+                    f"{w['shipped_bytes'] / 1e6:>10.2f}  "
+                    f"{w['wire_recv_bytes'] / 1e6:>8.2f}  "
+                    f"{w['locality_flops'] * 100:>8.1f}%  "
+                    f"{w['locality_bytes'] * 100:>8.1f}%")
+        if detail and detail.get("moved_blocks"):
+            lines.append("  most-moved blocks (operand, Morton code, "
+                         "fetches, owners -> fetchers):")
+            for b in detail["moved_blocks"]:
+                lines.append(
+                    f"    {b['operand']}  code={b['code']:<8d} "
+                    f"fetched {b['fetches']:>4d}x   "
+                    f"owners {b['owners']} -> workers {b['fetchers']}")
+        tg = row.get("taskgraph")
+        if tg:
+            before, after = tg["before"], tg.get("after")
+            lines.append(
+                f"  critical path (task-equivalents): "
+                f"{before['critical_path']:.1f} = exchange "
+                f"{before['cp_exchange']:.1f} + compute "
+                f"{before['cp_compute']:.1f}   max busy "
+                f"{max(before['busy']):.1f}   mean slack "
+                f"{sum(before['slack']) / max(len(before['slack']), 1):.1f}")
+            lines.append(
+                f"  what-if: perfect balance "
+                f"{before['whatif_perfect_balance']:.1f}   zero exchange "
+                f"{before['whatif_zero_exchange']:.1f}"
+                + (f"   rebalanced cut {after['critical_path']:.1f} "
+                   f"(predicted gain {tg['predicted_gain']:.2f}x)"
+                   if after else ""))
+            rounds = sorted(before.get("rounds", []),
+                            key=lambda r: -r["max_cost"])[:4]
+            if rounds:
+                lines.append("  heaviest exchange rounds: " + "   ".join(
+                    f"{r['operand']}@+{r['offset']} {r['max_cost']:.1f}"
+                    for r in rounds))
+    return "\n".join(lines)
+
+
+def locality_from_file(path: str) -> str:
+    with open(path) as fh:
+        return locality_table(json.load(fh))
+
+
 def main(argv=None) -> int:
     import sys
 
     argv = sys.argv[1:] if argv is None else argv
+    if argv and argv[0] == "--locality":
+        path = argv[1] if len(argv) > 1 else "BENCH_locality.json"
+        print(locality_from_file(path))
+        return 0
     if len(argv) != 1:
-        print("usage: python -m repro.obs.report <chrome-trace.json>")
+        print("usage: python -m repro.obs.report <chrome-trace.json> | "
+              "--locality [BENCH_locality.json]")
         return 2
     util = utilization_from_file(argv[0])
     print(utilization_table(util, memory=memory_from_file(argv[0])))

@@ -13,19 +13,33 @@ import textwrap
 
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from helpers import banded_matrix, random_block_matrix
 
 from repro.analysis import PlanError, Violation
-from repro.analysis.lint import Finding, lint_paths, load_baseline
+from repro.analysis.lint import (
+    Finding,
+    fix_perf_counter_source,
+    lint_paths,
+    load_baseline,
+)
 from repro.analysis.mutate import CORRUPTIONS, NotApplicable, clone_plan
 from repro.analysis.verify import (
+    verify_add_plan,
+    verify_compact_plan,
+    verify_payload,
     verify_spgemm_plan,
     verify_task_mask,
     verify_value,
 )
 from repro.core.cache import SymbolicCache
-from repro.core.schedule import make_spgemm_plan
+from repro.core.schedule import (
+    make_spgemm_plan,
+    plan_byte_provenance,
+    plan_worker_bytes,
+)
 
 BS = 16
 
@@ -342,3 +356,193 @@ def test_verify_always_on_real_mesh_executables():
     assert out["violations"] == 0
     assert out["verify_s"] > 0.0
     assert out["hits"] >= 1
+
+# ---------------------------------------------------------------------------
+# property-based plan fuzzing: random structures x random owner pins
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 10**6),
+    nparts=st.sampled_from([1, 2, 3, 4, 8]),
+    density=st.floats(0.05, 0.6),
+    pin=st.sampled_from(["morton", "skew", "random"]),
+    exchange=st.sampled_from(["p2p", "allgather"]),
+)
+def test_fuzz_pinned_plans_verify_and_ledger_matches_worker_bytes(
+        seed, nparts, density, pin, exchange):
+    m = random_block_matrix(128, BS, density, seed=seed)
+    nb = m.coords.shape[0]
+    if pin == "skew":
+        owner = np.zeros(nb, np.int32)
+    elif pin == "random":
+        owner = np.random.default_rng(seed).integers(
+            0, nparts, nb).astype(np.int32)
+    else:
+        owner = None
+    plan = make_spgemm_plan(m.coords, m.coords, nparts, BS,
+                            exchange=exchange, a_owner=owner, b_owner=owner)
+    assert verify_spgemm_plan(plan) == []
+    # the ledger's per-task byte decomposition conserves and sums to the
+    # load balancer's plan_worker_bytes totals exactly
+    prov = plan_byte_provenance(plan)
+    assert np.array_equal(prov["local"] + prov["shipped"], prov["referenced"])
+    recv, send, _ = plan_worker_bytes(plan)
+    assert np.array_equal(prov["wire_recv"], recv)
+    assert np.array_equal(prov["wire_send"], send)
+    if exchange == "p2p":
+        assert np.array_equal(prov["shipped"], recv)
+    assert prov["task_local"].shape == (nparts, plan.task_gidx.shape[1])
+    assert np.array_equal(prov["task_local"].sum(axis=1), prov["local_tasks"])
+
+
+# ---------------------------------------------------------------------------
+# add / compact verifiers
+# ---------------------------------------------------------------------------
+
+
+def _add_payload():
+    """A real AddExecutable's host-side plan copy (single-device mesh)."""
+    from repro.core import BSMatrix
+    from repro.core.distributed import make_worker_mesh
+    from repro.dist import scatter
+    from repro.dist.collectives import AddExecutable
+
+    rng = np.random.default_rng(0)
+    n, bs = 32, 8
+    da = np.zeros((n, n), np.float32)
+    da[:16, :16] = rng.standard_normal((16, 16))
+    db = np.zeros((n, n), np.float32)
+    db[8:24, 8:24] = rng.standard_normal((16, 16))
+    mesh = make_worker_mesh(1)
+    exe = AddExecutable(scatter(BSMatrix.from_dense(da, bs), mesh),
+                        scatter(BSMatrix.from_dense(db, bs), mesh))
+    return exe._verify_plan
+
+
+def test_add_plan_clean_and_dispatched():
+    payload = _add_payload()
+    assert payload["kind"] == "add"
+    assert verify_add_plan(payload) == []
+    assert verify_payload(payload) == []  # kind-dispatch reaches it
+
+
+def test_add_plan_catches_union_and_gather_corruption():
+    payload = _add_payload()
+    live = np.nonzero(payload["from_a"] >= 0)[0]
+    assert live.size >= 2
+
+    # duplicate a source: one A block dropped, another double-counted
+    bad = dict(payload)
+    bad["from_a"] = payload["from_a"].copy()
+    bad["from_a"][live[1]] = bad["from_a"][live[0]]
+    assert "add-union" in {v.check for v in verify_add_plan(bad)}
+
+    # zero the gather weight of a live operand: contribution silently lost
+    bad = dict(payload)
+    bad["val_a"] = payload["val_a"].copy()
+    p, slot = np.argwhere(bad["val_a"] == 1.0)[0]
+    bad["val_a"][p, slot] = 0.0
+    assert "operand-mismatch" in {v.check for v in verify_add_plan(bad)}
+
+    # weight on a padding slot: garbage accumulated into a live block
+    bad = dict(payload)
+    bad["val_b"] = payload["val_b"].copy()
+    pad = np.argwhere(payload["val_b"] == 0.0)
+    if pad.size:
+        bad["val_b"][pad[0][0], pad[0][1]] = 1.0
+        assert "mask-redirect" in {v.check for v in verify_add_plan(bad)}
+
+
+def _compact_payload():
+    a_owner = np.array([0, 1, 0, 1], np.int32)
+    a_slot = np.array([0, 0, 1, 1], np.int32)
+    kept = np.array([0, 3], np.int64)
+    return dict(
+        kind="compact", label="truncate", nparts=2,
+        a_owner=a_owner, a_slot=a_slot, a_cap=2, kept=kept,
+        new_owner=a_owner[kept], new_slot=np.array([0, 0], np.int32),
+        new_cap=1,
+        gidx=np.array([[0], [1]], np.int32),
+        gval=np.ones((2, 1), np.float32),
+    )
+
+
+def test_compact_plan_clean_and_dispatched():
+    payload = _compact_payload()
+    assert verify_compact_plan(payload) == []
+    assert verify_payload(payload) == []
+
+
+def test_compact_plan_catches_corruption():
+    # a kept block changing owners: compaction must be communication-free
+    bad = _compact_payload()
+    bad["new_owner"] = np.array([1, 0], np.int32)
+    bad["new_slot"] = np.array([0, 0], np.int32)
+    assert "owner-fingerprint" in {v.check for v in verify_compact_plan(bad)}
+
+    # gather aimed at the wrong source slot
+    bad = _compact_payload()
+    bad["gidx"] = np.array([[1], [1]], np.int32)
+    assert "operand-mismatch" in {v.check for v in verify_compact_plan(bad)}
+
+    # kept index outside the block stack
+    bad = _compact_payload()
+    bad["kept"] = np.array([0, 9], np.int64)
+    assert "owner-map" in {v.check for v in verify_compact_plan(bad)}
+
+
+# ---------------------------------------------------------------------------
+# lint --fix: mechanical perf-counter rewrites, idempotent
+# ---------------------------------------------------------------------------
+
+_FIXABLE = textwrap.dedent("""\
+    import time
+    from time import perf_counter
+
+    def work(busy):
+        t0 = perf_counter()
+        now = time.perf_counter()
+        busy(now)
+        dt = time.perf_counter() - t0
+        return dt
+""")
+
+
+def test_lint_fix_rewrites_and_is_idempotent(tmp_path):
+    import ast
+
+    fixed, n = fix_perf_counter_source(_FIXABLE)
+    assert n > 0
+    ast.parse(fixed)  # still valid python
+    # paired names become stopwatches, unpaired reads become wall clock
+    assert "t0 = Stopwatch()" in fixed
+    assert "dt = t0.elapsed()" in fixed
+    assert "now = wall_clock()" in fixed
+    assert "perf_counter" not in fixed
+    assert "from repro.obs.timing import Stopwatch, wall_clock" in fixed
+    # idempotent: a second pass finds nothing to do
+    again, n2 = fix_perf_counter_source(fixed)
+    assert n2 == 0 and again == fixed
+    # and the fixed module lints clean of the perf-counter rule
+    mod = tmp_path / "mod.py"
+    mod.write_text(fixed)
+    findings, _ = lint_paths([mod], baseline=set())
+    assert not [f for f in findings if f.rule == "perf-counter"]
+
+
+def test_lint_fix_cli_flag(tmp_path):
+    mod = tmp_path / "mod.py"
+    mod.write_text(_FIXABLE)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--lint-only", "--fix",
+         str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "FIX" in proc.stdout, proc.stdout + proc.stderr
+    fixed = mod.read_text()
+    assert "perf_counter" not in fixed and "Stopwatch()" in fixed

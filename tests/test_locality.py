@@ -1,0 +1,365 @@
+"""Locality ledger + executed-task-graph analytics.
+
+Accounting invariants first (conservation, pruning monotonicity, critical
+path dominating every worker's busy time), then the SPMD half in a
+4-fake-device subprocess: the ledger is an observer — installing it must
+not move a single bit of the math — and the rebalanced run of a skewed
+layout must measure strictly better locality than the static one.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import types
+
+import numpy as np
+import pytest
+
+from helpers import random_block_matrix
+
+from repro.core.distributed import _exchange_keep_masks
+from repro.core.schedule import (
+    make_spgemm_plan,
+    plan_byte_provenance,
+    plan_worker_bytes,
+)
+from repro.obs import (
+    LOCALITY_ITER_KEYS,
+    LocalityLedger,
+    analyze_plan,
+    ledger_of,
+    locality_iteration,
+    locality_snapshot,
+    locality_table,
+    plan_provenance,
+    project_seconds,
+    whatif_rebalanced,
+)
+
+BS = 16
+
+
+def _plan(nparts=4, exchange="p2p", seed=3, density=0.25, **kw):
+    m = random_block_matrix(256, BS, density, seed=seed)
+    return make_spgemm_plan(m.coords, m.coords, nparts, BS,
+                            exchange=exchange, **kw)
+
+
+# ---------------------------------------------------------------------------
+# static byte provenance: conservation and agreement with plan_worker_bytes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("exchange", ["p2p", "allgather"])
+@pytest.mark.parametrize("nparts", [1, 3, 4])
+def test_provenance_conserves(exchange, nparts):
+    plan = _plan(nparts=nparts, exchange=exchange)
+    prov = plan_byte_provenance(plan)
+    assert np.array_equal(prov["local"] + prov["shipped"], prov["referenced"])
+    recv, send, _ = plan_worker_bytes(plan)
+    assert np.array_equal(prov["wire_recv"], recv)
+    assert np.array_equal(prov["wire_send"], send)
+    if exchange == "p2p":
+        # the planned exchange delivers exactly the distinct remote refs
+        assert np.array_equal(prov["shipped"], recv)
+
+
+def test_provenance_memoized_on_plan():
+    plan = _plan()
+    assert plan_provenance(plan) is plan_provenance(plan)
+
+
+def test_skewed_pin_localizes_owner_only():
+    m = random_block_matrix(256, BS, 0.25, seed=7)
+    skew = np.zeros(m.coords.shape[0], dtype=np.int32)
+    plan = make_spgemm_plan(m.coords, m.coords, 4, BS,
+                            a_owner=skew, b_owner=skew)
+    prov = plan_byte_provenance(plan)
+    # non-owners hold nothing: every byte they reference was shipped
+    assert np.all(prov["local"][1:] == 0.0)
+    assert np.array_equal(prov["shipped"][1:], prov["referenced"][1:])
+    # task_local padding is False and local_tasks is its row sum
+    assert np.array_equal(prov["task_local"].sum(axis=1), prov["local_tasks"])
+
+
+# ---------------------------------------------------------------------------
+# ledger: conservation, delta schema, pruning, wire precision
+# ---------------------------------------------------------------------------
+
+
+def test_ledger_conserves_and_emits_iter_keys():
+    plan = _plan()
+    lld = LocalityLedger()
+    snap = lld.snapshot()
+    out = lld.note_dispatch(plan)
+    assert out["local_bytes"] + out["shipped_bytes"] == out["referenced_bytes"]
+    fields = lld.delta(snap)
+    assert sorted(fields) == sorted(LOCALITY_ITER_KEYS)
+    assert 0.0 <= fields["locality_flops"] <= 1.0
+    assert 0.0 <= fields["locality_bytes"] <= 1.0
+    s = lld.summary()
+    assert s["dispatches"] == 1 and s["nparts"] == plan.nparts
+    for w in s["per_worker"]:
+        assert w["local_bytes"] + w["shipped_bytes"] == w["referenced_bytes"]
+    # summary totals == per-worker sums
+    assert s["referenced_bytes"] == pytest.approx(
+        sum(w["referenced_bytes"] for w in s["per_worker"]))
+
+
+def test_keep_masks_prune_wire_never_local():
+    plan = _plan()
+    rng = np.random.default_rng(0)
+    keep_task = rng.random(plan.tasks.num_tasks) < 0.1
+    a_keeps, b_keeps, _live_a, _live_b, stats = _exchange_keep_masks(
+        plan, keep_task)
+    assert stats["kept_blocks"] < stats["send_blocks"]
+
+    full = LocalityLedger().note_dispatch(plan)
+    pruned = LocalityLedger().note_dispatch(plan, keeps=(a_keeps, b_keeps))
+    # pruning shrinks the wire, never the residency split
+    assert pruned["wire_recv_bytes"] < full["wire_recv_bytes"]
+    assert pruned["wire_send_bytes"] == pruned["wire_recv_bytes"]
+    assert pruned["local_bytes"] == full["local_bytes"]
+    assert pruned["shipped_bytes"] == full["shipped_bytes"]
+    # kept wire is exactly the kept payload blocks
+    assert pruned["wire_send_bytes"] == stats["kept_blocks"] * BS * BS * 4
+
+
+def test_bf16_wire_halves_exactly():
+    plan = _plan()
+    fp32 = LocalityLedger().note_dispatch(plan)
+    bf16 = LocalityLedger().note_dispatch(plan, wire_itemsize=2)
+    assert bf16["wire_recv_bytes"] == fp32["wire_recv_bytes"] / 2
+    assert bf16["wire_send_bytes"] == fp32["wire_send_bytes"] / 2
+    assert bf16["local_bytes"] == fp32["local_bytes"]
+    assert bf16["shipped_bytes"] == fp32["shipped_bytes"]
+
+
+def test_task_mask_scales_flops_not_bytes():
+    plan = _plan()
+    full = LocalityLedger().note_dispatch(plan)
+    t_cap = plan.task_count.max()
+    task_on = np.zeros((plan.nparts, t_cap), dtype=bool)  # everything masked
+    masked = LocalityLedger().note_dispatch(plan, task_on=task_on)
+    assert masked["total_flops"] == 0.0 and masked["local_flops"] == 0.0
+    assert masked["referenced_bytes"] == full["referenced_bytes"]
+
+
+def test_moved_blocks_ranks_refetches():
+    plan = _plan()
+    lld = LocalityLedger(top_k=5)
+    for _ in range(3):
+        lld.note_dispatch(plan)
+    mb = lld.moved_blocks()
+    assert mb, "p2p plan over 4 workers must ship something"
+    assert len(mb) <= 5
+    assert all(mb[i]["fetches"] >= mb[i + 1]["fetches"]
+               for i in range(len(mb) - 1))
+    assert all(r["fetches"] % 3 == 0 for r in mb)  # same plan, 3 dispatches
+
+
+def test_install_refuses_unverified_cache():
+    with pytest.raises(ValueError, match="verified plans"):
+        LocalityLedger().install(types.SimpleNamespace(verify="off"))
+    ok = types.SimpleNamespace(verify="cached-once")
+    lld = LocalityLedger().install(ok)
+    assert ledger_of(ok) is lld
+    assert ledger_of(None) is None
+    assert ledger_of(types.SimpleNamespace()) is None
+
+
+def test_locality_iteration_noop_without_ledger():
+    cache = types.SimpleNamespace()
+    assert locality_snapshot(cache) is None
+    assert locality_iteration(cache, None, None, iteration=0, driver="x") == {}
+
+
+# ---------------------------------------------------------------------------
+# executed-task-graph analytics
+# ---------------------------------------------------------------------------
+
+
+def test_critical_path_dominates_every_worker():
+    plan = _plan()
+    an = analyze_plan(plan)
+    assert (an.slack >= -1e-9).all()
+    assert an.critical_path >= an.busy.max() - 1e-9
+    assert an.critical_path == pytest.approx(an.cp_exchange + an.cp_compute)
+    assert an.cp_compute == float(plan.task_count.max())
+    assert an.whatif_zero_exchange == an.cp_compute
+    assert an.whatif_perfect_balance <= an.critical_path + 1e-9
+    assert len(an.rounds) == len(plan.a_offsets) + len(plan.b_offsets)
+    d = an.as_dict()
+    assert d["units"] == "task-equivalents"
+    json.dumps(d)  # JSON-safe
+
+
+def test_analyze_plan_rejects_bad_task_count():
+    plan = _plan()
+    with pytest.raises(ValueError, match="task_count shape"):
+        analyze_plan(plan, task_count=np.zeros(plan.nparts + 1))
+
+
+def test_whatif_rebalanced_predicts_gain_on_skew():
+    m = random_block_matrix(256, BS, 0.25, seed=5)
+    skew = np.zeros(m.coords.shape[0], dtype=np.int32)
+    plan = make_spgemm_plan(m.coords, m.coords, 4, BS,
+                            a_owner=skew, b_owner=skew)
+    w = whatif_rebalanced(plan, m.coords)
+    assert w["predicted_gain"] > 1.0
+    assert w["after"].critical_path < w["before"].critical_path
+    # the proposed cut spreads the blocks and lands near perfect balance
+    assert len(np.unique(w["a_owner"])) > 1
+    assert w["after"].cp_compute <= 1.5 * w["after"].compute.mean()
+    # the re-plan is analyzable against the ledger too: conservation holds
+    prov = plan_byte_provenance(w["plan"])
+    assert np.array_equal(prov["local"] + prov["shipped"], prov["referenced"])
+
+
+def test_project_seconds_calibrates():
+    an = analyze_plan(_plan())
+    out = project_seconds(an, 2.0)
+    assert out["critical_path_s"] == pytest.approx(2.0)
+    assert out["seconds_per_unit"] == pytest.approx(2.0 / an.critical_path)
+    assert out["perfect_balance_s"] <= out["critical_path_s"] + 1e-9
+    assert out["zero_exchange_s"] <= out["critical_path_s"] + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# report rendering
+# ---------------------------------------------------------------------------
+
+
+def test_locality_table_renders(tmp_path):
+    plan = _plan()
+    lld = LocalityLedger()
+    lld.note_dispatch(plan)
+    an = analyze_plan(plan).as_dict()
+    payload = dict(
+        meta=dict(n=256, bs=BS, workers=4, initial_layout="morton"),
+        locality=dict(random=dict(
+            static=lld.summary(), rebalanced=lld.summary(),
+            taskgraph=dict(before=an, after=an, predicted_gain=1.0))),
+    )
+    text = locality_table(payload)
+    assert "locality report" in text and "== random ==" in text
+    assert "[static" in text and "[rebalanced" in text
+    assert "critical path" in text and "what-if" in text
+    # round-trips through the CLI path
+    p = tmp_path / "BENCH_locality.json"
+    p.write_text(json.dumps(payload))
+    from repro.obs.report import locality_from_file
+    assert locality_from_file(str(p)) == text
+
+
+# ---------------------------------------------------------------------------
+# SPMD invariants (subprocess, 4 fake devices)
+# ---------------------------------------------------------------------------
+
+_SCRIPT = r"""
+import json
+import numpy as np, jax
+from repro.core import BSMatrix
+from repro.core.distributed import make_worker_mesh
+from repro.dist import PlanCache, RebalancePolicy, dist_sp2_purify, scatter
+from repro.obs import LOCALITY_ITER_KEYS, LocalityLedger
+
+assert jax.device_count() == 4, jax.device_count()
+mesh = make_worker_mesh(4)
+out = {}
+
+rng = np.random.default_rng(0)
+n, bs = 64, 8
+hm = 0.2 * rng.standard_normal((n, n)).astype(np.float32)
+F = BSMatrix.from_dense(
+    (hm + hm.T) / 2 + np.diag(np.linspace(-1, 1, n)).astype(np.float32), bs)
+w = np.linalg.eigvalsh(np.asarray(F.to_dense(), np.float64))
+lmin, lmax = float(w.min()) - 0.05, float(w.max()) + 0.05
+nocc = 20
+kw = dict(idem_tol=1e-5, trunc_tau=1e-6, spamm_tau=1e-7, max_iter=40)
+
+# -- ledger off vs on: bit-identical density matrix, rows gain the keys ------
+dF = scatter(F, mesh)
+d0, st0 = dist_sp2_purify(dF, nocc, lmin, lmax, cache=PlanCache(), **kw)
+cache1 = PlanCache()
+lld1 = LocalityLedger().install(cache1)
+d1, st1 = dist_sp2_purify(dF, nocc, lmin, lmax, cache=cache1, **kw)
+out["bit_identical"] = bool(np.array_equal(
+    np.asarray(d0.to_dense()), np.asarray(d1.to_dense())))
+out["off_rows_lack_keys"] = bool(all(
+    not (set(LOCALITY_ITER_KEYS) & set(r)) for r in st0.per_iter))
+out["on_rows_have_keys"] = bool(all(
+    set(LOCALITY_ITER_KEYS) <= set(r) for r in st1.per_iter))
+s1 = lld1.summary()
+out["conserves"] = bool(abs(
+    s1["local_bytes"] + s1["shipped_bytes"] - s1["referenced_bytes"]) < 1e-6)
+out["dispatches"] = s1["dispatches"]
+out["fracs"] = [s1["locality_flops"], s1["locality_bytes"]]
+out["row_fracs_sane"] = bool(all(
+    0.0 <= r["locality_flops"] <= 1.0 and 0.0 <= r["locality_bytes"] <= 1.0
+    for r in st1.per_iter))
+
+# -- skewed layout: rebalanced run measures strictly better locality ---------
+skew = np.zeros(F.nnzb, dtype=np.int32)
+
+def run(policy):
+    cache = PlanCache()
+    lld = LocalityLedger().install(cache)
+    d, _st = dist_sp2_purify(scatter(F, mesh, owner=skew), nocc, lmin, lmax,
+                             cache=cache, rebalance=policy, **kw)
+    return d, lld.summary()
+
+ds, stat = run(None)
+dr, reb = run(RebalancePolicy())
+out["skew_bit_identical"] = bool(np.array_equal(
+    np.asarray(d0.to_dense()), np.asarray(dr.to_dense())))
+out["locality_flops"] = [stat["locality_flops"], reb["locality_flops"]]
+out["locality_bytes"] = [stat["locality_bytes"], reb["locality_bytes"]]
+out["moved"] = len(reb["moved_blocks"])
+
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def locality_results():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _SCRIPT],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=1200,
+    )
+    assert proc.returncode == 0, proc.stderr
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    return json.loads(line[len("RESULT "):])
+
+
+def test_ledger_off_is_bit_identical(locality_results):
+    assert locality_results["bit_identical"]
+    assert locality_results["skew_bit_identical"]
+
+
+def test_rows_gain_locality_keys_only_with_ledger(locality_results):
+    assert locality_results["off_rows_lack_keys"]
+    assert locality_results["on_rows_have_keys"]
+    assert locality_results["row_fracs_sane"]
+
+
+def test_real_run_conserves(locality_results):
+    assert locality_results["conserves"]
+    assert locality_results["dispatches"] > 0
+    lf, lb = locality_results["fracs"]
+    assert 0.0 <= lf <= 1.0 and 0.0 <= lb <= 1.0
+
+
+def test_rebalanced_run_measures_better_locality(locality_results):
+    stat, reb = locality_results["locality_flops"]
+    assert reb > stat
+    bstat, breb = locality_results["locality_bytes"]
+    assert breb > bstat
+    assert locality_results["moved"] > 0
